@@ -1,0 +1,120 @@
+"""Shared harness for the paper-reproduction benchmarks (Sec. VII setup).
+
+Provides: cached pre-training constants, the Sec.-VII EdgeSystem, and the
+13-algorithm suite (Gen-C/E/D/O + {PM,FA,PR}-{C,E,D}-opt and -fix).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import EdgeSystem, MLProblemConstants, make_rule
+from repro.core.convergence import c_m
+from repro.core.cost import energy_cost, time_cost
+from repro.data.synthetic import mnist_like
+from repro.models import mlp
+from repro.opt import (ParamOptProblem, fa_varmap, identity_varmap, pm_varmap,
+                       pr_varmap, solve_param_opt)
+
+RESULTS = os.environ.get("REPRO_RESULTS", "results")
+CONST_PATH = os.path.join(RESULTS, "paper_constants.json")
+
+# Sec.-VII step-size parameters
+GAMMAS = {"C": dict(gamma=0.01), "E": dict(gamma=0.02, rho=0.9995),
+          "D": dict(gamma=0.02, rho=600.0)}
+I_N = 6000.0  # samples per worker (60k over N=10)
+
+
+def get_constants(force: bool = False) -> MLProblemConstants:
+    os.makedirs(RESULTS, exist_ok=True)
+    if os.path.exists(CONST_PATH) and not force:
+        d = json.load(open(CONST_PATH))
+    else:
+        import jax
+        X, y = mnist_like()
+        d = mlp.estimate_constants(X, y, jax.random.PRNGKey(0))
+        json.dump(d, open(CONST_PATH, "w"), indent=2)
+    return MLProblemConstants(L=d["L"], sigma=d["sigma"], G=d["G"],
+                              f_gap=d["f_gap"], N=10)
+
+
+def paper_system(**kw) -> EdgeSystem:
+    return EdgeSystem.paper_sec_vii(dim=mlp.PARAM_DIM, **kw)
+
+
+def _fixed_eval(prob: ParamOptProblem, Kn_val: float, B: int,
+                max_k0: int = 200_000) -> Dict:
+    """-fix baselines: parameters preset, K0 = smallest meeting C_max."""
+    Kn = np.full(10, max(1, int(round(Kn_val))), dtype=np.int64)
+    K0, ok = 1, False
+    while K0 <= max_k0:
+        ev = prob.evaluate(K0, Kn, B, None)
+        if ev["C"] <= prob.C_max:
+            ok = ev["T"] <= prob.T_max
+            break
+        if ev["T"] > prob.T_max:
+            break
+        K0 = int(math.ceil(K0 * 1.25))
+    ev = prob.evaluate(K0, Kn, B, None)
+    return {"K0": K0, "Kn": int(Kn[0]), "B": B, "E": ev["E"], "T": ev["T"],
+            "C": ev["C"], "feasible": bool(ok), "gamma": prob.gamma}
+
+
+def run_algorithm(name: str, sys_: EdgeSystem, consts, T_max: float,
+                  C_max: float) -> Dict:
+    """name: e.g. 'Gen-C', 'Gen-O', 'PM-E-opt', 'FA-D-fix', 'PR-C-opt'."""
+    parts = name.split("-")
+    t0 = time.time()
+    if parts[0] == "Gen":
+        if parts[1] == "O":
+            prob = ParamOptProblem(sys=sys_, consts=consts, T_max=T_max,
+                                   C_max=C_max, m="J")
+        else:
+            prob = ParamOptProblem(sys=sys_, consts=consts, T_max=T_max,
+                                   C_max=C_max, m=parts[1],
+                                   **GAMMAS[parts[1]])
+        r = solve_param_opt(prob)
+        return {"name": name, "K0": r.K0, "Kn": int(r.Kn[0]), "B": r.B,
+                "gamma": r.gamma, "E": r.E, "T": r.T, "C": r.C,
+                "feasible": bool(r.feasible), "dt": time.time() - t0}
+    algo, m, mode = parts
+    we = (m == "E")
+    vm = {"PM": lambda: pm_varmap(10, with_extra=we),
+          "FA": lambda: fa_varmap(10, [I_N] * 10, with_extra=we),
+          "PR": lambda: pr_varmap(10, with_extra=we)}[algo]()
+    prob = ParamOptProblem(sys=sys_, consts=consts, T_max=T_max, C_max=C_max,
+                           m=m, vmap=vm, **GAMMAS[m])
+    if mode == "opt":
+        r = solve_param_opt(prob)
+        return {"name": name, "K0": r.K0, "Kn": int(r.Kn[0]), "B": r.B,
+                "gamma": r.gamma, "E": r.E, "T": r.T, "C": r.C,
+                "feasible": bool(r.feasible), "dt": time.time() - t0}
+    # -fix: PM: Kn=1,B=32; FA: l=1 (Kn=I/B), B=600; PR: B=1, Kn=4
+    prob_id = ParamOptProblem(sys=sys_, consts=consts, T_max=T_max,
+                              C_max=C_max, m=m, **GAMMAS[m])
+    fixed = {"PM": (1, 32), "FA": (I_N / 600.0, 600), "PR": (4, 1)}[algo]
+    rec = _fixed_eval(prob_id, *fixed)
+    rec.update({"name": name, "dt": time.time() - t0})
+    return rec
+
+
+ALL_ALGOS = (["Gen-C", "Gen-E", "Gen-D", "Gen-O"]
+             + [f"{a}-{m}-{x}" for a in ("PM", "FA", "PR")
+                for m in ("C", "E", "D") for x in ("opt", "fix")])
+MAIN_ALGOS = (["Gen-C", "Gen-E", "Gen-D", "Gen-O"]
+              + [f"{a}-{m}-opt" for a in ("PM", "FA", "PR")
+                 for m in ("C", "E", "D")])
+
+
+def write_csv(path: str, rows, header):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for row in rows:
+            f.write(",".join(str(row.get(h, "")) for h in header) + "\n")
+    return path

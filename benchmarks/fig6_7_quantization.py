@@ -1,0 +1,44 @@
+"""Figs. 6 & 7: energy cost of ALL algorithms versus the server quantization
+parameter log2(s0) (Fig. 6) and the worker parameter log2(sn) (Fig. 7), at
+C_max=0.25, T_max=1e5.  The U-shape (coarse quantization inflates K0;  fine
+quantization inflates per-round bits) is the paper's headline quantization
+insight."""
+from __future__ import annotations
+
+import time
+
+from .common import (MAIN_ALGOS, RESULTS, get_constants, paper_system,
+                     run_algorithm, write_csv)
+
+LOG2_GRID = (8, 10, 12, 14, 16, 18, 20)
+ALGOS = ("Gen-C", "Gen-E", "Gen-D", "Gen-O",
+         "PM-C-opt", "FA-C-opt", "PR-C-opt",
+         "PM-C-fix", "FA-C-fix", "PR-C-fix")
+
+
+def run(tag="fig6_7"):
+    consts = get_constants()
+    rows = []
+    t0 = time.time()
+    for panel, knob in (("fig6_s0", "s0"), ("fig7_sn", "sn")):
+        for lg in LOG2_GRID:
+            if knob == "s0":
+                sys_ = paper_system(s0=2**lg)
+            else:
+                import dataclasses
+                sys_ = dataclasses.replace(paper_system(), sn=[2**lg] * 10)
+            for name in ALGOS:
+                r = run_algorithm(name, sys_, consts, T_max=1e5, C_max=0.25)
+                rows.append({"panel": panel, "log2_s": lg, **r})
+        print(f"  {panel} done", flush=True)
+    path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
+                     ["panel", "log2_s", "name", "K0", "Kn", "B", "E", "T",
+                      "C", "feasible"])
+    mid = [r for r in rows if r["panel"] == "fig6_s0"
+           and r["name"] == "Gen-O"]
+    return {"rows": len(rows), "csv": path,
+            "derived": min(r["E"] for r in mid), "dt": time.time() - t0}
+
+
+if __name__ == "__main__":
+    print(run())

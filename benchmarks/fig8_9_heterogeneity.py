@@ -1,0 +1,38 @@
+"""Figs. 8 & 9: energy cost versus worker heterogeneity — the computation
+ratio F^(1)/F^(2) (Fig. 8) and the quantization ratio s^(1)/s^(2) (Fig. 9),
+at C_max=0.25, T_max=1e5."""
+from __future__ import annotations
+
+import time
+
+from .common import RESULTS, get_constants, paper_system, run_algorithm, \
+    write_csv
+
+RATIOS = (1.0, 2.0, 4.0, 8.0, 10.0)
+ALGOS = ("Gen-C", "Gen-E", "Gen-D", "Gen-O",
+         "PM-C-opt", "FA-C-opt", "PR-C-opt")
+
+
+def run(tag="fig8_9"):
+    consts = get_constants()
+    rows = []
+    t0 = time.time()
+    for panel, knob in (("fig8_F", "F_ratio"), ("fig9_s", "s_ratio")):
+        for ratio in RATIOS:
+            sys_ = paper_system(**{knob: ratio})
+            for name in ALGOS:
+                r = run_algorithm(name, sys_, consts, T_max=1e5, C_max=0.25)
+                rows.append({"panel": panel, "ratio": ratio, **r})
+        print(f"  {panel} done", flush=True)
+    path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
+                     ["panel", "ratio", "name", "K0", "Kn", "B", "E", "T",
+                      "C", "feasible"])
+    gen_o = [r for r in rows if r["panel"] == "fig8_F"
+             and r["name"] == "Gen-O"]
+    return {"rows": len(rows), "csv": path,
+            "derived": gen_o[-1]["E"] / max(gen_o[0]["E"], 1e-9),
+            "dt": time.time() - t0}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,61 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — semantics, not
+TPU wall-time) + the pure-jnp oracle timings for reference."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_decode import BLOCK_C, flash_decode_call
+
+from .common import RESULTS, write_csv
+
+SIZES = (2**16, 2**20, 2**22)
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(tag="kernel_bench"):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    t0 = time.time()
+    for n in SIZES:
+        y = jax.random.normal(key, (n,))
+        lvl, norm = ops.qsgd_quantize(y, key, s=64)
+        us_q = _time(lambda: ops.qsgd_quantize(y, key, s=64))
+        us_d = _time(lambda: ops.qsgd_dequant_apply(y, lvl, norm, 0.01, s=64))
+        ref_q = jax.jit(lambda yy, u: ref.qsgd_quantize_ref(
+            yy, u, 64, jnp.sqrt(ref.sumsq_ref(yy))))
+        u = jax.random.uniform(key, (n,))
+        us_ref = _time(lambda: ref_q(y, u))
+        rows.append({"n": n, "quantize_us": round(us_q, 1),
+                     "dequant_apply_us": round(us_d, 1),
+                     "ref_us": round(us_ref, 1)})
+    # flash-decode kernel at a 4k-deep cache
+    B, KV, G, dh, C = 2, 4, 2, 128, 8 * BLOCK_C
+    q = jax.random.normal(key, (B, KV, G, dh))
+    k = jax.random.normal(key, (B, C, KV, dh))
+    v = jax.random.normal(key, (B, C, KV, dh))
+    valid = jnp.ones((B, C))
+    fd = jax.jit(lambda *a: flash_decode_call(*a))
+    us_fd = _time(lambda: fd(q, k, v, valid))
+    rows.append({"n": f"flash_decode_C{C}", "quantize_us": round(us_fd, 1),
+                 "dequant_apply_us": "", "ref_us": ""})
+    path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
+                     ["n", "quantize_us", "dequant_apply_us", "ref_us"])
+    return {"rows": len(rows), "csv": path,
+            "derived": rows[-1]["quantize_us"], "dt": time.time() - t0}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,67 @@
+"""Benchmark orchestrator — one module per paper figure/table.
+
+Prints the ``name,us_per_call,derived`` CSV summary (us_per_call = wall time
+of the whole benchmark; derived = its headline metric) and writes detailed
+CSVs under results/benchmarks/.
+
+Usage:
+  python -m benchmarks.run                 # everything
+  python -m benchmarks.run --only fig5,kernel
+  python -m benchmarks.run --quick         # skip the training-based figures
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings of benchmark names")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the (slow) training-based figures")
+    args = ap.parse_args()
+
+    from . import (fig3_convergence, fig4_error_control, fig5_tradeoff,
+                   fig6_7_quantization, fig8_9_heterogeneity, kernel_bench,
+                   table_baselines, tpu_autotune)
+
+    suite = [
+        ("table_baselines", table_baselines.run),
+        ("fig5_tradeoff", fig5_tradeoff.run),
+        ("fig6_7_quantization", fig6_7_quantization.run),
+        ("fig8_9_heterogeneity", fig8_9_heterogeneity.run),
+        ("tpu_autotune", tpu_autotune.run),
+        ("kernel_bench", kernel_bench.run),
+        ("fig3_convergence", fig3_convergence.run),
+        ("fig4_error_control", fig4_error_control.run),
+    ]
+    if args.quick:
+        suite = [s for s in suite
+                 if s[0] not in ("fig3_convergence", "fig4_error_control")]
+    if args.only:
+        keys = args.only.split(",")
+        suite = [s for s in suite if any(k in s[0] for k in keys)]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suite:
+        print(f"[bench] {name}", file=sys.stderr, flush=True)
+        t0 = time.time()
+        try:
+            out = fn()
+            us = (time.time() - t0) * 1e6
+            print(f"{name},{us:.0f},{out.get('derived')}", flush=True)
+        except Exception:
+            traceback.print_exc()
+            print(f"{name},FAILED,", flush=True)
+            failures += 1
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""The optimization framework as a standalone tool: solve the paper's
+Problems 2/9 for any (T_max, C_max, system) and compare against PM-SGD /
+FedAvg / PR-SGD parameterizations.
+
+    PYTHONPATH=src python examples/optimize_parameters.py --cmax 0.25 --tmax 1e5
+    PYTHONPATH=src python examples/optimize_parameters.py --tpu  # v5e fleet
+"""
+import argparse
+
+from repro.core import EdgeSystem, MLProblemConstants
+from repro.models import mlp
+from repro.opt import (ParamOptProblem, fa_varmap, pm_varmap, pr_varmap,
+                       solve_param_opt)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cmax", type=float, default=0.25)
+    ap.add_argument("--tmax", type=float, default=1e5)
+    ap.add_argument("--tpu", action="store_true",
+                    help="use the TPU v5e fleet cost model instead of the "
+                         "paper's Sec.-VII edge system")
+    args = ap.parse_args()
+
+    if args.tpu:
+        sys_ = EdgeSystem.tpu_v5e_fleet(dim=405_000_000_000, n_groups=2,
+                                        chips_per_group=256, s0=1024, sn=1024,
+                                        flops_per_sample_step=6 * 405e9 * 4096)
+        consts = MLProblemConstants(L=0.05, sigma=4.0, G=5.0, f_gap=3.0, N=2)
+        args.cmax, args.tmax = 0.5, 3 * 24 * 3600.0
+    else:
+        sys_ = EdgeSystem.paper_sec_vii(dim=mlp.PARAM_DIM)
+        consts = MLProblemConstants(L=0.084, sigma=33.18, G=33.63,
+                                    f_gap=2.3, N=10)
+
+    print(f"T_max={args.tmax:.3g}s  C_max={args.cmax}")
+    print(f"{'algorithm':14s} {'K0':>7s} {'Kn':>5s} {'B':>5s} "
+          f"{'gamma':>9s} {'E':>11s} {'T':>10s} {'C':>7s}  feasible")
+
+    def show(name, prob):
+        r = solve_param_opt(prob)
+        print(f"{name:14s} {r.K0:7d} {int(r.Kn[0]):5d} {r.B:5d} "
+              f"{(r.gamma or 0):9.4g} {r.E:11.4g} {r.T:10.4g} {r.C:7.4g}  "
+              f"{r.feasible}")
+
+    N = sys_.N
+    show("GenQSGD (opt)", ParamOptProblem(sys=sys_, consts=consts,
+                                          T_max=args.tmax, C_max=args.cmax,
+                                          m="J"))
+    show("Gen-C g=.01", ParamOptProblem(sys=sys_, consts=consts,
+                                        T_max=args.tmax, C_max=args.cmax,
+                                        m="C", gamma=0.01))
+    show("PM-SGD", ParamOptProblem(sys=sys_, consts=consts, T_max=args.tmax,
+                                   C_max=args.cmax, m="C", gamma=0.01,
+                                   vmap=pm_varmap(N)))
+    show("PR-SGD", ParamOptProblem(sys=sys_, consts=consts, T_max=args.tmax,
+                                   C_max=args.cmax, m="C", gamma=0.01,
+                                   vmap=pr_varmap(N)))
+    if not args.tpu:
+        show("FedAvg", ParamOptProblem(sys=sys_, consts=consts,
+                                       T_max=args.tmax, C_max=args.cmax,
+                                       m="C", gamma=0.01,
+                                       vmap=fa_varmap(N, [6000.0] * N)))
+
+
+if __name__ == "__main__":
+    main()

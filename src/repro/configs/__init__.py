@@ -1,0 +1,1 @@
+from .base import ArchConfig, InputShape, INPUT_SHAPES, MeshLayout

@@ -1,0 +1,172 @@
+"""Time and energy cost models (Sec. IV-A, eqs. (17), (18)) for a
+heterogeneous edge (or TPU-fleet) system.
+
+    T(K, B) = K0 * ( B * max_n (C_n / F_n) * K_n
+                     + C_0 / F_0
+                     + max_n (M_{s_n} / r_n)
+                     + M_{s_0} / r_0 )
+
+    E(K, B) = K0 * ( B * sum_n alpha_n C_n F_n^2 K_n
+                     + alpha_0 C_0 F_0^2
+                     + sum_{n in N̄} p_n M_{s_n} / r_n )
+
+The same closed forms serve two roles:
+  * paper-faithful reproduction with Sec.-VII edge constants;
+  * the TPU auto-tuner, re-parameterized with v5e constants via
+    :func:`EdgeSystem.tpu_v5e_fleet`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .quantizer import bits_per_message, variance_bound, q_pair
+
+__all__ = ["EdgeSystem", "time_cost", "energy_cost"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSystem:
+    """System parameters for server (index 0) and N workers (Remark 1)."""
+    # server
+    F0: float          # CPU frequency (cycles/s) or FLOP/s-equivalent
+    C0: float          # cycles per global model update
+    p0: float          # transmit power (W)
+    r0: float          # multicast rate (b/s)
+    s0: Optional[int]  # server quantization parameter (None = no quantization)
+    alpha0: float      # switched-capacitance factor
+    # workers (arrays of length N)
+    Fn: np.ndarray
+    Cn: np.ndarray
+    pn: np.ndarray
+    rn: np.ndarray
+    sn: Sequence[Optional[int]]
+    alphan: np.ndarray
+    # model dimension (for M_s)
+    dim: int
+    # quantization-bucket dimension for q_s (QSGD bucketing: per-bucket norms;
+    # Assumption 1 holds per bucket exactly as per tensor).  None = whole-dim.
+    q_dim: Optional[int] = None
+
+    def __post_init__(self):
+        for name in ("Fn", "Cn", "pn", "rn", "alphan"):
+            object.__setattr__(self, name, np.asarray(getattr(self, name), dtype=np.float64))
+        n = self.Fn.shape[0]
+        assert all(getattr(self, k).shape == (n,) for k in ("Cn", "pn", "rn", "alphan"))
+        assert len(self.sn) == n
+
+    @property
+    def N(self) -> int:
+        return int(self.Fn.shape[0])
+
+    # --- quantization-derived quantities -------------------------------
+    @property
+    def M_s0(self) -> float:
+        return bits_per_message(self.s0, self.dim)
+
+    @property
+    def M_sn(self) -> np.ndarray:
+        return np.array([bits_per_message(s, self.dim) for s in self.sn])
+
+    @property
+    def q_s0(self) -> float:
+        return variance_bound(self.s0, self.q_dim or self.dim)
+
+    @property
+    def q_sn(self) -> np.ndarray:
+        return np.array([variance_bound(s, self.q_dim or self.dim)
+                         for s in self.sn])
+
+    @property
+    def q_pairs(self) -> np.ndarray:
+        """q_{s0,sn} per worker (Theorem 1)."""
+        return np.array([q_pair(self.q_s0, q) for q in self.q_sn])
+
+    # --- per-global-iteration cost pieces -------------------------------
+    @property
+    def comp_time_coeff(self) -> np.ndarray:
+        """C_n / F_n — per-sample-per-local-iteration compute time."""
+        return self.Cn / self.Fn
+
+    @property
+    def comm_time(self) -> float:
+        """max_n M_{s_n}/r_n + M_{s_0}/r_0 + C_0/F_0 (the K/B-independent part)."""
+        return float(np.max(self.M_sn / self.rn) + self.M_s0 / self.r0
+                     + self.C0 / self.F0)
+
+    @property
+    def comp_energy_coeff(self) -> np.ndarray:
+        """alpha_n C_n F_n^2 — per-sample-per-local-iteration compute energy."""
+        return self.alphan * self.Cn * self.Fn**2
+
+    @property
+    def const_energy(self) -> float:
+        """alpha_0 C_0 F_0^2 + sum_{n in N̄} p_n M_{s_n}/r_n."""
+        return float(self.alpha0 * self.C0 * self.F0**2
+                     + self.p0 * self.M_s0 / self.r0
+                     + np.sum(self.pn * self.M_sn / self.rn))
+
+    # --- canonical instantiations ---------------------------------------
+    @staticmethod
+    def paper_sec_vii(dim: int = 784 * 128 + 128 + 128 * 10 + 10,
+                      F_ratio: float = 10.0, s_ratio: float = 1.0,
+                      s0: int = 2**14, N: int = 10) -> "EdgeSystem":
+        """The exact Sec.-VII system: two worker classes of 5 workers each.
+
+        F^(1)+F^(2) = 2e9 with F^(1)/F^(2) = F_ratio;
+        s^(1)+s^(2) = 2*2^14 with s^(1)/s^(2) = s_ratio.
+        """
+        assert N % 2 == 0
+        F2 = 2e9 / (1.0 + F_ratio)
+        F1 = F_ratio * F2
+        sbar = 2.0**14
+        s2 = 2 * sbar / (1.0 + s_ratio)
+        s1 = s_ratio * s2
+        half = N // 2
+        Fn = np.array([F1] * half + [F2] * half)
+        sn = [max(1, int(round(s1)))] * half + [max(1, int(round(s2)))] * half
+        return EdgeSystem(
+            F0=3e9, C0=100.0, p0=20.0, r0=7.5e7, s0=s0, alpha0=2e-28,
+            Fn=Fn, Cn=np.full(N, 1e8), pn=np.full(N, 1.5),
+            rn=np.full(N, 1e6), sn=sn, alphan=np.full(N, 2e-28), dim=dim)
+
+    @staticmethod
+    def tpu_v5e_fleet(dim: int, n_groups: int, chips_per_group: int,
+                      s0: Optional[int] = 2**7, sn: Optional[int] = 2**7,
+                      link_bw: float = 50e9 * 8, peak_flops: float = 197e12,
+                      watts_per_chip: float = 200.0,
+                      flops_per_sample_step: float = 1.0) -> "EdgeSystem":
+        """Re-parameterize the cost models with TPU v5e fleet constants.
+
+        Each FL "worker" is a replica group of ``chips_per_group`` chips; the
+        "server" is the reduction over the slow inter-group links.  ``C_n`` is
+        expressed in FLOPs (so ``F_n`` is FLOP/s) — the ratio C/F is all that
+        matters to the model.
+        """
+        N = n_groups
+        group_flops = peak_flops * chips_per_group * 0.4  # 40% MFU assumption
+        return EdgeSystem(
+            F0=group_flops, C0=float(2 * dim), p0=watts_per_chip * chips_per_group,
+            r0=link_bw, s0=s0,
+            alpha0=watts_per_chip * chips_per_group / group_flops**3,
+            Fn=np.full(N, group_flops),
+            Cn=np.full(N, flops_per_sample_step),
+            pn=np.full(N, watts_per_chip * chips_per_group),
+            rn=np.full(N, link_bw),
+            sn=[sn] * N,
+            alphan=np.full(N, watts_per_chip * chips_per_group / group_flops**3),
+            dim=dim, q_dim=4096)
+
+
+def time_cost(sys: EdgeSystem, K0, Kn, B) -> float:
+    """T(K, B) — eq. (17)."""
+    Kn = np.asarray(Kn, dtype=np.float64)
+    return float(K0 * (B * np.max(sys.comp_time_coeff * Kn) + sys.comm_time))
+
+
+def energy_cost(sys: EdgeSystem, K0, Kn, B) -> float:
+    """E(K, B) — eq. (18)."""
+    Kn = np.asarray(Kn, dtype=np.float64)
+    return float(K0 * (B * np.sum(sys.comp_energy_coeff * Kn) + sys.const_energy))

@@ -1,0 +1,178 @@
+"""GenQSGD (Algorithm 1) as a composable JAX module.
+
+This is the single-process reference implementation (the paper's algorithm,
+exactly): the N workers are carried as a leading ``vmap`` axis and the server
+aggregation is a mean across it.  The multi-device SPMD version that maps
+workers onto the ``fl`` mesh axis lives in :mod:`repro.fed.runtime` and is
+tested for equivalence against this one.
+
+Heterogeneous local iteration counts ``K_n`` are handled the way the paper's
+analysis does (eqs. (6)-(8)): every worker scans ``K_max = max_n K_n`` local
+steps and workers whose ``K_n`` is exhausted perform *virtual* (masked, no-op)
+updates.
+
+Quantization follows Algorithm 1 lines 3-10:
+  * worker n sends  Q((x_n^{(k0,K_n)} - x̂^{(k0)}) / γ^{(k0)}; s_n)     (5)
+  * the server averages these into Δx̂^{(k0)} and multicasts Q(Δx̂; s_0)
+  * every node recovers x̂^{(k0+1)} = x̂^{(k0)} + γ^{(k0)} Q(Δx̂; s_0)   (3)
+
+Both quantizers act on the *flattened* D-dimensional model delta (the paper's
+vectors live in R^D).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quantizer as Q
+from .step_rules import StepRule
+
+__all__ = ["GenQSGDConfig", "GenQSGD", "flatten_like", "unflatten_like"]
+
+Params = object  # pytree
+LossFn = Callable[[Params, object], jax.Array]  # (params, batch) -> scalar
+
+
+def flatten_like(tree):
+    """Ravel a pytree of arrays into a single f32 vector + static unravel info."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+    return flat
+
+
+def unflatten_like(flat, tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    out, off = [], 0
+    for l in leaves:
+        n = int(np.prod(l.shape)) if l.shape else 1
+        out.append(flat[off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class GenQSGDConfig:
+    """Algorithm parameters (K, B, Γ) + quantizer parameters (s_0, s_n)."""
+    K0: int                      # global iterations
+    Kn: Tuple[int, ...]          # per-worker local iterations (len N)
+    B: int                       # mini-batch size
+    step_rule: StepRule          # Γ generator
+    s0: Optional[int] = None     # server quantizer (None = s = ∞)
+    sn: Optional[Sequence[Optional[int]]] = None  # per-worker quantizers
+
+    @property
+    def N(self) -> int:
+        return len(self.Kn)
+
+    @property
+    def K_max(self) -> int:
+        return int(max(self.Kn))
+
+    def worker_s(self) -> Sequence[Optional[int]]:
+        return self.sn if self.sn is not None else [None] * self.N
+
+    def homogeneous_sn(self) -> Optional[int]:
+        ss = set(self.worker_s())
+        if len(ss) != 1:
+            raise ValueError("workers have heterogeneous quantizers")
+        return next(iter(ss))
+
+
+class GenQSGD:
+    """Bundles the jitted round function and the driver loop.
+
+    Args:
+      loss_fn: ``loss_fn(params, batch) -> scalar``; ``batch`` is whatever the
+        sampler yields.
+      sample_fn: ``sample_fn(worker_data, key, B) -> batch`` — draws one
+        mini-batch from a *single worker's* local dataset (Assumption 2 IID).
+      config: the (K, B, Γ, s) parameterization.
+    """
+
+    def __init__(self, loss_fn: LossFn, sample_fn, config: GenQSGDConfig):
+        self.loss_fn = loss_fn
+        self.sample_fn = sample_fn
+        self.cfg = config
+        self._round = jax.jit(self._round_impl)
+
+    # ------------------------------------------------------------------
+    def _local_train(self, x_hat, worker_data, key, gamma, k_n):
+        """K_max masked local mini-batch SGD steps for ONE worker."""
+        cfg = self.cfg
+        grad_fn = jax.grad(self.loss_fn)
+
+        def body(carry, k):
+            x, key = carry
+            key, bkey = jax.random.split(key)
+            batch = self.sample_fn(worker_data, bkey, cfg.B)
+            g = grad_fn(x, batch)
+            active = (k < k_n).astype(jnp.float32)
+            x = jax.tree.map(
+                lambda p, gg: p - (gamma * active) * gg.astype(p.dtype), x, g)
+            return (x, key), None
+
+        (x, _), _ = jax.lax.scan(body, (x_hat, key), jnp.arange(cfg.K_max))
+        return x
+
+    def _round_impl(self, x_hat, data, key, gamma):
+        """One global iteration (Algorithm 1, lines 3-10).
+
+        ``data`` is a pytree whose leaves have leading axis N (per-worker
+        shards).
+        """
+        cfg = self.cfg
+        keys = jax.random.split(key, cfg.N + 1)
+        wkeys, skey = keys[:-1], keys[-1]
+        k_n = jnp.asarray(cfg.Kn)
+
+        local = jax.vmap(self._local_train, in_axes=(None, 0, 0, None, 0))
+        x_workers = local(x_hat, data, wkeys, gamma, k_n)
+
+        # (5): per-worker quantized normalized deltas, then the server mean.
+        flat_hat = flatten_like(x_hat)
+
+        def worker_delta(xw, wkey, s):
+            d = (flatten_like(xw) - flat_hat) / gamma
+            return Q.quantize_dequantize(d, s, wkey)
+
+        sn = cfg.worker_s()
+        if len(set(sn)) == 1:
+            deltas = jax.vmap(worker_delta, in_axes=(0, 0, None))(
+                x_workers, wkeys, sn[0])
+        else:  # heterogeneous quantizers: unrolled per worker
+            deltas = jnp.stack([
+                worker_delta(jax.tree.map(lambda l: l[i], x_workers),
+                             wkeys[i], sn[i]) for i in range(cfg.N)])
+        delta_hat = deltas.mean(axis=0)
+
+        # (3): server quantizes the averaged update and everyone applies it.
+        delta_q = Q.quantize_dequantize(delta_hat, cfg.s0, skey)
+        new_flat = flat_hat + gamma * delta_q
+        x_new = unflatten_like(new_flat, x_hat)
+        metrics = {
+            "delta_norm": jnp.linalg.norm(delta_hat),
+            "update_norm": gamma * jnp.linalg.norm(delta_q),
+        }
+        return x_new, metrics
+
+    # ------------------------------------------------------------------
+    def run(self, x0, data, key, eval_fn=None, eval_every: int = 10):
+        """Full K0-round driver.  Returns (x*, history)."""
+        cfg = self.cfg
+        gammas = cfg.step_rule.sequence(cfg.K0)
+        x = x0
+        history = []
+        for k0 in range(cfg.K0):
+            key, rkey = jax.random.split(key)
+            x, m = self._round(x, data, rkey, jnp.float32(gammas[k0]))
+            if eval_fn is not None and (k0 % eval_every == 0 or k0 == cfg.K0 - 1):
+                e = eval_fn(x)
+                e.update({k: float(v) for k, v in m.items()})
+                e["k0"] = k0
+                history.append(e)
+        return x, history

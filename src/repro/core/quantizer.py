@@ -1,0 +1,126 @@
+"""QSGD-style random quantizer satisfying Assumption 1 of the paper.
+
+For an input vector ``y`` and quantization parameter ``s`` (number of
+quantization levels per unit of the normalized magnitude), the quantizer is
+
+    Q(y; s)_i = ||y||_2 * sign(y_i) * xi_i / s
+
+where ``xi_i`` is the stochastic level: with ``u_i = s * |y_i| / ||y||_2``,
+``xi_i = floor(u_i) + Bernoulli(u_i - floor(u_i))``.
+
+Properties (Lemma 3.1 of QSGD, restated as the paper's Assumption 1):
+  (i)  E[Q(y; s)] = y                               (unbiased)
+  (ii) E||Q(y; s) - y||^2 <= q_s ||y||^2  with  q_s = min(D / s^2, sqrt(D) / s)
+
+The paper treats the quantizer abstractly through ``(q_s, M_s)``; we provide
+the concrete QSGD instance plus the bit model ``M_s`` used by the cost layer.
+
+``s == None`` (or ``jnp.inf``) encodes the paper's ``s = ∞`` — no quantization
+(``q_s = 0``) — used to recover PM-SGD / FedAvg / PR-SGD as special cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantizerSpec",
+    "variance_bound",
+    "bits_per_message",
+    "quantize",
+    "dequantize",
+    "quantize_dequantize",
+    "q_pair",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerSpec:
+    """Static description of one node's quantizer.
+
+    Attributes:
+      s: number of quantization levels (``None`` == no quantization, s = ∞).
+      wire_dtype: dtype used on the wire by the *optimized* transport
+        ("f32" faithful math, "int8"/"int4" packed levels).
+    """
+
+    s: Optional[int]
+    wire_dtype: str = "f32"
+
+    @property
+    def is_identity(self) -> bool:
+        return self.s is None
+
+    def q(self, dim: int) -> float:
+        return variance_bound(self.s, dim)
+
+    def bits(self, dim: int) -> float:
+        return bits_per_message(self.s, dim)
+
+
+def variance_bound(s: Optional[int], dim: int) -> float:
+    """q_s of Assumption 1 for the QSGD quantizer: min(D/s^2, sqrt(D)/s)."""
+    if s is None:
+        return 0.0
+    if s <= 0:
+        raise ValueError(f"quantization parameter s must be positive, got {s}")
+    return min(dim / s**2, math.sqrt(dim) / s)
+
+
+def bits_per_message(s: Optional[int], dim: int) -> float:
+    """M_s: bits to represent Q(y; s) for a D-dimensional y.
+
+    Simple fixed-length code: a 32-bit norm plus, per coordinate, a sign bit
+    and ceil(log2(s+1)) bits of level index.  (QSGD's Elias coding achieves
+    fewer bits; fixed-length is what a TPU wire format would use and is the
+    monotone-in-s model the paper's cost layer expects.)
+    """
+    if s is None:
+        return 32.0 * (dim + 1)  # raw f32 vector
+    return 32.0 + dim * (1.0 + math.ceil(math.log2(s + 1)))
+
+
+def q_pair(q_s0: float, q_sn: float) -> float:
+    """q_{s0,sn} = q_{s0} + q_{sn} + q_{s0} q_{sn} (Theorem 1)."""
+    return q_s0 + q_sn + q_s0 * q_sn
+
+
+def _levels(y: jax.Array, s: int, key: jax.Array):
+    """Stochastic level assignment.  Returns (levels int32, norm f32).
+
+    levels are signed: sign(y) * xi in [-s, s].
+    """
+    norm = jnp.linalg.norm(y.astype(jnp.float32).ravel())
+    # Avoid 0/0 for the zero vector; levels are 0 there anyway.
+    safe = jnp.where(norm > 0, norm, 1.0)
+    u = s * jnp.abs(y.astype(jnp.float32)) / safe
+    lo = jnp.floor(u)
+    frac = u - lo
+    bern = jax.random.uniform(key, y.shape, jnp.float32) < frac
+    xi = lo + bern.astype(jnp.float32)
+    lvl = jnp.sign(y) * xi
+    return lvl.astype(jnp.int32), norm
+
+
+def quantize(y: jax.Array, s: Optional[int], key: jax.Array):
+    """Quantize ``y`` -> (levels, norm).  Identity passthrough for s=None."""
+    if s is None:
+        return y, jnp.float32(1.0)
+    return _levels(y, s, key)
+
+
+def dequantize(levels: jax.Array, norm: jax.Array, s: Optional[int],
+               dtype=jnp.float32) -> jax.Array:
+    if s is None:
+        return levels.astype(dtype)
+    return (levels.astype(jnp.float32) * (norm / s)).astype(dtype)
+
+
+def quantize_dequantize(y: jax.Array, s: Optional[int], key: jax.Array) -> jax.Array:
+    """Q(y; s) as a value (the paper's math; f32 on the wire)."""
+    lvl, norm = quantize(y, s, key)
+    return dequantize(lvl, norm, s, dtype=y.dtype)

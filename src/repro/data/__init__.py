@@ -1,0 +1,2 @@
+from .synthetic import token_batches, mnist_like, lm_batch
+from .federated import partition_iid, round_batches, sample_minibatch

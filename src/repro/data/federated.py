@@ -1,0 +1,50 @@
+"""Federated data plumbing: per-worker partitioning (Assumption 2: IID) and
+round-batch assembly for the distributed runtime.
+
+The runtime consumes batches with leading (fl, K_max, B_local) dims — one
+mini-batch per local step per worker.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["partition_iid", "round_batches", "sample_minibatch"]
+
+
+def partition_iid(X: np.ndarray, y: np.ndarray, n_workers: int, seed: int = 0):
+    """Shuffle + equal split (the paper's IID assumption)."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(X))
+    Xs, ys = X[perm], y[perm]
+    per = len(X) // n_workers
+    return ([Xs[i * per:(i + 1) * per] for i in range(n_workers)],
+            [ys[i * per:(i + 1) * per] for i in range(n_workers)])
+
+
+def sample_minibatch(worker_data, key, B: int):
+    """Uniform with-replacement mini-batch from one worker's shard
+    (the sample_fn contract of repro.core.GenQSGD)."""
+    X, y = worker_data
+    idx = jax.random.randint(key, (B,), 0, X.shape[0])
+    return X[idx], y[idx]
+
+
+def round_batches(stream, n_workers: int, k_max: int) -> Iterator[Dict]:
+    """Stack per-worker, per-local-step LM batches into the runtime layout.
+
+    ``stream`` is an iterator yielding dicts of arrays with a leading batch
+    dim.
+    """
+    while True:
+        steps = [[next(stream) for _ in range(k_max)]
+                 for _ in range(n_workers)]
+        out = {}
+        for k in steps[0][0]:
+            out[k] = jnp.stack([jnp.stack([steps[w][s][k]
+                                           for s in range(k_max)])
+                                for w in range(n_workers)])
+        yield out

@@ -1,0 +1,2 @@
+from .runtime import FedConfig, make_round_fn, quantize_tensor, dequantize_tensor
+from . import sharding

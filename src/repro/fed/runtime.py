@@ -1,0 +1,326 @@
+"""Distributed GenQSGD runtime: Algorithm 1 mapped onto the (fl, fsdp, tp) mesh.
+
+One *round* = the body of Algorithm 1's global iteration:
+  1. every fl worker group starts from the shared global model x̂,
+  2. runs K_max local mini-batch SGD steps (workers with K_n < K_max do the
+     paper's "virtual" masked updates, eqs. (6)-(8)),
+  3. quantizes its normalized model delta (x_n - x̂)/γ per tensor (Assumption
+     1 holds per tensor, hence for the concatenation with q = max_t q_t),
+  4. aggregation: the server mean of quantized deltas (5), re-quantized with
+     the server quantizer and applied by every node (3).
+
+Aggregation transports:
+  wire="f32"   — paper-faithful math: quantized *values* travel as f32
+                 (mean over fl => an XLA all-reduce of f32).
+  wire="int8"  — beyond-paper optimized: QSGD levels travel as int8 via an
+                 explicit all-gather inside shard_map; dequantize + average
+                 locally.  4x fewer collective bytes on the fl (cross-pod)
+                 axis; bit-identical results to "f32" (levels are exact
+                 integers in both).
+  wire="rs_ag" — reduce-scatter + all-gather decomposition of the f32 mean
+                 (each fl member owns 1/fl of the delta): ~2x fewer wire
+                 bytes than a ring all-reduce of the same payload, exact
+                 f32 math.
+
+Local steps are vmapped over an explicit leading fl axis sharded P('fl', ...)
+— GSPMD keeps each worker group's replica resident on its own (fsdp, tp)
+sub-grid and the ONLY fl-axis traffic is the aggregation, exactly the paper's
+communication pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from . import sharding as SH
+
+__all__ = ["FedConfig", "make_round_fn", "quantize_tensor", "dequantize_tensor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Static GenQSGD runtime parameters for one training job."""
+    n_workers: int                       # fl axis size
+    Kn: tuple                            # per-worker local steps (len == fl)
+    s0: Optional[int]                    # server quantizer (None = exact)
+    sn: object = None                    # worker quantizer: int (homogeneous),
+                                         # tuple of per-worker ints, or None
+    wire: str = "f32"                    # "f32" | "int8"
+    aux_weight: float = 0.01
+    microbatch: int = 1                  # grad-accumulation splits per local step
+
+    def __post_init__(self):
+        for s in self.sn_tuple():
+            assert s is None or s <= 127, "int8 wire format requires s <= 127"
+        assert self.s0 is None or self.s0 <= 127
+
+    @property
+    def K_max(self) -> int:
+        return int(max(self.Kn))
+
+    def sn_tuple(self) -> tuple:
+        """Per-worker quantization parameters (heterogeneous allowed)."""
+        if isinstance(self.sn, (tuple, list)):
+            assert len(self.sn) == self.n_workers
+            return tuple(self.sn)
+        return (self.sn,) * self.n_workers
+
+    @property
+    def sn_exact(self) -> bool:
+        return all(s is None for s in self.sn_tuple())
+
+
+# ---------------------------------------------------------------------------
+# counter-based uniform noise (murmur3 finalizer) — jax.random's threefry
+# emits reshape/concat patterns GSPMD cannot partition (measured: full f32
+# noise tensors replicated per device at 405B scale), so quantization noise
+# comes from a pure elementwise index hash instead.  Avalanche quality is
+# ample for stochastic rounding; uniformity/unbiasedness are unit-tested.
+# ---------------------------------------------------------------------------
+def _mix32(z: jax.Array) -> jax.Array:
+    z = (z ^ (z >> 16)) * jnp.uint32(0x85EBCA6B)
+    z = (z ^ (z >> 13)) * jnp.uint32(0xC2B2AE35)
+    return z ^ (z >> 16)
+
+
+def uniform_like(x: jax.Array, seed: jax.Array) -> jax.Array:
+    """U(0,1) f32 tensor shaped like x, from a counter hash (partitionable)."""
+    n = int(np.prod(x.shape)) if x.shape else 1
+    idx = jnp.arange(n, dtype=jnp.uint32).reshape(x.shape)
+    z = idx * jnp.uint32(0x9E3779B9) + seed.astype(jnp.uint32)
+    z = _mix32(_mix32(z) + jnp.uint32(0x27D4EB2F))
+    return (z >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _seed_from(key: jax.Array, salt: int) -> jax.Array:
+    data = jax.random.key_data(key) if jnp.issubdtype(key.dtype, jax.dtypes.prng_key) \
+        else key
+    words = data.reshape(-1).astype(jnp.uint32)
+    seed = jnp.uint32(salt * 0x9E3779B9 & 0xFFFFFFFF)
+    for i in range(words.shape[0]):
+        seed = _mix32(seed ^ words[i])
+    return seed
+
+
+# ---------------------------------------------------------------------------
+# per-tensor QSGD with externally supplied uniform noise
+# ---------------------------------------------------------------------------
+def quantize_tensor(y: jax.Array, s, u: jax.Array):
+    """-> (levels int8, norm f32 scalar).  u: uniform(0,1) noise like y.
+
+    ``s`` may be a Python int or a traced scalar (heterogeneous per-worker
+    quantizers vectorize through vmap); None = exact passthrough.
+    """
+    if s is None:
+        return y, jnp.float32(1.0)
+    yf = y.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(yf * yf))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    s_f = jnp.asarray(s, jnp.float32)
+    scaled = s_f * jnp.abs(yf) / safe
+    lvl = jnp.floor(scaled) + (u < (scaled - jnp.floor(scaled)))
+    lvl = jnp.sign(yf) * lvl
+    return lvl.astype(jnp.int8), norm
+
+
+def dequantize_tensor(lvl: jax.Array, norm: jax.Array, s,
+                      dtype=jnp.float32):
+    if s is None:
+        return lvl.astype(dtype)
+    s_f = jnp.asarray(s, jnp.float32)
+    return (lvl.astype(jnp.float32) * (norm / s_f)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# round function
+# ---------------------------------------------------------------------------
+def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
+                  fsdp_weights: bool = True, moe_tp_only: bool = False):
+    """Build genqsgd_round(x_hat, batch, noise_key) -> (x_hat', metrics).
+
+    x_hat: param pytree sharded (fsdp, tp), replicated over fl.
+    batch: leaves (fl, K_max, B_local, ...), sharded P('fl', None, 'fsdp', ...).
+    """
+    Kn = jnp.asarray(fed.Kn, jnp.int32)
+
+    def _grad_sharding(tree):
+        """Pin weight-gradient shardings to the param layout — otherwise the
+        partitioner materializes full unsharded f32 dW tensors and all-reduces
+        them (measured 7 x 3.25 GiB concurrent at 405B) instead of
+        reduce-scattering."""
+        specs = SH.param_specs(tree, mesh, fsdp_weights,
+                               moe_tp_only=moe_tp_only)
+        return jax.tree.map(
+            lambda g, sp: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, sp)), tree, specs)
+
+    def local_train(x_hat, data, kn, gamma):
+        def loss_grad(pp, micro):
+            l, g = jax.value_and_grad(
+                lambda q: api.loss_train(q, cfg, micro,
+                                         aux_weight=fed.aux_weight))(pp)
+            return l, _grad_sharding(g)
+
+        def body(carry, inp):
+            p, step = carry
+            batch_k = inp
+            # mixed precision: forward/backward in bf16 against a bf16 view,
+            # SGD update applied to the (possibly f32) master copy.
+            p_half = jax.tree.map(
+                lambda w: w.astype(jnp.bfloat16)
+                if w.dtype == jnp.float32 else w, p)
+            M = fed.microbatch
+            if M > 1:
+                # grad accumulation: activations scale with B/M, not B
+                micro_tree = jax.tree.map(
+                    lambda a: a.reshape((M, a.shape[0] // M) + a.shape[1:])
+                    if a.ndim >= 1 and a.shape[0] % M == 0
+                    else jnp.broadcast_to(a, (M,) + a.shape), batch_k)
+                if "positions3" in batch_k:  # (3, B, S) -> split on B
+                    micro_tree["positions3"] = jnp.moveaxis(
+                        batch_k["positions3"].reshape(
+                            3, M, batch_k["positions3"].shape[1] // M, -1),
+                        1, 0)
+
+                def acc_body(acc, micro):
+                    g_acc, l_acc = acc
+                    l, g = loss_grad(p_half, micro)
+                    g_acc = jax.tree.map(
+                        lambda a, gg: a + gg.astype(a.dtype) / M, g_acc, g)
+                    return (g_acc, l_acc + l / M), None
+
+                zeros = jax.tree.map(
+                    lambda w: jnp.zeros(w.shape, w.dtype), p_half)
+                (g, loss), _ = jax.lax.scan(acc_body,
+                                            (zeros, jnp.zeros(())),
+                                            micro_tree)
+            else:
+                loss, g = loss_grad(p_half, batch_k)
+            active = (step < kn).astype(jnp.float32)
+            p = jax.tree.map(
+                lambda w, gg: (w.astype(jnp.float32)
+                               - (gamma * active) * gg.astype(jnp.float32)
+                               ).astype(w.dtype), p, g)
+            return (p, step + 1), loss
+
+        (p, _), losses = jax.lax.scan(body, (x_hat, jnp.int32(0)), data)
+        return p, losses.mean()
+
+    sn_arr = (None if fed.sn_exact
+              else jnp.asarray([s or 0 for s in fed.sn_tuple()], jnp.float32))
+
+    def worker_quantize(delta, key, s_w):
+        leaves, treedef = jax.tree.flatten(delta)
+        lvls, norms = [], []
+        for i, leaf in enumerate(leaves):
+            u = uniform_like(leaf, _seed_from(key, i))
+            lvl, nrm = quantize_tensor(leaf, None if sn_arr is None else s_w,
+                                       u)
+            lvls.append(lvl)
+            norms.append(nrm)
+        return (jax.tree.unflatten(treedef, lvls),
+                jax.tree.unflatten(treedef, norms))
+
+    # -- aggregation ---------------------------------------------------------
+    def agg_f32(levels_fl, norms_fl):
+        """Paper-faithful: dequantize then mean over fl (f32 all-reduce)."""
+        deq = jax.tree.map(
+            lambda l, n: jax.vmap(
+                lambda li, ni, si: dequantize_tensor(
+                    li, ni, None if sn_arr is None else si))(
+                l, n, jnp.zeros(fed.n_workers) if sn_arr is None else sn_arr),
+            levels_fl, norms_fl)
+        return jax.tree.map(lambda d: d.mean(axis=0), deq)
+
+    def _agg_rs_ag_local(levels_loc, norms_loc):
+        """Runs inside shard_map: dequantize locally, reduce-scatter the f32
+        mean over fl (each member owns a 1/fl shard), then all-gather —
+        ~2x fewer wire bytes than a ring all-reduce of the same payload."""
+        n = fed.n_workers
+        my_s = (None if sn_arr is None
+                else sn_arr[jax.lax.axis_index("fl")])
+
+        def per_leaf(lvl, nrm):
+            d = dequantize_tensor(lvl[0], nrm[0], my_s) / n
+            if d.size % n:  # ragged leaf: fall back to psum
+                return jax.lax.psum(d, "fl")
+            own = jax.lax.psum_scatter(d.reshape(n, -1), "fl",
+                                       scatter_dimension=0, tiled=False)
+            return jax.lax.all_gather(own, "fl").reshape(d.shape)
+
+        return jax.tree.map(per_leaf, levels_loc, norms_loc)
+
+    def _agg_int8_local(levels_loc, norms_loc):
+        """Runs inside shard_map: all-gather int8 levels over fl, dequantize
+        and average locally."""
+        def per_leaf(lvl, nrm):
+            # lvl: (1, ...) local block; gather -> (fl, ...)
+            g = jax.lax.all_gather(lvl[0], "fl")          # int8 on the wire
+            gn = jax.lax.all_gather(nrm[0], "fl")
+            ss = (jnp.zeros(fed.n_workers) if sn_arr is None else sn_arr)
+            deq = jax.vmap(
+                lambda li, ni, si: dequantize_tensor(
+                    li, ni, None if sn_arr is None else si))(g, gn, ss)
+            return deq.mean(axis=0)
+        return jax.tree.map(per_leaf, levels_loc, norms_loc)
+
+    def make_agg_sm(x_hat_example, body):
+        pspecs = SH.param_specs(x_hat_example, mesh, fsdp_weights,
+                               moe_tp_only=moe_tp_only)
+        lv_specs = SH.with_fl(pspecs)
+        nm_specs = jax.tree.map(lambda _: P("fl"), pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(lv_specs, nm_specs), out_specs=pspecs,
+            check_vma=False)
+
+    # -- the round ----------------------------------------------------------
+    def genqsgd_round(x_hat, batch, key, gamma):
+        keys = jax.random.split(key, fed.n_workers + 1)
+        wkeys, skey = keys[:-1], keys[-1]
+
+        params_w, losses = jax.vmap(
+            local_train, in_axes=(None, 0, 0, None))(x_hat, batch, Kn, gamma)
+
+        # (5): normalized per-worker deltas, quantized per tensor
+        deltas = jax.tree.map(
+            lambda pw, xh: (pw - xh[None]) / gamma, params_w, x_hat)
+        s_dummy = (jnp.zeros(fed.n_workers) if sn_arr is None else sn_arr)
+        levels_fl, norms_fl = jax.vmap(worker_quantize)(deltas, wkeys,
+                                                        s_dummy)
+
+        if fed.wire == "int8":
+            delta_hat = make_agg_sm(x_hat, _agg_int8_local)(levels_fl,
+                                                            norms_fl)
+        elif fed.wire == "rs_ag":
+            delta_hat = make_agg_sm(x_hat, _agg_rs_ag_local)(levels_fl,
+                                                             norms_fl)
+        else:
+            delta_hat = agg_f32(levels_fl, norms_fl)
+
+        # (3): server quantization of the averaged update, applied everywhere
+        leaves, treedef = jax.tree.flatten(delta_hat)
+        new_leaves = []
+        for i, (leaf, xh) in enumerate(zip(leaves, jax.tree.leaves(x_hat))):
+            u = uniform_like(leaf, _seed_from(skey, 1000 + i))
+            lvl, nrm = quantize_tensor(leaf, fed.s0, u)
+            dq = dequantize_tensor(lvl, nrm, fed.s0)
+            new_leaves.append((xh.astype(jnp.float32)
+                               + gamma * dq).astype(xh.dtype))
+        x_new = jax.tree.unflatten(treedef, new_leaves)
+        metrics = {"loss": losses.mean(),
+                   "delta_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(l.astype(jnp.float32)))
+                       for l in leaves))}
+        return x_new, metrics
+
+    return genqsgd_round

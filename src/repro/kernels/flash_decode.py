@@ -1,0 +1,93 @@
+"""Flash-decode Pallas kernel: single-token GQA attention against a deep KV
+cache, tiled over the cache length with an online-softmax accumulator held
+in VMEM scratch.
+
+The decode_32k / long_500k shapes are memory-bound on KV streaming; this
+kernel reads each K/V tile exactly once (HBM -> VMEM), keeps the (G, dh)
+running accumulator resident, and never materializes the (C,) score vector
+in HBM.  Grid = (batch, kv_head, C/BLOCK_C); the innermost grid dim walks
+the cache so scratch carries across iterations.
+
+Tiles: BLOCK_C x dh = 512 x <=256 f32 <= 0.5 MiB per K and V tile — well
+inside the ~16 MiB/core VMEM budget with double buffering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_decode_call", "BLOCK_C"]
+
+BLOCK_C = 512
+NEG = -1e30
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                         m_scr, l_scr, acc_scr):
+    """One (batch, kv_head, c_block) step of online-softmax decode.
+
+    Block shapes: q (1,1,G,dh)  k/v (1,BLOCK_C,1,dh)  valid (1,BLOCK_C)
+    out (1,1,G,dh); scratch: m/l (G,1), acc (G,dh) — carried across the
+    innermost grid dim.
+    """
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                # (G, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)             # (C_b, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    dh = q.shape[-1]
+    s = jnp.dot(q, k.T) / np.sqrt(dh)                  # (G, C_b)
+    s = jnp.where(valid_ref[...] > 0, s, NEG)          # (1, C_b) broadcasts
+
+    m_prev = m_scr[...]                                # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                             # (G, C_b)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_call(q: jax.Array, k: jax.Array, v: jax.Array,
+                      valid: jax.Array, *, interpret: bool = True):
+    """q: (B, KV, G, dh); k/v: (B, C, KV, dh); valid: (B, C) in {0,1}.
+
+    Returns (B, KV, G, dh).  C must be a multiple of BLOCK_C.
+    """
+    B, KV, G, dh = q.shape
+    C = k.shape[1]
+    assert C % BLOCK_C == 0, (C, BLOCK_C)
+    grid = (B, KV, C // BLOCK_C)
+    return pl.pallas_call(
+        _flash_decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, BLOCK_C, 1, dh), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, BLOCK_C, 1, dh), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, BLOCK_C), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid)

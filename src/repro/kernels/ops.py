@@ -1,0 +1,70 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handle arbitrary-shaped tensors by flattening + padding to the kernel tile
+grid; on CPU the kernels run under ``interpret=True`` (the TPU lowering is
+the target, the interpreter validates semantics bit-for-bit against ref.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import qsgd as K
+from . import ref
+
+__all__ = ["qsgd_quantize", "qsgd_dequant_apply", "tensor_norm",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_grid2d(flat: jax.Array) -> Tuple[jax.Array, int]:
+    """Pad a 1-D array to a (R, BLOCK_COLS·k) grid; returns (2d, orig_len)."""
+    n = flat.shape[0]
+    cols = K.BLOCK_COLS
+    rows = max(K.BLOCK_ROWS, -(-n // cols))
+    rows = -(-rows // K.BLOCK_ROWS) * K.BLOCK_ROWS
+    pad = rows * cols - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, cols), n
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def qsgd_quantize(y: jax.Array, key: jax.Array, *, s: int,
+                  interpret: Optional[bool] = None):
+    """QSGD-quantize an arbitrary tensor -> (levels int8 like y, norm f32)."""
+    itp = default_interpret() if interpret is None else interpret
+    flat = y.reshape(-1).astype(jnp.float32)
+    y2d, n = _to_grid2d(flat)
+    norm = jnp.sqrt(K.sumsq_kernel_call(y2d, interpret=itp))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    u = jax.random.uniform(key, y2d.shape, jnp.float32)
+    lvl2d = K.quantize_kernel_call(y2d, u, jnp.float32(s) / safe,
+                                   interpret=itp)
+    return lvl2d.reshape(-1)[:n].reshape(y.shape), norm
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def qsgd_dequant_apply(x: jax.Array, lvl: jax.Array, norm: jax.Array,
+                       gamma, *, s: int, interpret: Optional[bool] = None):
+    """x + gamma * dequantize(lvl, norm, s) — the model-update apply (3)."""
+    itp = default_interpret() if interpret is None else interpret
+    x2d, n = _to_grid2d(x.reshape(-1))
+    l2d, _ = _to_grid2d(lvl.reshape(-1).astype(jnp.float32))
+    out = K.dequant_apply_kernel_call(
+        x2d, l2d.astype(jnp.int8), (norm / s).astype(jnp.float32),
+        jnp.float32(gamma), interpret=itp)
+    return out.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tensor_norm(y: jax.Array, *, interpret: Optional[bool] = None):
+    itp = default_interpret() if interpret is None else interpret
+    y2d, _ = _to_grid2d(y.reshape(-1).astype(jnp.float32))
+    return jnp.sqrt(K.sumsq_kernel_call(y2d, interpret=itp))

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["qsgd_quantize_ref", "qsgd_dequant_apply_ref", "sumsq_ref"]
+
+
+def sumsq_ref(y: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.square(y.astype(jnp.float32)))
+
+
+def qsgd_quantize_ref(y: jax.Array, u: jax.Array, s: int,
+                      norm: jax.Array) -> jax.Array:
+    """QSGD stochastic level assignment (per-tensor norm precomputed).
+
+    levels = sign(y) * (floor(s|y|/norm) + Bernoulli(frac)), int8.
+    """
+    yf = y.astype(jnp.float32)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    scaled = s * jnp.abs(yf) / safe
+    base = jnp.floor(scaled)
+    lvl = base + (u < (scaled - base)).astype(jnp.float32)
+    return (jnp.sign(yf) * lvl).astype(jnp.int8)
+
+
+def qsgd_dequant_apply_ref(x: jax.Array, lvl: jax.Array, norm: jax.Array,
+                           s: int, gamma) -> jax.Array:
+    """Fused model update: x + gamma * dequantize(lvl)  (Algorithm 1, (3))."""
+    scale = norm / s
+    return (x.astype(jnp.float32)
+            + jnp.float32(gamma) * lvl.astype(jnp.float32) * scale
+            ).astype(x.dtype)

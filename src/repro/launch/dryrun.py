@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh).
+
+For each case this proves the sharding config is coherent at production
+scale: ``jax.jit(step).lower(*abstract_inputs).compile()`` must succeed on
+the single-pod (16, 16) mesh AND the 2-pod (2, 16, 16) mesh, and
+``memory_analysis()`` must show per-device residency.  Results (bytes,
+FLOPs, collective bytes parsed from the compiled HLO) are dumped as JSON
+for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh multi
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool, wire: str = "f32",
+             verbose: bool = True) -> dict:
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch.specs import build_case, case_supported
+    from repro.models.registry import get_config
+    from repro.roofline.analysis import collective_bytes, cost_summary
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    reason = case_supported(cfg, shape)
+    mesh_name = "multi(2,16,16)" if multi_pod else "single(16,16)"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "wire": wire}
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    t0 = time.time()
+    case = build_case(arch, shape_name, multi_pod=multi_pod, wire=wire)
+    jitted = jax.jit(case.fn, in_shardings=case.in_shardings)
+    with case.activation_ctx():
+        lowered = jitted.lower(*case.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "total_per_device_gib": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes) / 2**30, 3),
+        },
+        "cost": cost_summary(ca),
+        "collectives": collective_bytes(compiled.as_text()),
+        "fl_axis": int(case.mesh.devices.shape[0]),
+        "param_count": cfg.param_count(),
+        "param_count_active": cfg.param_count(active_only=True),
+    })
+    if verbose:
+        m = rec["memory"]
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"per-device args {m['argument_bytes']/2**30:.2f} GiB "
+              f"temp {m['temp_bytes']/2**30:.2f} GiB | "
+              f"flops {rec['cost'].get('flops', 0):.3g} | "
+              f"coll {rec['collectives']['total_bytes']/2**20:.1f} MiB",
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--wire", default="f32", choices=["f32", "int8"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs.base import INPUT_SHAPES
+    from repro.models.registry import ARCH_IDS
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or args.shape is None)
+              else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    results, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'multi' if mp else 'single'}"
+                print(f"[dryrun] {tag}", flush=True)
+                try:
+                    rec = run_case(arch, shape, mp, wire=args.wire)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "FAILED", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                if rec["status"] == "skipped":
+                    print(f"  skipped: {rec['reason']}", flush=True)
+                results.append(rec)
+                fname = (f"{arch.replace('/', '_')}_{shape}_"
+                         f"{'multi' if mp else 'single'}.json")
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(rec, f, indent=2)
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    print(f"\n[dryrun] ok={n_ok} skipped={n_skip} failed={failures} "
+          f"-> {args.out}/summary.json")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

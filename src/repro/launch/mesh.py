@@ -1,0 +1,64 @@
+"""Production mesh construction + logical (fl, fsdp, tp) view.
+
+``make_production_mesh`` builds the physical mesh the brief specifies:
+(16, 16) = ("data", "model") for one pod, (2, 16, 16) = ("pod", "data",
+"model") for two pods.  ``logical_mesh`` folds it into the axes the GenQSGD
+runtime actually shards over:
+
+  fl   — federated-worker axis (pods × fl_sub replica groups).  GenQSGD's
+         quantized aggregation is the ONLY communication on this axis.
+  fsdp — parameter/batch sharding inside one worker group.
+  tp   — tensor parallelism.
+
+Everything is a function (module import never touches jax device state).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "logical_mesh", "mesh_axis_sizes"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def logical_mesh(mesh: Mesh, fl_sub: int = 1, tp: Optional[int] = None) -> Mesh:
+    """Reshape a production mesh's devices into (fl, fsdp, tp).
+
+    The pod axis (if present) folds entirely into ``fl``; ``fl_sub`` worker
+    groups are additionally carved out of each pod, so fl = pods * fl_sub and
+    fsdp = chips_per_pod / (fl_sub * tp).  Cross-pod links only ever carry
+    fl-axis (GenQSGD aggregation) traffic — the paper's edge topology.
+
+    ``tp`` defaults to the physical model-axis size (16); small-d_model archs
+    shrink it (tp=16 on a 2048-wide model would replicate activations 16x)
+    — the extra factor folds into fsdp.
+    """
+    devs = np.asarray(mesh.devices)
+    if devs.ndim == 3:
+        pods, data, model = devs.shape
+    else:
+        data, model = devs.shape
+        pods = 1
+    if tp is None:
+        tp = model
+    per_pod = data * model
+    if per_pod % (fl_sub * tp):
+        raise ValueError(f"fl_sub={fl_sub} * tp={tp} must divide the pod size"
+                         f" ({per_pod})")
+    fsdp = per_pod // (fl_sub * tp)
+    new = devs.reshape(pods * fl_sub, fsdp, tp)
+    return Mesh(new, ("fl", "fsdp", "tp"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

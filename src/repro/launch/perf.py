@@ -1,0 +1,97 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""§Perf hillclimb driver: re-extract roofline terms for named variants of
+the three selected (arch × shape) pairs and append to results/perf/log.json.
+
+Variants are config/flag switches (the code changes live in the library);
+each entry records hypothesis → change → before → after.
+
+Usage: python -m repro.launch.perf --pair llama3_train --variant int8_wire
+       python -m repro.launch.perf --list
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+PAIRS = {
+    "llama3_train": ("llama3-405b", "train_4k"),
+    "xlstm_prefill": ("xlstm-1.3b", "prefill_32k"),
+    "phi35_train": ("phi3.5-moe-42b-a6.6b", "train_4k"),
+}
+
+
+def measure(arch, shape, *, wire="f32", cfg_mutation=None, multi_pod=False):
+    from repro.launch.roofline import _compile_cost, _truncate
+    from repro.models.registry import get_config
+    from repro.roofline.analysis import extrapolate, roofline_terms
+
+    cfg = get_config(arch)
+    if cfg_mutation:
+        cfg = dataclasses.replace(cfg, **cfg_mutation)
+    from repro.launch import specs as SP
+
+    def compile_at(reps):
+        from repro.launch.specs import build_case
+        from repro.models import unroll
+        from repro.roofline.analysis import collective_bytes, cost_summary
+        case = build_case(arch, shape, multi_pod=multi_pod,
+                          cfg_override=_truncate(cfg, reps), k_local=1,
+                          microbatch=1, wire=wire)
+        jitted = jax.jit(case.fn, in_shardings=case.in_shardings)
+        with unroll.unrolled(), case.activation_ctx():
+            compiled = jitted.lower(*case.args).compile()
+        cost = cost_summary(compiled.cost_analysis())
+        coll = collective_bytes(compiled.as_text())
+        cost["collective_bytes"] = coll["total_bytes"]
+        for op, b in coll["bytes"].items():
+            cost[f"coll_{op}"] = b
+        return cost, case
+
+    c1, case = compile_at(1)
+    c2, _ = compile_at(2)
+    R = cfg.n_layers if cfg.encdec else cfg.n_layers / len(cfg.pattern)
+    full = extrapolate(c1, c2, R)
+    terms = roofline_terms(full["flops"], full["bytes_accessed"],
+                           full["collective_bytes"], chips=1)
+    return {"per_device": full, "terms": terms}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(PAIRS), required=False)
+    ap.add_argument("--wire", default="f32")
+    ap.add_argument("--label", default="baseline")
+    ap.add_argument("--capacity", type=float, default=None)
+    ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    arch, shape = PAIRS[args.pair]
+    mut = {}
+    if args.capacity is not None:
+        mut["capacity_factor"] = args.capacity
+    if args.window is not None:
+        mut["window"] = args.window
+    t0 = time.time()
+    rec = measure(arch, shape, wire=args.wire, cfg_mutation=mut or None,
+                  multi_pod=args.multi)
+    rec.update({"pair": args.pair, "label": args.label, "wire": args.wire,
+                "mutation": mut, "multi_pod": args.multi,
+                "dt": round(time.time() - t0, 1)})
+    os.makedirs(args.out, exist_ok=True)
+    log_path = os.path.join(args.out, "log.json")
+    log = json.load(open(log_path)) if os.path.exists(log_path) else []
+    log.append(rec)
+    json.dump(log, open(log_path, "w"), indent=2)
+    t = rec["terms"]
+    print(f"[perf] {args.pair} / {args.label}: "
+          f"compute={t['compute_s']:.3g}s memory={t['memory_s']:.3g}s "
+          f"collective={t['collective_s']:.3g}s dominant={t['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Roofline extraction for every supported (arch × shape) on the single-pod
+mesh (the §Roofline table) — plus optional multi-pod runs for the §Perf loop.
+
+Methodology (DESIGN.md §5): XLA counts scan bodies once, so we compile two
+cheap *unrolled* truncations of each model — 1 and 2 repeats of its layer
+pattern — diff them for the per-repeat cost, and extrapolate to full depth:
+
+    total = cost(1) + (R - 1) * (cost(2) - cost(1)),   R = n_layers / |pattern|
+
+Training cases are lowered with k_local=1 and microbatch=1 so every scan in
+the round has trip count 1 (the local-step count scales the compute term
+analytically downstream).  Collective bytes come from the compiled per-device
+HLO via the same diff.
+
+Usage:
+  python -m repro.launch.roofline --all [--out results/roofline]
+  python -m repro.launch.roofline --arch llama3-405b --shape train_4k
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+
+
+def _truncate(cfg, reps: int):
+    if cfg.encdec:
+        return dataclasses.replace(cfg, n_layers=reps, enc_layers=reps)
+    return dataclasses.replace(cfg, n_layers=reps * len(cfg.pattern))
+
+
+def _compile_cost(arch, shape_name, cfg_t, multi_pod):
+    from repro.launch.specs import build_case
+    from repro.models import unroll
+    from repro.roofline.analysis import collective_bytes, cost_summary
+
+    case = build_case(arch, shape_name, multi_pod=multi_pod,
+                      cfg_override=cfg_t, k_local=1, microbatch=1)
+    jitted = jax.jit(case.fn, in_shardings=case.in_shardings)
+    with unroll.unrolled(), case.activation_ctx():
+        lowered = jitted.lower(*case.args)
+    compiled = lowered.compile()
+    cost = cost_summary(compiled.cost_analysis())
+    coll = collective_bytes(compiled.as_text())
+    flat = dict(cost)
+    flat["collective_bytes"] = coll["total_bytes"]
+    for op, b in coll["bytes"].items():
+        flat[f"coll_{op}"] = b
+    return flat, case
+
+
+def roofline_case(arch: str, shape_name: str, multi_pod: bool = False) -> dict:
+    from repro.configs.base import INPUT_SHAPES
+    from repro.launch.specs import case_supported
+    from repro.models.registry import get_config
+    from repro.roofline.analysis import extrapolate, roofline_terms
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "multi(2,16,16)" if multi_pod else "single(16,16)"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    reason = case_supported(cfg, shape)
+    if reason:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    c1, case = _compile_cost(arch, shape_name, _truncate(cfg, 1), multi_pod)
+    c2, _ = _compile_cost(arch, shape_name, _truncate(cfg, 2), multi_pod)
+    R = (cfg.n_layers if cfg.encdec
+         else cfg.n_layers / len(cfg.pattern))
+    full = extrapolate(c1, c2, R)
+
+    chips = case.mesh.devices.size
+    # tokens processed by one step execution (k_local=1 for train lowers)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    n_active = cfg.param_count(active_only=True)
+    mf_coef = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mf_coef * n_active * tokens
+    hlo_flops_global = full["flops"] * chips
+
+    terms = roofline_terms(full["flops"], full["bytes_accessed"],
+                           full["collective_bytes"], chips=1,
+                           )  # per-device values already divide by chips
+    rec.update({
+        "status": "ok",
+        "dt": round(time.time() - t0, 1),
+        "repeats": R,
+        "chips": chips,
+        "per_device": full,
+        "terms": terms,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": model_flops / max(hlo_flops_global, 1.0),
+        "fl_axis": int(case.mesh.devices.shape[0]),
+    })
+    dom = terms["dominant"]
+    hints = {
+        "compute": "increase arithmetic efficiency (fuse/quantize compute or "
+                   "reduce remat recompute)",
+        "memory": "reduce bytes touched per step (bf16/int8 operands, fuse "
+                  "elementwise chains, larger tiles)",
+        "collective": "cut wire bytes (int8 QSGD wire, reduce-scatter "
+                      "decomposition, rarer syncs / larger K_n)",
+    }
+    rec["hint"] = hints[dom]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--out", default="results/roofline")
+    args = ap.parse_args()
+
+    from repro.configs.base import INPUT_SHAPES
+    from repro.models.registry import ARCH_IDS
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or args.shape is None)
+              else [args.shape])
+    os.makedirs(args.out, exist_ok=True)
+    results, failures = [], 0
+    for arch in archs:
+        for shape in shapes:
+            print(f"[roofline] {arch} x {shape}", flush=True)
+            try:
+                rec = roofline_case(arch, shape, multi_pod=args.multi)
+                if rec["status"] == "ok":
+                    t = rec["terms"]
+                    print(f"  compute={t['compute_s']*1e3:.2f}ms "
+                          f"memory={t['memory_s']*1e3:.2f}ms "
+                          f"collective={t['collective_s']*1e3:.2f}ms "
+                          f"dominant={t['dominant']} "
+                          f"useful={rec['useful_flops_ratio']:.2f}",
+                          flush=True)
+                else:
+                    print(f"  skipped: {rec['reason']}", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "status": "FAILED",
+                       "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            results.append(rec)
+    suffix = "_multi" if args.multi else ""
+    with open(os.path.join(args.out, f"summary{suffix}.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"\n[roofline] done: {sum(r['status']=='ok' for r in results)} ok, "
+          f"{failures} failed -> {args.out}/summary{suffix}.json")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,263 @@
+"""Abstract input construction for every (arch × input-shape × mesh) case.
+
+``build_case`` returns the step function + ShapeDtypeStruct inputs +
+shardings, without allocating anything — the dry-run lowers and compiles it.
+
+Shape kinds:
+  train   -> GenQSGD round (local-step scan + quantized fl aggregation)
+  prefill -> full-sequence forward, returns last-token logits + KV caches
+  decode  -> serve_step: ONE token against a seq_len-deep cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import INPUT_SHAPES, ArchConfig, InputShape
+from ..fed import sharding as SH
+from ..fed.runtime import FedConfig, make_round_fn
+from ..models.registry import get_config, model_api
+from .mesh import logical_mesh, make_production_mesh
+
+__all__ = ["build_case", "FL_SUB", "PARAM_DTYPE", "case_supported"]
+
+# Per-arch mesh plan: training layout (fl_sub, tp) — fl workers carved per
+# pod, tensor parallelism sized to d_model (tp=16 on a 2k-wide model would
+# replicate activations 16x) — and serving tp (sized so KV heads divide).
+# Giants keep fl_sub=1: their GenQSGD axis is the pod axis itself (multi-pod),
+# exactly the paper's slow-link topology.
+MESH_PLAN = {
+    #                       train(fl_sub, tp)  serve_tp
+    "qwen3-1.7b":            ((4, 4), 8),
+    "mistral-large-123b":    ((1, 16), 8),
+    "gemma3-4b":             ((4, 4), 4),
+    "qwen2-vl-7b":           ((2, 8), 4),
+    "olmoe-1b-7b":           ((4, 4), 16),
+    "llama3-405b":           ((1, 16), 8),
+    "xlstm-1.3b":            ((4, 4), 4),
+    "zamba2-2.7b":           ((4, 4), 16),
+    "whisper-tiny":          ((8, 1), 2),
+    "phi3.5-moe-42b-a6.6b":  ((2, 8), 8),
+}
+FL_SUB = {a: p[0][0] for a, p in MESH_PLAN.items()}
+
+# grad-accumulation microbatches per local step (activation memory / M)
+MICROBATCH = {
+    "llama3-405b": 8,
+    "mistral-large-123b": 4,
+    "phi3.5-moe-42b-a6.6b": 2,
+    "qwen2-vl-7b": 2,
+}
+
+# archs whose expert weights shard over tp only (see §Perf phi3.5 iterations)
+MOE_TP_ONLY = {"phi3.5-moe-42b-a6.6b"}
+
+# param dtype for the *dry-run* master copy (f32 unless memory-bound)
+PARAM_DTYPE = {
+    "llama3-405b": jnp.bfloat16,
+    "mistral-large-123b": jnp.bfloat16,
+    "phi3.5-moe-42b-a6.6b": jnp.bfloat16,
+}
+
+
+def case_supported(cfg: ArchConfig, shape: InputShape) -> Optional[str]:
+    """None if supported, else a human-readable skip reason."""
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        if cfg.encdec:
+            return ("enc-dec audio family: 512k decoder context is not "
+                    "meaningful (30 s audio, <=448 target positions)")
+        return ("pure full-attention arch: 512k decode skipped per brief "
+                "(no sliding-window/recurrent variant)")
+    return None
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _abstract_batch(cfg: ArchConfig, shape: InputShape, lead=()):
+    """Token batch ShapeDtypeStructs with the given leading dims."""
+    B = shape.global_batch
+    S = shape.seq_len
+    if lead:  # training: (fl, K) leading; per-worker batch slice
+        B = B // lead[0]
+    batch = {
+        "tokens": _sds(lead + (B, S), jnp.int32),
+        "labels": _sds(lead + (B, S), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        npatch = int(S * cfg.vision_patches_frac)
+        batch["patch_embeds"] = _sds(lead + (B, npatch, cfg.d_model),
+                                     jnp.bfloat16)
+        if lead:
+            batch["positions3"] = _sds(lead + (3, B, S), jnp.int32)
+        else:
+            batch["positions3"] = _sds((3, B, S), jnp.int32)
+    if cfg.encdec:
+        F = min(cfg.max_source_positions, S)
+        batch["frames"] = _sds(lead + (B, F, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@dataclasses.dataclass
+class Case:
+    arch: str
+    shape: InputShape
+    cfg: ArchConfig
+    mesh: Mesh            # logical (fl, fsdp, tp)
+    fn: Any               # function to jit
+    args: tuple           # abstract example args
+    in_shardings: tuple
+    donate: tuple = ()
+    fed: Optional[FedConfig] = None
+    act_sharding: Any = None   # (boundary, interior) for the residual stream
+
+    def activation_ctx(self):
+        from ..models import shardctx
+        b, i = self.act_sharding or (None, None)
+        moe = None
+        if self.cfg.n_experts:
+            moe = NamedSharding(self.mesh, P("tp", "fsdp", None))
+        return shardctx.activation_sharding(b, interior=i, moe=moe)
+
+
+def _act_sharding(lmesh: Mesh, cfg: ArchConfig, batch_local: int,
+                  seq: int, batch_axes) -> Optional[NamedSharding]:
+    """Sequence-parallel residual sharding P(batch_axes, tp, None) when the
+    dims divide; None otherwise (decode / tiny shapes)."""
+    sizes = dict(zip(lmesh.axis_names, lmesh.devices.shape))
+    tp = sizes.get("tp", 1)
+    b_ok = batch_axes is not None
+    s_ax = "tp" if (tp > 1 and seq % tp == 0) else None
+    if not b_ok and s_ax is None:
+        return None, None
+    boundary = NamedSharding(lmesh, P(batch_axes if b_ok else None, s_ax, None))
+    interior = NamedSharding(lmesh, P(batch_axes if b_ok else None, None, None))
+    return boundary, interior
+
+
+def build_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+               wire: str = "f32", k_local: int = 2,
+               mesh: Optional[Mesh] = None, fl_sub: Optional[int] = None,
+               param_dtype=None, smoke: bool = False,
+               cfg_override: Optional[ArchConfig] = None,
+               microbatch: Optional[int] = None) -> Case:
+    cfg = cfg_override or get_config(arch, smoke=smoke)
+    shape = INPUT_SHAPES[shape_name]
+    reason = case_supported(cfg, shape)
+    if reason:
+        raise ValueError(f"{arch} x {shape_name} unsupported: {reason}")
+    api = model_api(cfg)
+    pdtype = param_dtype or PARAM_DTYPE.get(arch, jnp.float32)
+    if mesh is None:
+        pmesh = make_production_mesh(multi_pod=multi_pod)
+    else:
+        pmesh = mesh
+
+    if shape.kind == "train":
+        plan = MESH_PLAN.get(arch, ((4, 4), 8))
+        fsub = fl_sub or plan[0][0]
+        tp = plan[0][1] if fl_sub is None else None
+        lmesh = (logical_mesh(pmesh, fl_sub=fsub, tp=tp)
+                 if mesh is None else mesh)
+        fl = lmesh.devices.shape[0]
+        mb = microbatch if microbatch is not None else MICROBATCH.get(arch, 1)
+        # heterogeneous per-worker K_n (alternating) when fl > 1 — exercises
+        # the paper's virtual-local-update masking (eqs. (6)-(8)) in the
+        # production lowering
+        kn = (tuple((k_local + (i % 2)) for i in range(fl)) if fl > 1
+              else (k_local,) * fl)
+        fed = FedConfig(n_workers=fl, Kn=kn, s0=64, sn=64,
+                        wire=wire, microbatch=mb)
+        fsdp_w = True  # tp-only weights measured strictly worse (§Perf)
+        mtp = arch in MOE_TP_ONLY
+        params = api.abstract_params(cfg, dtype=pdtype)
+        pspecs = SH.param_specs(params, lmesh, fsdp_weights=fsdp_w,
+                                moe_tp_only=mtp)
+        batch = _abstract_batch(cfg, shape, lead=(fl, fed.K_max))
+        bspecs = SH.batch_specs(batch, lmesh, "fl_train")
+        round_fn = make_round_fn(api, cfg, fed, lmesh, fsdp_weights=fsdp_w,
+                                 moe_tp_only=mtp)
+        args = (
+            jax.tree.map(lambda s, sp: _sds(s.shape, s.dtype,
+                                            NamedSharding(lmesh, sp)),
+                         params, pspecs),
+            jax.tree.map(lambda s, sp: _sds(s.shape, s.dtype,
+                                            NamedSharding(lmesh, sp)),
+                         batch, bspecs),
+            _sds((2,), jnp.uint32),
+            _sds((), jnp.float32),
+        )
+        in_sh = (SH.shardings(pspecs, lmesh), SH.shardings(bspecs, lmesh),
+                 None, None)
+        sizes = dict(zip(lmesh.axis_names, lmesh.devices.shape))
+        b_loc = shape.global_batch // fl
+        act = _act_sharding(
+            lmesh, cfg, b_loc, shape.seq_len,
+            "fsdp" if (sizes.get("fsdp", 1) > 1
+                       and b_loc % sizes["fsdp"] == 0) else None)
+        return Case(arch, shape, cfg, lmesh, round_fn, args, in_sh, fed=fed,
+                    act_sharding=act)
+
+    # ------- inference shapes: no fl grouping (fl folds into batch axes) ----
+    serve_tp = MESH_PLAN.get(arch, ((4, 4), 8))[1]
+    if shape.kind == "prefill":
+        # prefill batch (32) must divide fl*fsdp or activations replicate
+        # (measured: batch-replicated xlstm prefill, 53x compute) — tp=8
+        # gives fsdp=32 on one pod.
+        serve_tp = 8
+    lmesh = (logical_mesh(pmesh, fl_sub=1, tp=serve_tp)
+             if mesh is None else mesh)
+    # tp-only experts is a TRAINING win (fsdp partial-k all-reduces on the
+    # expert einsums); for inference it measured 3x WORSE — keep fsdp here.
+    params = api.abstract_params(cfg, dtype=jnp.bfloat16)
+    pspecs = SH.param_specs(params, lmesh)
+    pshard = SH.shardings(pspecs, lmesh)
+    p_sds = jax.tree.map(lambda s, sp: _sds(s.shape, s.dtype,
+                                            NamedSharding(lmesh, sp)),
+                         params, pspecs)
+
+    if shape.kind == "prefill":
+        batch = _abstract_batch(cfg, shape)
+        bspecs = SH.batch_specs(batch, lmesh, "serve")
+        b_sds = jax.tree.map(lambda s, sp: _sds(s.shape, s.dtype,
+                                                NamedSharding(lmesh, sp)),
+                             batch, bspecs)
+
+        def prefill_fn(p, b):
+            return api.prefill(p, cfg, b, cache_len=shape.seq_len)
+
+        act = _act_sharding(lmesh, cfg, shape.global_batch, shape.seq_len,
+                            SH._batch_axes(
+                                dict(zip(lmesh.axis_names,
+                                         lmesh.devices.shape)),
+                                shape.global_batch))
+        return Case(arch, shape, cfg, lmesh, prefill_fn, (p_sds, b_sds),
+                    (pshard, SH.shardings(bspecs, lmesh)), act_sharding=act)
+
+    # decode
+    B = shape.global_batch
+    caches = jax.eval_shape(
+        lambda: api.init_caches(cfg, B, shape.seq_len, dtype=jnp.bfloat16))
+    cspecs = SH.cache_specs(caches, lmesh, cfg, B)
+    c_sds = jax.tree.map(lambda s, sp: _sds(s.shape, s.dtype,
+                                            NamedSharding(lmesh, sp)),
+                         caches, cspecs)
+    tok_spec = SH.batch_specs({"tokens": _sds((B, 1), jnp.int32)}, lmesh,
+                              "serve")["tokens"]
+    tok = _sds((B, 1), jnp.int32, NamedSharding(lmesh, tok_spec))
+    pos = _sds((B, 1), jnp.int32, NamedSharding(lmesh, tok_spec))
+
+    def serve_step(p, t, c, po):
+        return api.decode_step(p, cfg, t, c, po)
+
+    return Case(arch, shape, cfg, lmesh, serve_step,
+                (p_sds, tok, c_sds, pos),
+                (pshard, NamedSharding(lmesh, tok_spec),
+                 SH.shardings(cspecs, lmesh), NamedSharding(lmesh, tok_spec)))

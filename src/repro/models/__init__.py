@@ -1,0 +1,1 @@
+from .registry import ARCH_IDS, get_config, model_api, all_configs

@@ -1,0 +1,245 @@
+"""Transformer building blocks: norms, RoPE / M-RoPE, GQA attention, MLP.
+
+Functional style: ``*_init(key, cfg) -> params`` builds ONE layer's params;
+stacking for `lax.scan` happens in :mod:`repro.models.lm` via vmapped inits.
+
+Attention is query-chunked (no S×S mask materialization) so 32k-sequence
+shapes lower with bounded temporaries; decode takes a dense or ring-buffer
+(sliding-window) KV cache.  With a sequence-sharded cache the softmax
+reduction over S is partitioned by GSPMD (collectives inserted by XLA).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import unroll
+
+Q_CHUNK = 1024  # query chunk for attention score tiles
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)) * w + b).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE and M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / theta ** (jnp.arange(0, d_head // 2, dtype=jnp.float32)
+                           / (d_head // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, dh); positions: (B, S) int."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B,S,dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections):
+    """Multimodal RoPE (qwen2-vl): positions3 (3, B, S) = (t, h, w) streams;
+    the dh/2 frequency bands are split into ``sections`` consuming different
+    position streams."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (dh/2,)
+    secs = np.asarray(sections)
+    assert secs.sum() == dh // 2, (sections, dh)
+    # stream id per frequency band
+    sid = np.repeat(np.arange(3), secs)               # (dh/2,)
+    pos = positions3[sid]                             # (dh/2, B, S) gathered
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * inv  # (B,S,dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * dh, dtype),
+        "wk": dense_init(ks[1], D, KV * dh, dtype),
+        "wv": dense_init(ks[2], D, KV * dh, dtype),
+        "wo": dense_init(ks[3], H * dh, D, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q = (x @ p["wq"]).reshape(B, S, H, dh)
+    k = (x @ p["wk"]).reshape(B, S, KV, dh)
+    v = (x @ p["wv"]).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa_chunk(q, k, v, q_pos, k_pos, window: Optional[int], causal: bool,
+                k_valid=None):
+    """q: (B,Q,KV,G,dh)  k/v: (B,S,KV,dh) -> (B,Q,KV,G,dh).
+
+    Bias is built from position vectors (no S×S global mask).
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / np.sqrt(dh)
+    if causal:
+        m = k_pos[:, None, :] <= q_pos[:, :, None]          # (B,Q,S)
+        if window is not None:
+            m &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    else:
+        m = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]),
+                     dtype=bool)
+    if k_valid is not None:
+        m &= k_valid[:, None, :]
+    scores = jnp.where(m[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v)
+    return out
+
+
+def attn_apply(p, x, cfg: ArchConfig, positions, *, window=None,
+               causal: bool = True):
+    """Full-sequence attention (train / prefill), query-chunked.
+
+    Returns (y, (k, v)) — k/v handed to the cache builder in prefill.
+    """
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    G = H // KV
+    rope_pos = positions
+    q, k, v = _qkv(p, x, cfg, rope_pos)
+    q = q.reshape(B, S, KV, G, dh)
+    tok_pos = positions[0] if cfg.mrope else positions   # (B,S) temporal order
+    n_chunks = max(1, S // Q_CHUNK)
+    if S % Q_CHUNK == 0 and n_chunks > 1:
+        qc = q.reshape(B, n_chunks, Q_CHUNK, KV, G, dh)
+        pc = tok_pos.reshape(B, n_chunks, Q_CHUNK)
+
+        if unroll.enabled():
+            outs = [_sdpa_chunk(qc[:, i], k, v, pc[:, i], tok_pos, window,
+                                causal) for i in range(n_chunks)]
+            out = jnp.stack(outs, axis=1).reshape(B, S, H * dh)
+        else:
+            # checkpoint each chunk: backward recomputes that chunk's scores
+            # instead of keeping all chunks' f32 score tiles live (flash-
+            # attention-style memory behaviour from plain XLA).
+            ck_chunk = jax.checkpoint(
+                lambda qq, pp, kk, vv: _sdpa_chunk(qq, kk, vv, pp, tok_pos,
+                                                   window, causal))
+
+            def body(_, args):
+                qq, pp = args
+                return None, ck_chunk(qq, pp, k, v)
+
+            _, out = jax.lax.scan(
+                body, None,
+                (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(pc, 1, 0)))
+            out = jnp.moveaxis(out, 0, 1).reshape(B, S, H * dh)
+    else:
+        out = _sdpa_chunk(q, k, v, tok_pos, tok_pos, window, causal)
+        out = out.reshape(B, S, H * dh)
+    y = out @ p["wo"]
+    return y, (k, v)
+
+
+def attn_decode(p, x, cfg: ArchConfig, positions, cache, *, window=None):
+    """Single-token decode against a dense or ring-buffer KV cache.
+
+    cache: {"k": (B, C, KV, dh), "v": ..., "pos": (B, C) int32 positions of
+    cached entries (-1 = empty), "idx": (B,) per-row write cursors (per-row
+    so batched serving slots at different depths stay correct)}.
+    For a sliding-window cache C == window and writes wrap around.
+    """
+    B, S, D = x.shape
+    assert S == 1
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    G = H // KV
+    q, k, v = _qkv(p, x, cfg, positions)
+    C = cache["k"].shape[1]
+    rows = jnp.arange(B)
+    slot = cache["idx"] % C                                   # (B,)
+    ck = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+    tok_pos = positions[0] if cfg.mrope else positions
+    cpos = cache["pos"].at[rows, slot].set(tok_pos[:, 0].astype(jnp.int32))
+    valid = cpos >= 0
+    out = _sdpa_chunk(q.reshape(B, 1, KV, G, dh), ck, cv, tok_pos, cpos,
+                      window, causal=True, k_valid=valid)
+    y = out.reshape(B, 1, H * dh) @ p["wo"]
+    new_cache = {"k": ck, "v": cv, "pos": cpos, "idx": cache["idx"] + 1}
+    return y, new_cache
+
+
+def make_cache(cfg: ArchConfig, batch: int, length: int, kv_heads=None,
+               dtype=jnp.bfloat16):
+    KV = kv_heads or cfg.n_kv
+    return {
+        "k": jnp.zeros((batch, length, KV, cfg.d_head), dtype),
+        "v": jnp.zeros((batch, length, KV, cfg.d_head), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ArchConfig, d_ff=None, dtype=jnp.float32):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], D, F, dtype),
+        "w_up": dense_init(ks[1], D, F, dtype),
+        "w_down": dense_init(ks[2], F, D, dtype),
+    }
+
+
+def mlp_apply(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]

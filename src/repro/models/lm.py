@@ -1,0 +1,454 @@
+"""Unified decoder-only LM over heterogeneous block stacks.
+
+The layer list (``cfg.layer_types``) is segmented into maximal runs of equal
+block type; each segment's per-layer params are stacked on a leading axis and
+applied with ``lax.scan`` — full-size HLO stays small (one body per segment)
+and 100B+ configs lower abstractly.
+
+Supported block types:
+  attn         full-attention + dense MLP           (qwen3 / mistral / llama3 / qwen2-vl)
+  local        sliding-window attention + dense MLP (gemma3)
+  global       full-attention + dense MLP           (gemma3's 1-in-6 layers)
+  attn_moe     full-attention + MoE MLP             (olmoe / phi3.5-moe)
+  mamba2       Mamba2 SSD mixer                     (zamba2)
+  shared_attn  zamba2's weight-shared attention+MLP block (one param set,
+               per-invocation input norm)
+  mlstm/slstm  xLSTM blocks
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import blocks as B
+from . import shardctx
+from . import unroll
+from . import mamba2 as M2
+from . import moe as MOE
+from . import xlstm as XL
+
+__all__ = ["init_params", "abstract_params", "loss_train", "prefill",
+           "decode_step", "init_caches", "forward_hidden"]
+
+LOSS_CHUNK = 512  # sequence chunk for the vocab-projection loss
+
+ATTN_TYPES = ("attn", "local", "global", "attn_moe", "shared_attn")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _block_init(key, btype: str, cfg: ArchConfig, dtype):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if btype in ("attn", "local", "global"):
+        return {"ln1": jnp.ones((D,), dtype),
+                "attn": B.attn_init(ks[0], cfg, dtype),
+                "ln2": jnp.ones((D,), dtype),
+                "mlp": B.mlp_init(ks[1], cfg, dtype=dtype)}
+    if btype == "attn_moe":
+        return {"ln1": jnp.ones((D,), dtype),
+                "attn": B.attn_init(ks[0], cfg, dtype),
+                "ln2": jnp.ones((D,), dtype),
+                "moe": MOE.moe_init(ks[1], cfg, dtype)}
+    if btype == "mamba2":
+        return {"ln1": jnp.ones((D,), dtype),
+                "mamba": M2.mamba2_init(ks[0], cfg, dtype)}
+    if btype == "shared_attn":
+        # per-invocation params only; the weight-shared body lives in
+        # params["shared"]
+        return {"ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype)}
+    if btype == "mlstm":
+        return {"ln1": jnp.ones((D,), dtype),
+                "mlstm": XL.mlstm_init(ks[0], cfg, dtype)}
+    if btype == "slstm":
+        return {"ln1": jnp.ones((D,), dtype),
+                "slstm": XL.slstm_init(ks[0], cfg, dtype)}
+    raise ValueError(f"unknown block type {btype!r}")
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, len(cfg.segments) + 3)
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32)
+                  / np.sqrt(cfg.d_model)).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "segments": [],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = B.dense_init(ks[1], cfg.d_model, cfg.vocab, dtype)
+    if any(t == "shared_attn" for t, _ in cfg.segments):
+        params["shared"] = {
+            "attn": B.attn_init(jax.random.fold_in(ks[2], 1), cfg, dtype),
+            "mlp": B.mlp_init(jax.random.fold_in(ks[2], 2), cfg, dtype=dtype),
+        }
+    for i, (btype, count) in enumerate(cfg.segments):
+        seg_keys = jax.random.split(ks[3 + i] if 3 + i < len(ks)
+                                    else jax.random.fold_in(key, 1000 + i),
+                                    count)
+        params["segments"].append(
+            jax.vmap(lambda k: _block_init(k, btype, cfg, dtype))(seg_keys))
+    return params
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# block application (train / prefill path)
+# ---------------------------------------------------------------------------
+def _block_apply(p, h, btype, cfg: ArchConfig, positions, shared, aux):
+    _in = shardctx.constrain_interior
+    if btype in ("attn", "local", "global", "attn_moe"):
+        window = cfg.window if btype == "local" else None
+        a, _ = B.attn_apply({**p["attn"]},
+                            _in(B.rmsnorm(h, p["ln1"], cfg.norm_eps)),
+                            cfg, positions, window=window)
+        h = h + a
+        x2 = shardctx.constrain_interior_mlp(
+            B.rmsnorm(h, p["ln2"], cfg.norm_eps))
+        if btype == "attn_moe":
+            y, probs = MOE.moe_apply(p["moe"], x2, cfg)
+            aux = aux + MOE.router_aux_loss(probs)
+        else:
+            y = B.mlp_apply(p["mlp"], x2)
+        return h + y, aux
+    if btype == "mamba2":
+        return h + M2.mamba2_apply(p["mamba"],
+                                   _in(B.rmsnorm(h, p["ln1"], cfg.norm_eps)),
+                                   cfg), aux
+    if btype == "shared_attn":
+        a, _ = B.attn_apply(shared["attn"],
+                            _in(B.rmsnorm(h, p["ln1"], cfg.norm_eps)),
+                            cfg, positions)
+        h = h + a
+        y = B.mlp_apply(shared["mlp"],
+                        _in(B.rmsnorm(h, p["ln2"], cfg.norm_eps)))
+        return h + y, aux
+    if btype == "mlstm":
+        return h + XL.mlstm_apply(p["mlstm"],
+                                  _in(B.rmsnorm(h, p["ln1"], cfg.norm_eps)),
+                                  cfg), aux
+    if btype == "slstm":
+        return h + XL.slstm_apply(p["slstm"],
+                                  _in(B.rmsnorm(h, p["ln1"], cfg.norm_eps)),
+                                  cfg), aux
+    raise ValueError(btype)
+
+
+def _group_factor(count: int) -> int:
+    """Divisor of ``count`` nearest sqrt(count) (2-level remat split)."""
+    best, target = 1, count ** 0.5
+    for g in range(1, count + 1):
+        if count % g == 0 and abs(g - target) < abs(best - target):
+            best = g
+    return best
+
+
+def forward_hidden(params, cfg: ArchConfig, h, positions,
+                   unroll_segments: bool = False):
+    """Run the block stack on embeddings h: (B, S, D) -> (h, aux_loss)."""
+    shared = params.get("shared")
+    aux = jnp.zeros((), jnp.float32)
+    h = shardctx.constrain(h)
+    for (btype, count), seg_p in zip(cfg.segments, params["segments"]):
+        if count == 1 or unroll_segments or unroll.enabled():
+            for j in range(count):
+                pj = jax.tree.map(lambda a: a[j], seg_p)
+                h, aux = _block_apply(pj, h, btype, cfg, positions, shared, aux)
+                h = shardctx.constrain(h)
+        else:
+            # remat the block body: the backward pass recomputes per-layer
+            # intermediates instead of saving them across the layer scan.
+            ck = jax.checkpoint(
+                lambda pl, hh, ax, pos, sh: _block_apply(
+                    pl, hh, btype, cfg, pos, sh, ax),
+                static_argnums=())
+
+            def body(carry, pl, btype=btype, ck=ck):
+                hh, ax = carry
+                hh, ax = ck(pl, hh, ax, positions, shared)
+                hh = shardctx.constrain(hh)
+                return (hh, ax), None
+
+            if count >= 16:
+                # two-level (sqrt-L) remat: scan groups of layers, each group
+                # itself checkpointed — peak saved carries ~ G + count/G.
+                G = _group_factor(count)
+                seg2 = jax.tree.map(
+                    lambda a: a.reshape((G, count // G) + a.shape[1:]), seg_p)
+                group = jax.checkpoint(
+                    lambda carry, grp: jax.lax.scan(body, carry, grp)[0])
+
+                def outer(carry, grp):
+                    return group(carry, grp), None
+
+                (h, aux), _ = jax.lax.scan(outer, (h, aux), seg2)
+            else:
+                (h, aux), _ = jax.lax.scan(body, (h, aux), seg_p)
+    h = B.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+def _embed(params, cfg: ArchConfig, batch):
+    tokens = batch["tokens"]
+    h = params["embed"][tokens]
+    if "patch_embeds" in batch:   # VLM: overwrite the image-token span
+        n_patch = batch["patch_embeds"].shape[1]
+        h = jnp.concatenate(
+            [batch["patch_embeds"].astype(h.dtype), h[:, n_patch:]], axis=1)
+    return h
+
+
+def _positions(cfg: ArchConfig, batch):
+    if cfg.mrope:
+        return batch["positions3"]
+    tokens = batch["tokens"]
+    Bt, S = tokens.shape
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (Bt, S))
+
+
+def _logits(params, cfg: ArchConfig, h):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head
+
+
+def loss_train(params, cfg: ArchConfig, batch, aux_weight: float = 0.01):
+    """Causal-LM cross entropy, sequence-chunked vocab projection."""
+    h = _embed(params, cfg, batch)
+    pos = _positions(cfg, batch)
+    h, aux = forward_hidden(params, cfg, h, pos)
+    labels = batch["labels"]
+    Bt, S, D = h.shape
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    n_chunks = max(1, S // LOSS_CHUNK)
+    if S % LOSS_CHUNK == 0 and n_chunks > 1:
+        hc = jnp.moveaxis(h.reshape(Bt, n_chunks, LOSS_CHUNK, D), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(Bt, n_chunks, LOSS_CHUNK), 1, 0)
+
+        @jax.checkpoint
+        def _chunk_ce(hh, ll):
+            logits = (hh @ head).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+            return (logz - gold).sum()
+
+        def body(acc, args):
+            hh, ll = args
+            return acc + _chunk_ce(hh, ll), None
+
+        if unroll.enabled():
+            total = jnp.zeros((), jnp.float32)
+            for i in range(n_chunks):
+                total, _ = body(total, (hc[i], lc[i]))
+        else:
+            total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                    (hc, lc))
+    else:
+        logits = (h @ head).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        total = (logz - gold).sum()
+    return total / (Bt * S) + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# caches / decode
+# ---------------------------------------------------------------------------
+def _block_cache(btype: str, cfg: ArchConfig, batch: int, length: int, dtype):
+    if btype in ("attn", "global", "attn_moe", "shared_attn"):
+        return B.make_cache(cfg, batch, length, dtype=dtype)
+    if btype == "local":
+        return B.make_cache(cfg, batch, min(cfg.window, length), dtype=dtype)
+    if btype == "mamba2":
+        return M2.make_ssm_state(cfg, batch, dtype)
+    if btype == "mlstm":
+        return XL.make_mlstm_state(cfg, batch)
+    if btype == "slstm":
+        return XL.make_slstm_state(cfg, batch)
+    raise ValueError(btype)
+
+
+def init_caches(cfg: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    """One stacked cache pytree per segment."""
+    caches = []
+    for btype, count in cfg.segments:
+        one = _block_cache(btype, cfg, batch, length, dtype)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (count,) + a.shape), one))
+    return caches
+
+
+def _block_decode(p, h, cache, btype, cfg: ArchConfig, positions, shared):
+    if btype in ("attn", "local", "global", "attn_moe"):
+        window = cfg.window if btype == "local" else None
+        a, cache = B.attn_decode(p["attn"],
+                                 B.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                                 cfg, positions, cache, window=window)
+        h = h + a
+        x2 = B.rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if btype == "attn_moe":
+            y, _ = MOE.moe_apply(p["moe"], x2, cfg)
+        else:
+            y = B.mlp_apply(p["mlp"], x2)
+        return h + y, cache
+    if btype == "shared_attn":
+        a, cache = B.attn_decode(shared["attn"],
+                                 B.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                                 cfg, positions, cache)
+        h = h + a
+        y = B.mlp_apply(shared["mlp"], B.rmsnorm(h, p["ln2"], cfg.norm_eps))
+        return h + y, cache
+    if btype == "mamba2":
+        y, cache = M2.mamba2_decode(p["mamba"],
+                                    B.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                                    cfg, cache)
+        return h + y, cache
+    if btype == "mlstm":
+        y, cache = XL.mlstm_decode(p["mlstm"],
+                                   B.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                                   cfg, cache)
+        return h + y, cache
+    if btype == "slstm":
+        y, cache = XL.slstm_decode(p["slstm"],
+                                   B.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                                   cfg, cache)
+        return h + y, cache
+    raise ValueError(btype)
+
+
+def decode_step(params, cfg: ArchConfig, token, caches, pos):
+    """One decode step.  token: (B, 1) int32; pos: (B, 1) int32 positions.
+
+    Returns (logits (B, vocab), new_caches).
+    """
+    h = params["embed"][token]
+    positions = (jnp.broadcast_to(pos[None], (3,) + pos.shape)
+                 if cfg.mrope else pos)
+    shared = params.get("shared")
+    new_caches = []
+    for (btype, count), seg_p, cache in zip(cfg.segments, params["segments"],
+                                            caches):
+        if count == 1:
+            p0 = jax.tree.map(lambda a: a[0], seg_p)
+            c0 = jax.tree.map(lambda a: a[0], cache)
+            h, c0 = _block_decode(p0, h, c0, btype, cfg, positions, shared)
+            new_caches.append(jax.tree.map(lambda a: a[None], c0))
+        else:
+            def body(hh, xs, btype=btype):
+                pl, cl = xs
+                hh, cl = _block_decode(pl, hh, cl, btype, cfg, positions,
+                                       shared)
+                return hh, cl
+            if unroll.enabled():
+                outs = []
+                for j in range(count):
+                    h, cj = body(h, (jax.tree.map(lambda a: a[j], seg_p),
+                                     jax.tree.map(lambda a: a[j], cache)))
+                    outs.append(cj)
+                cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            else:
+                h, cache = jax.lax.scan(body, h, (seg_p, cache))
+            new_caches.append(cache)
+    h = B.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h)[:, 0]
+    return logits, new_caches
+
+
+def prefill(params, cfg: ArchConfig, batch, cache_len: Optional[int] = None,
+            cache_dtype=jnp.bfloat16):
+    """Full-sequence forward returning last-token logits + populated caches.
+
+    For lowering-oriented use the caches are built by re-running attention
+    blocks' K/V (structurally identical to incremental fill).
+    """
+    h = _embed(params, cfg, batch)
+    pos = _positions(cfg, batch)
+    Bt, S, _ = h.shape
+    cache_len = cache_len or S
+    shared = params.get("shared")
+    caches = []
+    aux = jnp.zeros((), jnp.float32)
+    tok_pos = pos[0] if cfg.mrope else pos
+    for (btype, count), seg_p in zip(cfg.segments, params["segments"]):
+        def body(carry, pl, btype=btype):
+            hh, ax = carry
+            hh, ax, cache = _block_apply_with_cache(
+                pl, hh, btype, cfg, pos, tok_pos, shared, ax, cache_len,
+                cache_dtype)
+            hh = shardctx.constrain(hh)
+            return (hh, ax), cache
+        if unroll.enabled():
+            per_layer = []
+            for j in range(count):
+                (h, aux), c = body((h, aux),
+                                   jax.tree.map(lambda a: a[j], seg_p))
+                per_layer.append(c)
+            cache = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+        else:
+            (h, aux), cache = jax.lax.scan(body, (h, aux), seg_p)
+        caches.append(cache)
+    h = B.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def _block_apply_with_cache(p, h, btype, cfg, positions, tok_pos, shared, aux,
+                            cache_len, cache_dtype):
+    _in = shardctx.constrain_interior
+    if btype in ATTN_TYPES:
+        window = cfg.window if btype == "local" else None
+        attn_p = shared["attn"] if btype == "shared_attn" else p["attn"]
+        a, (k, v) = B.attn_apply(attn_p,
+                                 _in(B.rmsnorm(h, p["ln1"], cfg.norm_eps)),
+                                 cfg, positions, window=window)
+        h = h + a
+        x2 = _in(B.rmsnorm(h, p["ln2"], cfg.norm_eps))
+        if btype == "attn_moe":
+            y, probs = MOE.moe_apply(p["moe"], x2, cfg)
+            aux = aux + MOE.router_aux_loss(probs)
+        elif btype == "shared_attn":
+            y = B.mlp_apply(shared["mlp"], x2)
+        else:
+            y = B.mlp_apply(p["mlp"], x2)
+        h = h + y
+        S = k.shape[1]
+        C = min(cache_len, window) if window else cache_len
+        if S >= C:  # keep the last C entries
+            ck, cv, cp = k[:, S - C:], v[:, S - C:], tok_pos[:, S - C:]
+        else:
+            padk = jnp.zeros((k.shape[0], C - S) + k.shape[2:], k.dtype)
+            ck = jnp.concatenate([k, padk], 1)
+            cv = jnp.concatenate([v, padk], 1)
+            cp = jnp.concatenate(
+                [tok_pos, jnp.full((k.shape[0], C - S), -1, tok_pos.dtype)], 1)
+        cache = {"k": ck.astype(cache_dtype), "v": cv.astype(cache_dtype),
+                 "pos": cp.astype(jnp.int32),
+                 "idx": jnp.full((h.shape[0],), S % C if window else S,
+                                 jnp.int32)}
+        return h, aux, cache
+    if btype == "mamba2":
+        y, st = M2.mamba2_apply(p["mamba"],
+                                B.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                                cfg, return_state=True)
+        return h + y, aux, st
+    if btype == "mlstm":
+        y, st = XL.mlstm_apply(p["mlstm"],
+                               B.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                               cfg, return_state=True)
+        return h + y, aux, st
+    if btype == "slstm":
+        y, st = XL.slstm_apply(p["slstm"],
+                               B.rmsnorm(h, p["ln1"], cfg.norm_eps),
+                               cfg, return_state=True)
+        return h + y, aux, st
+    raise ValueError(btype)

@@ -1,0 +1,177 @@
+"""Mamba2 (SSD — state-space duality) mixer: chunked parallel scan for
+training/prefill and an O(1) recurrent state update for decode.
+
+Follows the "minimal mamba2" formulation with a single B/C group:
+  h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T      (per head h)
+  y_t = C_t . h_t + D_h * x_t
+with x projected to (H, P) heads, A scalar per head, B/C of size N=ssm_state.
+Training computes the same recurrence chunk-parallel: intra-chunk "attention"
+term + inter-chunk state carry (lax.scan over chunks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from .blocks import dense_init, rmsnorm
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode", "make_ssm_state",
+           "mamba2_dims"]
+
+CHUNK = 128
+
+
+def mamba2_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    D = cfg.d_model
+    di, H, P, N = mamba2_dims(cfg)
+    ks = jax.random.split(key, 5)
+    conv_ch = di + 2 * N
+    return {
+        # projections for z (gate), x, B, C, dt
+        "in_proj": dense_init(ks[0], D, 2 * di + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   / np.sqrt(cfg.ssm_conv)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)
+                         .clip(1.0, 16.0)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, D, dtype),
+    }
+
+
+def _split_proj(p, x, cfg):
+    di, H, P, N = mamba2_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di:2 * di]
+    Bc = zxbcdt[..., 2 * di:2 * di + N]
+    Cc = zxbcdt[..., 2 * di + N:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(seq, w, b):
+    """Depthwise causal conv: seq (B,S,C), w (W,C)."""
+    W = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + seq.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _segsum_exp(dA_cum):
+    """L[.., i, j] = exp(dA_cum[.., i] - dA_cum[.., j]) for i >= j else 0.
+
+    dA_cum: (..., Q); returns (..., Q, Q).
+    """
+    Q = dA_cum.shape[-1]
+    diff = dA_cum[..., :, None] - dA_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: masked (upper-triangle) diffs are positive and large,
+    # and exp-overflow would leak NaN through the where() backward pass.
+    return jnp.exp(jnp.where(mask, diff, -1e30))
+
+
+def mamba2_apply(p, x, cfg: ArchConfig, return_state: bool = False):
+    """x: (B, S, D) -> y: (B, S, D).  S must be a multiple of CHUNK or < CHUNK."""
+    B, S, D = x.shape
+    di, H, P, N = mamba2_dims(cfg)
+    z, xin, Bc, Cc, dt = _split_proj(p, x, cfg)
+    cin = jnp.concatenate([xin, Bc, Cc], -1)
+    conv = jax.nn.silu(_causal_conv(cin, p["conv_w"], p["conv_b"]))
+    xin, Bc, Cc = conv[..., :di], conv[..., di:di + N], conv[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    xh = xin.reshape(B, S, H, P)
+
+    Q = CHUNK if S % CHUNK == 0 else S
+    Nc = S // Q
+    xq = xh.reshape(B, Nc, Q, H, P)
+    dtq = dt.reshape(B, Nc, Q, H)
+    Bq = Bc.reshape(B, Nc, Q, N).astype(jnp.float32)
+    Cq = Cc.reshape(B, Nc, Q, N).astype(jnp.float32)
+    dA = dtq * A                                                  # (B,Nc,Q,H)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # --- intra-chunk (diagonal blocks) --------------------------------------
+    L = _segsum_exp(jnp.moveaxis(dA_cum, -1, 2))                  # (B,Nc,H,Q,Q)
+    att = jnp.einsum("bcqn,bckn->bcqk", Cq, Bq)                   # (B,Nc,Q,Q)
+    xdt = xq * dtq[..., None]                                     # (B,Nc,Q,H,P)
+    y_diag = jnp.einsum("bchqk,bcqk,bckhp->bcqhp",
+                        L, att, xdt.astype(jnp.float32))
+
+    # --- inter-chunk state carry ---------------------------------------------
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)         # (B,Nc,Q,H)
+    chunk_states = jnp.einsum("bckn,bckh,bckhp->bcnhp",
+                              Bq, decay_to_end, xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                    # (B,Nc,H)
+
+    def carry_fn(h, inp):
+        cs, cd = inp                                              # per chunk
+        h_new = h * cd[:, None, :, None] + cs
+        return h_new, h                                           # emit state *before* chunk
+
+    init = jnp.zeros((B, N, H, P), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        carry_fn, init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                 # (B,Nc,N,H,P)
+
+    decay_from_start = jnp.exp(dA_cum)                            # (B,Nc,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bcnhp->bcqhp",
+                       Cq, decay_from_start, prev_states)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        # conv tail: last ssm_conv-1 pre-activation channel inputs
+        tail = cin[:, S - (cfg.ssm_conv - 1):]
+        return out, {"h": final_state, "conv": tail}
+    return out
+
+
+def make_ssm_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, H, P, N = mamba2_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, N, H, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+    }
+
+
+def mamba2_decode(p, x, cfg: ArchConfig, state):
+    """Single-token step.  x: (B, 1, D); state from make_ssm_state."""
+    B, S, D = x.shape
+    assert S == 1
+    di, H, P, N = mamba2_dims(cfg)
+    z, xin, Bc, Cc, dt = _split_proj(p, x, cfg)
+    cin = jnp.concatenate([xin, Bc, Cc], -1)                      # (B,1,C)
+    window = jnp.concatenate([state["conv"], cin], axis=1)        # (B,W,C)
+    conv = jax.nn.silu((window * p["conv_w"]).sum(axis=1) + p["conv_b"])
+    xin, Bc, Cc = (conv[..., :di], conv[..., di:di + N],
+                   conv[..., di + N:])
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    dA = jnp.exp(dt * A)                                          # (B,H)
+    h = state["h"] * dA[:, None, :, None] \
+        + jnp.einsum("bn,bh,bhp->bnhp", Bc.astype(jnp.float32), dt, xh)
+    y = jnp.einsum("bn,bnhp->bhp", Cc.astype(jnp.float32), h)
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,101 @@
+"""The paper's Sec.-VII model: a 784-128-10 two-layer neural network with
+sigmoid hidden activation, softmax output and cross-entropy loss
+(D = 784*128 + 128 + 128*10 + 10 = 101,770 parameters).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["init_params", "loss", "accuracy", "predict", "PARAM_DIM",
+           "estimate_constants"]
+
+PARAM_DIM = 784 * 128 + 128 + 128 * 10 + 10
+
+
+def init_params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (784, 128)) / np.sqrt(784),
+        "b1": jnp.zeros(128),
+        "w2": jax.random.normal(k2, (128, 10)) / np.sqrt(128),
+        "b2": jnp.zeros(10),
+    }
+
+
+def predict(params, X):
+    h = jax.nn.sigmoid(X @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def loss(params, batch):
+    X, y = batch
+    logits = predict(params, X)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return (logz - gold).mean()
+
+
+def accuracy(params, X, y):
+    return float((jnp.argmax(predict(params, X), -1) == y).mean())
+
+
+def estimate_constants(X, y, key, n_iters: int = 300, batch: int = 256,
+                       lr: float = 0.5, n_probe: int = 20):
+    """Pre-training estimates of (L, sigma, G, f_gap) — Sec. IV-A.
+
+    L: max ||∇f(x)-∇f(y)|| / ||x-y|| over probe pairs along the SGD path;
+    sigma: per-sample gradient deviation bound (Assumption 4);
+    G: per-sample gradient second-moment bound (Assumption 5);
+    f_gap: f(x^(1)) - f(x_pretrained)  (upper bound on f(x1) - f*).
+    """
+    from ..core.genqsgd import flatten_like
+
+    params = init_params(key)
+    f0 = float(loss(params, (X[:4096], y[:4096])))
+    grad_fn = jax.jit(jax.grad(loss))
+    full_grad = jax.jit(jax.grad(loss))
+
+    snapshots = []
+    p = params
+    for it in range(n_iters):
+        key, k = jax.random.split(key)
+        idx = jax.random.randint(k, (batch,), 0, X.shape[0])
+        g = grad_fn(p, (X[idx], y[idx]))
+        p = jax.tree.map(lambda w, gg: w - lr * gg, p, g)
+        if it % (n_iters // n_probe) == 0:
+            snapshots.append(p)
+    f_star = float(loss(p, (X[:8192], y[:8192])))
+
+    # Lipschitz probe over snapshot pairs
+    Xp, yp = X[:4096], y[:4096]
+    L = 0.0
+    gs = [flatten_like(full_grad(s, (Xp, yp))) for s in snapshots]
+    xs = [flatten_like(s) for s in snapshots]
+    for i in range(len(snapshots) - 1):
+        num = float(jnp.linalg.norm(gs[i + 1] - gs[i]))
+        den = float(jnp.linalg.norm(xs[i + 1] - xs[i]))
+        if den > 1e-9:
+            L = max(L, num / den)
+
+    # sigma, G from per-sample grads at a few snapshots
+    per_sample = jax.jit(jax.vmap(
+        lambda p_, x_, y_: flatten_like(
+            jax.grad(loss)(p_, (x_[None], y_[None]))),
+        in_axes=(None, 0, 0)))
+    sig2, G2 = 0.0, 0.0
+    for s in snapshots[:: max(1, len(snapshots) // 4)]:
+        sample = per_sample(s, X[:512], y[:512])
+        mean_g = sample.mean(axis=0)
+        sig2 = max(sig2, float(jnp.mean(jnp.sum((sample - mean_g) ** 2, -1))))
+        G2 = max(G2, float(jnp.max(jnp.sum(sample**2, -1))))
+    return {
+        "L": L,
+        "sigma": float(np.sqrt(sig2)),
+        "G": float(np.sqrt(G2)),
+        "f_gap": max(f0 - f_star, 1e-3),
+        "f0": f0,
+        "f_star": f_star,
+    }

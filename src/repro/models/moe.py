@@ -1,0 +1,83 @@
+"""Mixture-of-Experts MLP: top-k routing with capacity + scatter dispatch.
+
+Dispatch uses an (E, C, D) expert buffer filled by scatter-add — no
+(T, E, C) one-hot dispatch tensor is ever materialized, so 32k-sequence
+shapes stay lowerable.  With the expert axis sharded over ``tp`` and tokens
+sharded over the batch axes, GSPMD inserts the all-to-all exchange.
+
+Token-dropping semantics: assignments beyond an expert's capacity
+``C = ceil(T * top_k / E * capacity_factor)`` are dropped (standard
+Switch/GShard behaviour); dropped slots contribute zero and the residual
+stream passes through.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import shardctx
+from .blocks import dense_init
+
+__all__ = ["moe_init", "moe_apply", "router_aux_loss"]
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / np.sqrt(D)
+    return {
+        "router": dense_init(ks[0], D, E, dtype),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   / np.sqrt(F)).astype(dtype),
+    }
+
+
+def moe_apply(p, x, cfg: ArchConfig):
+    """x: (B, S, D) -> (y, router_probs) with y: (B, S, D)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)               # (T, k)
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    C = int(np.ceil(T * k / E * cfg.capacity_factor))
+    flat_e = top_i.reshape(-1)                            # (T*k,)
+    # position of each assignment within its expert (token order)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)   # (T*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # (T*k,)
+    keep = pos < C
+    slot = jnp.where(keep, pos, C - 1)
+
+    tok = jnp.repeat(jnp.arange(T), k)                    # (T*k,)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    contrib = xf[tok] * keep[:, None].astype(x.dtype)
+    buf = buf.at[flat_e, slot].add(contrib, mode="drop")
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])    # (E, C, D)
+
+    gathered = y_buf[flat_e, slot]                        # (T*k, D)
+    w = (top_p.reshape(-1) * keep.astype(jnp.float32)).astype(x.dtype)
+    out = (gathered * w[:, None]).reshape(T, k, D).sum(axis=1)
+    return out.reshape(B, S, D), probs
+
+
+def router_aux_loss(probs: jax.Array, top_i: jax.Array | None = None) -> jax.Array:
+    """Switch-style load-balance auxiliary loss: E * sum_e f_e * P_e,
+    with f_e the fraction of tokens whose argmax is e and P_e the mean router
+    probability."""
+    E = probs.shape[-1]
+    hard = jax.nn.one_hot(jnp.argmax(probs, axis=-1), E, dtype=jnp.float32)
+    f = hard.mean(axis=0)
+    P = probs.mean(axis=0)
+    return E * jnp.sum(f * P)

@@ -1,0 +1,76 @@
+"""Activation-sharding context: models call ``constrain(h)`` on the residual
+stream; the launcher installs the appropriate sharding for the case being
+lowered (sequence-parallel over tp for train/prefill, nothing for decode).
+
+Under ``vmap`` (the GenQSGD fl axis) JAX prepends the mapped dim and keeps
+its sharding — verified on jax 0.8: a (B, S, D) -> P(fsdp, tp, None)
+constraint inside vmap yields P(fl, fsdp, tp) on the batched value.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_ACT_SHARDING = None       # boundary: (B, S, D) residual carries (seq over tp)
+_INTERIOR_SHARDING = None  # interior: block inputs after norm (seq gathered)
+_MOE_SHARDING = None       # (E, C, D) expert dispatch buffers
+
+
+@contextlib.contextmanager
+def activation_sharding(ns, interior=None, moe=None):
+    """ns: boundary sharding for residual carries (sequence-parallel, seq
+    over tp — shrinks remat-saved carries).  interior: sharding for block
+    inputs right after the pre-norms (seq *gathered*, batch still sharded) —
+    without it the partitioner may satisfy the attention/MLP dots by
+    all-gathering FULL weights instead of the activation (measured at 405B:
+    7 concurrent full-weight buffers)."""
+    global _ACT_SHARDING, _INTERIOR_SHARDING, _MOE_SHARDING
+    prev = (_ACT_SHARDING, _INTERIOR_SHARDING, _MOE_SHARDING)
+    _ACT_SHARDING = ns
+    _INTERIOR_SHARDING = interior
+    _MOE_SHARDING = moe
+    try:
+        yield
+    finally:
+        _ACT_SHARDING, _INTERIOR_SHARDING, _MOE_SHARDING = prev
+
+
+def _apply(h, ns):
+    if ns is None or h.ndim != 3:
+        return h
+    try:
+        return jax.lax.with_sharding_constraint(h, ns)
+    except Exception:
+        return h
+
+
+def constrain(h):
+    return _apply(h, _ACT_SHARDING)
+
+
+MLP_INTERIOR_GATHERED = True  # §Perf: sharded-MLP variant measured
+                              # neutral (AR up as AG down); keep gathered
+
+
+def constrain_interior(h):
+    return _apply(h, _INTERIOR_SHARDING)
+
+
+def constrain_interior_mlp(h):
+    if MLP_INTERIOR_GATHERED:
+        return _apply(h, _INTERIOR_SHARDING)
+    return _apply(h, _ACT_SHARDING)
+
+
+def constrain_moe(buf):
+    """Expert dispatch buffers (E, C, D): experts over tp, capacity over
+    fsdp — expert compute stays token-sharded without fsdp partial-k
+    all-reduces on the expert weights."""
+    if _MOE_SHARDING is None or buf.ndim != 3:
+        return buf
+    try:
+        return jax.lax.with_sharding_constraint(buf, _MOE_SHARDING)
+    except Exception:
+        return buf

@@ -1,0 +1,29 @@
+"""Trace-time unroll switch for roofline extraction.
+
+XLA's ``cost_analysis()`` counts a ``while`` (scan) body ONCE regardless of
+trip count (verified empirically — see DESIGN.md §5), so roofline term
+extraction compiles small *unrolled* model variants (1 and 2 layer-pattern
+repeats) and extrapolates.  Inside ``unrolled()``, every structural scan
+(layer stacks, attention query chunks, vocab-loss chunks, GenQSGD local
+steps) traces as a Python loop instead.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+def enabled() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def unrolled():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev

@@ -1,0 +1,236 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv feature extractor is a STUB per the brief:
+``input_specs`` provides precomputed frame embeddings (B, frames, D) — we
+implement the transformer encoder (bidirectional) and decoder (causal self-
+attention + cross-attention) that consume them.  Frames are capped at
+``cfg.max_source_positions`` (1500 = 30 s audio).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import blocks as B
+from . import unroll
+
+__all__ = ["init_params", "abstract_params", "loss_train", "prefill",
+           "decode_step", "init_caches"]
+
+
+def _enc_block_init(key, cfg, dtype):
+    D = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.ones((D,), dtype),
+            "attn": B.attn_init(ks[0], cfg, dtype),
+            "ln2": jnp.ones((D,), dtype),
+            "mlp": B.mlp_init(ks[1], cfg, dtype=dtype)}
+
+
+def _dec_block_init(key, cfg, dtype):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((D,), dtype),
+            "self_attn": B.attn_init(ks[0], cfg, dtype),
+            "ln_x": jnp.ones((D,), dtype),
+            "cross_attn": B.attn_init(ks[1], cfg, dtype),
+            "ln2": jnp.ones((D,), dtype),
+            "mlp": B.mlp_init(ks[2], cfg, dtype=dtype)}
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": (jax.random.normal(ks[2], (cfg.vocab, cfg.d_model),
+                                    jnp.float32)
+                  / np.sqrt(cfg.d_model)).astype(dtype),
+        "enc": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "dec": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda k: init_params(k, cfg, dtype),
+                          jax.random.PRNGKey(0))
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, F, D) stub conv-frontend output -> encoder states."""
+    Bt, F, D = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (Bt, F))
+    h = frames
+
+    @jax.checkpoint
+    def _enc_block(h, pl):
+        a, _ = B.attn_apply(pl["attn"], B.rmsnorm(h, pl["ln1"], cfg.norm_eps),
+                            cfg, pos, causal=False)
+        h = h + a
+        h = h + B.mlp_apply(pl["mlp"], B.rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        return h
+
+    def body(h, pl):
+        return _enc_block(h, pl), None
+
+    if unroll.enabled():
+        for j in range(cfg.enc_layers):
+            h, _ = body(h, jax.tree.map(lambda a: a[j], params["enc"]))
+    else:
+        h, _ = jax.lax.scan(body, h, params["enc"])
+    return B.rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attend(p, x, enc, cfg: ArchConfig):
+    """Cross attention: queries from decoder x, K/V from encoder states."""
+    Bt, S, D = x.shape
+    F = enc.shape[1]
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q = (x @ p["wq"]).reshape(Bt, S, H, dh)
+    k = (enc @ p["wk"]).reshape(Bt, F, KV, dh)
+    v = (enc @ p["wv"]).reshape(Bt, F, KV, dh)
+    G = H // KV
+    qpos = jnp.zeros((Bt, S), jnp.int32)
+    kpos = jnp.zeros((Bt, F), jnp.int32)
+    out = B._sdpa_chunk(q.reshape(Bt, S, KV, G, dh), k, v, qpos, kpos,
+                        None, causal=False)
+    return out.reshape(Bt, S, H * dh) @ p["wo"]
+
+
+def _decode_stack(params, cfg: ArchConfig, h, pos, enc):
+    @jax.checkpoint
+    def _dec_block(h, pl):
+        a, _ = B.attn_apply(pl["self_attn"],
+                            B.rmsnorm(h, pl["ln1"], cfg.norm_eps), cfg, pos)
+        h = h + a
+        h = h + _cross_attend(pl["cross_attn"],
+                              B.rmsnorm(h, pl["ln_x"], cfg.norm_eps), enc, cfg)
+        h = h + B.mlp_apply(pl["mlp"], B.rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        return h
+
+    def body(h, pl):
+        return _dec_block(h, pl), None
+
+    if unroll.enabled():
+        for j in range(cfg.n_layers):
+            h, _ = body(h, jax.tree.map(lambda a: a[j], params["dec"]))
+    else:
+        h, _ = jax.lax.scan(body, h, params["dec"])
+    return B.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+
+def loss_train(params, cfg: ArchConfig, batch, aux_weight: float = 0.0):
+    """batch: frames (B,F,D), tokens (B,S), labels (B,S)."""
+    enc = encode(params, cfg, batch["frames"])
+    tokens, labels = batch["tokens"], batch["labels"]
+    Bt, S = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (Bt, S))
+    h = params["embed"][tokens]
+    h = _decode_stack(params, cfg, h, pos, enc)
+
+    @jax.checkpoint
+    def _chunk_ce(hh, ll):
+        logits = (hh @ params["embed"].T).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    CH = 512
+    if S % CH == 0 and S > CH:
+        hc = jnp.moveaxis(h.reshape(Bt, S // CH, CH, -1), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(Bt, S // CH, CH), 1, 0)
+        total, _ = jax.lax.scan(
+            lambda acc, args: (acc + _chunk_ce(*args), None),
+            jnp.zeros((), jnp.float32), (hc, lc))
+    else:
+        total = _chunk_ce(h, labels)
+    return total / (Bt * S)
+
+
+def init_caches(cfg: ArchConfig, batch: int, length: int, dtype=jnp.bfloat16):
+    """Self-attn KV caches (stacked over decoder layers) + encoder states."""
+    one = B.make_cache(cfg, batch, length, dtype=dtype)
+    self_caches = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+    enc_states = jnp.zeros((batch, min(cfg.max_source_positions, length),
+                            cfg.d_model), dtype)
+    return {"self": self_caches, "enc": enc_states}
+
+
+def prefill(params, cfg: ArchConfig, batch, cache_len: Optional[int] = None,
+            cache_dtype=jnp.bfloat16):
+    """Encode audio + run decoder over the prompt, building caches."""
+    enc = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    Bt, S = tokens.shape
+    cache_len = cache_len or S
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (Bt, S))
+    h = params["embed"][tokens]
+
+    def body(h, pl):
+        x1 = B.rmsnorm(h, pl["ln1"], cfg.norm_eps)
+        a, (k, v) = B.attn_apply(pl["self_attn"], x1, cfg, pos)
+        h = h + a
+        h = h + _cross_attend(pl["cross_attn"],
+                              B.rmsnorm(h, pl["ln_x"], cfg.norm_eps), enc, cfg)
+        h = h + B.mlp_apply(pl["mlp"], B.rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        C = cache_len
+        if S >= C:
+            ck, cv, cp = k[:, S - C:], v[:, S - C:], pos[:, S - C:]
+        else:
+            pad = jnp.zeros((Bt, C - S) + k.shape[2:], k.dtype)
+            ck = jnp.concatenate([k, pad], 1)
+            cv = jnp.concatenate([v, pad], 1)
+            cp = jnp.concatenate([pos, jnp.full((Bt, C - S), -1, jnp.int32)], 1)
+        cache = {"k": ck.astype(cache_dtype), "v": cv.astype(cache_dtype),
+                 "pos": cp.astype(jnp.int32),
+                 "idx": jnp.full((Bt,), S, jnp.int32)}
+        return h, cache
+
+    if unroll.enabled():
+        outs = []
+        for j in range(cfg.n_layers):
+            h, c = body(h, jax.tree.map(lambda a: a[j], params["dec"]))
+            outs.append(c)
+        self_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        h, self_caches = jax.lax.scan(body, h, params["dec"])
+    h = B.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1] @ params["embed"].T)
+    return logits, {"self": self_caches, "enc": enc.astype(cache_dtype)}
+
+
+def decode_step(params, cfg: ArchConfig, token, caches, pos):
+    """token: (B,1); pos: (B,1).  Returns (logits (B,V), new caches)."""
+    h = params["embed"][token]
+    enc = caches["enc"]
+
+    def body(h, xs):
+        pl, cache = xs
+        x1 = B.rmsnorm(h, pl["ln1"], cfg.norm_eps)
+        a, cache = B.attn_decode(pl["self_attn"], x1, cfg, pos, cache)
+        h = h + a
+        h = h + _cross_attend(pl["cross_attn"],
+                              B.rmsnorm(h, pl["ln_x"], cfg.norm_eps), enc, cfg)
+        h = h + B.mlp_apply(pl["mlp"], B.rmsnorm(h, pl["ln2"], cfg.norm_eps))
+        return h, cache
+
+    if unroll.enabled():
+        outs = []
+        for j in range(cfg.n_layers):
+            h, c = body(h, (jax.tree.map(lambda a: a[j], params["dec"]),
+                            jax.tree.map(lambda a: a[j], caches["self"])))
+            outs.append(c)
+        self_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    else:
+        h, self_caches = jax.lax.scan(body, h,
+                                      (params["dec"], caches["self"]))
+    h = B.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = h[:, 0] @ params["embed"].T
+    return logits, {"self": self_caches, "enc": enc}

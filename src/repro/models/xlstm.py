@@ -1,0 +1,304 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory with true recurrence).
+
+mLSTM training uses the stabilized parallel (quadratic) form of the paper's
+Eq. (?)-style formulation; decode is the O(1) recurrent update with matrix
+state C (dh x dh per head), normalizer n and stabilizer m.  sLSTM is a real
+recurrence (hidden-to-hidden block-diagonal R), so training scans over time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import shardctx
+from .blocks import dense_init, rmsnorm
+
+__all__ = ["mlstm_init", "mlstm_apply", "mlstm_decode", "make_mlstm_state",
+           "slstm_init", "slstm_apply", "slstm_decode", "make_slstm_state"]
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+def _mlstm_dims(cfg: ArchConfig):
+    di = 2 * cfg.d_model          # proj factor 2
+    H = cfg.n_heads
+    dh = di // H
+    return di, H, dh
+
+
+def mlstm_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    D = cfg.d_model
+    di, H, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], D, 2 * di, dtype),    # [path, gate]
+        "wq": dense_init(ks[1], di, di, dtype),
+        "wk": dense_init(ks[2], di, di, dtype),
+        "wv": dense_init(ks[3], di, di, dtype),
+        "w_if": dense_init(ks[4], di, 2 * H, dtype),    # input/forget preacts
+        "out_norm": jnp.ones((di,), dtype),
+        "w_down": dense_init(ks[5], di, D, dtype),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    B, S, D = x.shape
+    di, H, dh = _mlstm_dims(cfg)
+    up = x @ p["w_up"]
+    a, g = up[..., :di], up[..., di:]
+    q = (a @ p["wq"]).reshape(B, S, H, dh)
+    k = (a @ p["wk"]).reshape(B, S, H, dh) / np.sqrt(dh)
+    v = (a @ p["wv"]).reshape(B, S, H, dh)
+    i_f = (a @ p["w_if"]).astype(jnp.float32)
+    i_pre, f_pre = i_f[..., :H], i_f[..., H:]
+    return q, k, v, i_pre, f_pre, g
+
+
+MLSTM_CHUNK = 256
+
+
+def mlstm_apply(p, x, cfg: ArchConfig, return_state: bool = False):
+    """mLSTM forward: chunkwise-parallel when the sequence is long (O(S·C)
+    score work instead of O(S^2) — the §Perf fix for prefill_32k), quadratic
+    stabilized form otherwise."""
+    S = x.shape[1]
+    if S % MLSTM_CHUNK == 0 and S > MLSTM_CHUNK:
+        return _mlstm_chunked(p, x, cfg, return_state)
+    return _mlstm_quadratic(p, x, cfg, return_state)
+
+
+def _mlstm_quadratic(p, x, cfg: ArchConfig, return_state: bool = False):
+    """Parallel (stabilized quadratic) form.  x: (B, S, D)."""
+    B, S, D = x.shape
+    di, H, dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, g = _mlstm_qkvif(p, x, cfg)
+    logf = jax.nn.log_sigmoid(f_pre)                       # (B,S,H)
+    F_cum = jnp.cumsum(logf, axis=1)                       # (B,S,H)
+    # D_ij = exp(F_i - F_j + i_j) stabilized per row
+    dlog = (F_cum[:, :, None, :] - F_cum[:, None, :, :]
+            + i_pre[:, None, :, :])                        # (B,Sq,Sk,H)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    dlog = jnp.where(mask[None, :, :, None], dlog, -jnp.inf)
+    m = jnp.max(dlog, axis=2, keepdims=True)               # (B,Sq,1,H)
+    Dmat = jnp.exp(dlog - m)                               # (B,Sq,Sk,H)
+    scores = jnp.einsum("bqhd,bkhd->bqkh", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    C = scores * Dmat
+    norm = jnp.maximum(jnp.abs(C.sum(axis=2)), jnp.exp(-m[:, :, 0, :]))
+    y = jnp.einsum("bqkh,bkhd->bqhd", C, v.astype(jnp.float32))
+    y = (y / (norm[..., None] + 1e-6)).reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(g)) @ p["w_down"]
+    if not return_state:
+        return out
+    # final recurrent state (for prefill -> decode handoff)
+    state = make_mlstm_state(cfg, B)
+    # run the recurrence once over the sequence to produce the exact state
+    def step(st, inp):
+        return _mlstm_recurrent_update(st, *inp), None
+    seq = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+           jnp.moveaxis(v, 1, 0), jnp.moveaxis(i_pre, 1, 0),
+           jnp.moveaxis(logf, 1, 0))
+    state, _ = jax.lax.scan(step, state, seq)
+    return out, state
+
+
+def _mlstm_chunked(p, x, cfg: ArchConfig, return_state: bool = False):
+    """Chunkwise-parallel mLSTM: intra-chunk stabilized quadratic + an
+    inter-chunk recurrent (C, n, m) state carry — identical semantics to the
+    per-token recurrence (unit-tested against it)."""
+    B, S, D = x.shape
+    di, H, dh = _mlstm_dims(cfg)
+    Q = MLSTM_CHUNK
+    Nc = S // Q
+    q, k, v, i_pre, f_pre, g = _mlstm_qkvif(p, x, cfg)
+    qf = q.astype(jnp.float32).reshape(B, Nc, Q, H, dh)
+    kf = k.astype(jnp.float32).reshape(B, Nc, Q, H, dh)
+    vf = v.astype(jnp.float32).reshape(B, Nc, Q, H, dh)
+    i_c = i_pre.reshape(B, Nc, Q, H)
+    logf = jax.nn.log_sigmoid(f_pre).reshape(B, Nc, Q, H)
+    F_cum = jnp.cumsum(logf, axis=2)                       # within-chunk
+    # intra-chunk decay D_tj = exp(F_t - F_j + i_j), j <= t
+    dlog = (F_cum[:, :, :, None, :] - F_cum[:, :, None, :, :]
+            + i_c[:, :, None, :, :])                       # (B,Nc,Q,K,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    dlog = jnp.where(mask[None, None, :, :, None], dlog, -1e30)
+    m_intra = jnp.max(dlog, axis=3)                        # (B,Nc,Q,H)
+
+    def chunk_step(st, inp):
+        qc, kc, vc, ic, fc, Fc, dl, mi = inp               # per chunk
+        C0, n0, m0 = st["C"], st["n"], st["m"]             # (B,H,dh,dh) ...
+        m_inter = Fc + m0[:, None, :]                      # (B,Q,H)
+        m_t = jnp.maximum(mi, m_inter)
+        Dm = jnp.exp(dl - m_t[:, :, None, :])              # (B,Q,K,H)
+        scores = jnp.einsum("bqhd,bkhd->bqkh", qc, kc)
+        Cmat = scores * Dm
+        num_intra = jnp.einsum("bqkh,bkhd->bqhd", Cmat, vc)
+        den_intra = Cmat.sum(axis=2)                       # (B,Q,H)
+        w_inter = jnp.exp(m_inter - m_t)                   # (B,Q,H)
+        num_inter = jnp.einsum("bqhd,bhde->bqhe", qc, C0) \
+            * w_inter[..., None]
+        den_inter = jnp.einsum("bqhd,bhd->bqh", qc, n0) * w_inter
+        num = num_intra + num_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_t))
+        y = num / (den[..., None] + 1e-6)                  # (B,Q,H,dh)
+        # end-of-chunk state update
+        F_end = Fc[:, -1, :]                               # (B,H)
+        w_j = jnp.exp(F_end[:, None, :] - Fc + ic)         # (B,Q,H) decay of
+        m_new = jnp.maximum(F_end + m0, jnp.max(
+            F_end[:, None, :] - Fc + ic, axis=1))
+        carry_w = jnp.exp(F_end + m0 - m_new)              # (B,H)
+        upd_w = jnp.exp(F_end[:, None, :] - Fc + ic
+                        - m_new[:, None, :])               # (B,Q,H)
+        C_new = carry_w[..., None, None] * C0 \
+            + jnp.einsum("bqh,bqhd,bqhe->bhde", upd_w, kc, vc)
+        n_new = carry_w[..., None] * n0 \
+            + jnp.einsum("bqh,bqhd->bhd", upd_w, kc)
+        return {"C": C_new, "n": n_new, "m": m_new}, y
+
+    st0 = make_mlstm_state(cfg, B)
+    xs = (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(i_c, 1, 0),
+          jnp.moveaxis(logf, 1, 0), jnp.moveaxis(F_cum, 1, 0),
+          jnp.moveaxis(dlog, 1, 0), jnp.moveaxis(m_intra, 1, 0))
+    st, ys = jax.lax.scan(chunk_step, st0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(g)) @ p["w_down"]
+    if return_state:
+        return out, st
+    return out
+
+
+def make_mlstm_state(cfg: ArchConfig, batch: int):
+    di, H, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_recurrent_update(st, q_t, k_t, v_t, i_t, logf_t):
+    """One step of the stabilized mLSTM recurrence (all per (B,H))."""
+    m_new = jnp.maximum(logf_t + st["m"], i_t)
+    f_eff = jnp.exp(logf_t + st["m"] - m_new)[..., None]
+    i_eff = jnp.exp(i_t - m_new)[..., None]
+    C = f_eff[..., None] * st["C"] \
+        + i_eff[..., None] * jnp.einsum("bhd,bhe->bhde",
+                                        k_t.astype(jnp.float32),
+                                        v_t.astype(jnp.float32))
+    n = f_eff * st["n"] + i_eff * k_t.astype(jnp.float32)
+    return {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_decode(p, x, cfg: ArchConfig, state):
+    B, S, D = x.shape
+    assert S == 1
+    di, H, dh = _mlstm_dims(cfg)
+    q, k, v, i_pre, f_pre, g = _mlstm_qkvif(p, x, cfg)
+    q_t, k_t, v_t = q[:, 0], k[:, 0], v[:, 0]
+    logf_t = jax.nn.log_sigmoid(f_pre[:, 0])
+    st = _mlstm_recurrent_update(state, q_t, k_t, v_t, i_pre[:, 0], logf_t)
+    qf = q_t.astype(jnp.float32)
+    h_num = jnp.einsum("bhde,bhd->bhe", st["C"], qf)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", st["n"], qf)),
+                        jnp.exp(-st["m"]))
+    y = (h_num / (h_den[..., None] + 1e-6)).reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    out = (y * jax.nn.silu(g)) @ p["w_down"]
+    return out, st
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+def _slstm_dims(cfg: ArchConfig):
+    di = cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    return di, H, dh
+
+
+def slstm_init(key, cfg: ArchConfig, dtype=jnp.float32):
+    D = cfg.d_model
+    di, H, dh = _slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    f_ff = max(1, int(4 * D / 3) // 8 * 8)
+    return {
+        "w_gates": dense_init(ks[0], D, 4 * di, dtype),   # z, i, f, o preacts
+        "r_gates": (jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32)
+                    / np.sqrt(dh)).astype(dtype),         # block-diag recurrence
+        "b_gates": jnp.zeros((4 * di,), dtype),
+        "out_norm": jnp.ones((di,), dtype),
+        "ff_up": dense_init(ks[2], di, f_ff, dtype),
+        "ff_down": dense_init(ks[3], f_ff, D, dtype),
+    }
+
+
+def make_slstm_state(cfg: ArchConfig, batch: int):
+    di, H, dh = _slstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, H, dh), jnp.float32),
+        "n": jnp.full((batch, H, dh), 1e-6, jnp.float32),
+        "h": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H, dh), -1e30, jnp.float32),
+    }
+
+
+def _slstm_step(p, cfg, st, wx_t):
+    """wx_t: (B, 4*di) pre-computed input contribution at time t."""
+    di, H, dh = _slstm_dims(cfg)
+    B = wx_t.shape[0]
+    rec = jnp.einsum("bhd,hdk->bhk", st["h"],
+                     p["r_gates"].astype(jnp.float32))     # (B,H,4*dh)
+    pre = wx_t.reshape(B, 4, H, dh).astype(jnp.float32) \
+        + jnp.moveaxis(rec.reshape(B, H, 4, dh), 2, 1)
+    z = jnp.tanh(pre[:, 0])
+    i_pre, f_pre, o_pre = pre[:, 1], pre[:, 2], pre[:, 3]
+    o = jax.nn.sigmoid(o_pre)
+    m_new = jnp.maximum(f_pre + st["m"], i_pre)
+    i_eff = jnp.exp(i_pre - m_new)
+    f_eff = jnp.exp(f_pre + st["m"] - m_new)
+    c = f_eff * st["c"] + i_eff * z
+    n = f_eff * st["n"] + i_eff
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_apply(p, x, cfg: ArchConfig, return_state: bool = False):
+    """True recurrence: lax.scan over time.  x: (B, S, D)."""
+    B, S, D = x.shape
+    di, H, dh = _slstm_dims(cfg)
+    # keep the scan input batch-sharded (otherwise the per-token scan forces
+    # a full all-gather of wx — measured 32 GiB/device at prefill_32k)
+    wx = shardctx.constrain_interior(x @ p["w_gates"] + p["b_gates"])
+
+    def step(st, wx_t):
+        st = _slstm_step(p, cfg, st, wx_t)
+        return st, st["h"]
+
+    st0 = make_slstm_state(cfg, B)
+    st, hs = jax.lax.scan(step, st0, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    out = jax.nn.gelu(y @ p["ff_up"]) @ p["ff_down"]
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_decode(p, x, cfg: ArchConfig, state):
+    B, S, D = x.shape
+    assert S == 1
+    di, H, dh = _slstm_dims(cfg)
+    wx = (x @ p["w_gates"] + p["b_gates"])[:, 0]
+    st = _slstm_step(p, cfg, state, wx)
+    y = st["h"].reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    out = jax.nn.gelu(y @ p["ff_up"]) @ p["ff_down"]
+    return out, st

@@ -1,0 +1,57 @@
+"""CGP condensation tricks (Sec. V-B, [23, Lemma 1] + Taylor surrogates).
+
+All surrogates here satisfy Marks-Wright GIA Properties (i)-(iii):
+ (i)  surrogate upper-bounds the original constraint function,
+ (ii) equality at the expansion point,
+ (iii) gradient match at the expansion point.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .posy import Posy, const
+
+__all__ = ["amgm_monomial", "ratio_to_posy", "taylor_xlog1x", "taylor_logx"]
+
+
+def amgm_monomial(p: Posy, z_prev: np.ndarray) -> Posy:
+    """AM-GM condensation: posynomial p(x) >= prod_k (u_k(x)/beta_k)^beta_k,
+    with beta_k = u_k(x_prev)/p(x_prev); the RHS is a monomial touching p at
+    x_prev (value + gradient).  Used to under-approximate *denominators*.
+    """
+    u = p.terms(z_prev)
+    beta = u / u.sum()
+    # monomial coeff = prod (c_k/beta_k)^beta_k, exponents = sum beta_k A_k
+    keep = beta > 1e-300
+    logc = float(np.sum(beta[keep] * (np.log(p.c[keep]) - np.log(beta[keep]))))
+    A = (beta[:, None] * p.A).sum(axis=0, keepdims=True)
+    return Posy(np.array([np.exp(logc)]), A)
+
+
+def ratio_to_posy(num: Posy, den: Posy, z_prev: np.ndarray) -> Posy:
+    """Inner-approximate the ratio num/den (den posynomial) by the posynomial
+    num / amgm_monomial(den): since M(x) <= den(x), num/M >= num/den —
+    Property (i) — with equality and matched gradient at z_prev.
+    """
+    if den.is_monomial:
+        return num / den
+    return num / amgm_monomial(den, z_prev)
+
+
+def taylor_xlog1x(x_prev: float, n: int, idx: int):
+    """Affine upper bound of phi(x) = x*log(1/x) (concave) at x_prev:
+        phi(x) <= (log(1/x_prev) - 1) * x + x_prev.
+    Returns (a, b) with phi(x) <= a*x + b; ``a`` may be negative (x_prev > 1/e)
+    — callers must move that term across the inequality.
+    """
+    a = float(np.log(1.0 / x_prev) - 1.0)
+    b = float(x_prev)
+    return a, b
+
+
+def taylor_logx(x_prev: float):
+    """Affine upper bound of log(x) (concave) at x_prev:
+        log(x) <= log(x_prev) - 1 + x / x_prev.
+    Returns (a, b) with log(x) <= a*x + b.
+    """
+    return 1.0 / x_prev, float(np.log(x_prev) - 1.0)

@@ -1,0 +1,391 @@
+"""Problems 3, 5, 7, 11 of the paper as GP-sequence generators.
+
+Each ``*_builder`` returns a function ``build(z_prev) -> GP`` producing the
+iteration-t approximate GP (Problems 4, 6, 8, 12) at the previous point — the
+GIA outer loop (Algorithms 2-5) lives in :mod:`repro.opt.gia`.
+
+Variable space (log-space vector z), in order:
+    K0, K_1..K_N, B, T1, T2 [, X0 | gamma]
+Baselines (PM-SGD / FedAvg / PR-SGD parameter optimization, Sec. VII) reuse
+the same constructors through a ``VarMap`` that pins or ties variables:
+  PM:  K_n ≡ 1;   FA:  K_n = l * I_n / B (new var l);   PR:  B ≡ 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.convergence import MLProblemConstants
+from ..core.cost import EdgeSystem
+from .condense import amgm_monomial, ratio_to_posy, taylor_logx, taylor_xlog1x
+from .gp import GP
+from .posy import Posy, const, var
+
+__all__ = ["ParamOptProblem", "VarMap", "identity_varmap", "pm_varmap",
+           "fa_varmap", "pr_varmap"]
+
+
+# ---------------------------------------------------------------------------
+# Variable mapping
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class VarMap:
+    """Maps paper variables to monomials over the actual optimization vars."""
+    n: int                               # number of actual variables
+    names: List[str]                     # debug names of actual variables
+    K0: Posy
+    Kn: List[Posy]                       # N entries (monomials)
+    B: Posy
+    T1: Posy
+    T2: Posy
+    extra: Optional[Posy] = None         # X0 (m=E) or gamma (joint)
+    lower: Optional[np.ndarray] = None   # per-actual-var lower bounds (>0)
+    upper: Optional[np.ndarray] = None
+
+    def z0_default(self) -> np.ndarray:
+        return np.zeros(self.n)
+
+
+def identity_varmap(N: int, with_extra: bool = False) -> VarMap:
+    """K0, K_1..K_N, B, T1, T2 (+extra) all free."""
+    n = N + 4 + (1 if with_extra else 0)
+    names = (["K0"] + [f"K{i+1}" for i in range(N)] + ["B", "T1", "T2"]
+             + (["extra"] if with_extra else []))
+    lower = np.full(n, 1e-12)
+    upper = np.full(n, 1e12)
+    lower[0] = 1.0                       # K0 >= 1
+    lower[1:N + 1] = 1.0                 # Kn >= 1
+    lower[N + 1] = 1.0                   # B >= 1
+    return VarMap(
+        n=n, names=names,
+        K0=var(0, n), Kn=[var(1 + i, n) for i in range(N)],
+        B=var(N + 1, n), T1=var(N + 2, n), T2=var(N + 3, n),
+        extra=var(N + 4, n) if with_extra else None,
+        lower=lower, upper=upper)
+
+
+def pm_varmap(N: int, with_extra: bool = False) -> VarMap:
+    """PM-SGD: K_n ≡ 1.  Vars: K0, B, T1, T2 (+extra)."""
+    n = 4 + (1 if with_extra else 0)
+    names = ["K0", "B", "T1", "T2"] + (["extra"] if with_extra else [])
+    lower = np.full(n, 1e-12); upper = np.full(n, 1e12)
+    lower[0] = 1.0; lower[1] = 1.0
+    return VarMap(n=n, names=names, K0=var(0, n),
+                  Kn=[const(1.0, n) for _ in range(N)],
+                  B=var(1, n), T1=var(2, n), T2=var(3, n),
+                  extra=var(4, n) if with_extra else None,
+                  lower=lower, upper=upper)
+
+
+def fa_varmap(N: int, I_n: Sequence[float], with_extra: bool = False) -> VarMap:
+    """FedAvg: K_n = l * I_n / B, l a positive (relaxed-integer) variable.
+
+    Vars: K0, l, B, T1, T2 (+extra).
+    """
+    n = 5 + (1 if with_extra else 0)
+    names = ["K0", "l", "B", "T1", "T2"] + (["extra"] if with_extra else [])
+    lower = np.full(n, 1e-12); upper = np.full(n, 1e12)
+    lower[0] = 1.0; lower[1] = 1.0; lower[2] = 1.0
+    l, B = var(1, n), var(2, n)
+    return VarMap(n=n, names=names, K0=var(0, n),
+                  Kn=[l * float(I_n[i]) / B for i in range(N)],
+                  B=B, T1=var(3, n), T2=var(4, n),
+                  extra=var(5, n) if with_extra else None,
+                  lower=lower, upper=upper)
+
+
+def pr_varmap(N: int, with_extra: bool = False) -> VarMap:
+    """PR-SGD: B ≡ 1.  Vars: K0, K_1..K_N, T1, T2 (+extra)."""
+    n = N + 3 + (1 if with_extra else 0)
+    names = (["K0"] + [f"K{i+1}" for i in range(N)] + ["T1", "T2"]
+             + (["extra"] if with_extra else []))
+    lower = np.full(n, 1e-12); upper = np.full(n, 1e12)
+    lower[0] = 1.0; lower[1:N + 1] = 1.0
+    return VarMap(n=n, names=names, K0=var(0, n),
+                  Kn=[var(1 + i, n) for i in range(N)],
+                  B=const(1.0, n), T1=var(N + 1, n), T2=var(N + 2, n),
+                  extra=var(N + 3, n) if with_extra else None,
+                  lower=lower, upper=upper)
+
+
+# ---------------------------------------------------------------------------
+# Problem family
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ParamOptProblem:
+    """One instance of the paper's parameter-optimization problem.
+
+    ``m`` selects the convergence-error measure: "C", "E", "D" (Problems
+    3/5/7, fixed step-size sequence) or "J" (Problem 11, joint optimization of
+    the — by Lemma 4 constant — step size).
+    """
+    sys: EdgeSystem
+    consts: MLProblemConstants
+    T_max: float
+    C_max: float
+    m: str                               # "C" | "E" | "D" | "J"
+    gamma: Optional[float] = None        # step size (m in C/E/D)
+    rho: Optional[float] = None          # rho_E or rho_D
+    vmap: Optional[VarMap] = None
+
+    def __post_init__(self):
+        if self.vmap is None:
+            self.vmap = identity_varmap(self.sys.N,
+                                        with_extra=self.m in ("E", "J"))
+        if self.m in ("C", "E", "D") and self.gamma is None:
+            raise ValueError(f"m={self.m} requires a fixed gamma")
+        if self.m in ("E", "D") and self.rho is None:
+            raise ValueError(f"m={self.m} requires rho")
+
+    # -- shared pieces ------------------------------------------------------
+    def _objective(self) -> Posy:
+        v, s = self.vmap, self.sys
+        e = s.comp_energy_coeff
+        obj = float(s.const_energy) * v.K0
+        for i in range(s.N):
+            obj = obj + float(e[i]) * (v.K0 * v.B * v.Kn[i])
+        return obj
+
+    def _common_constraints(self) -> List[Posy]:
+        v, s = self.vmap, self.sys
+        cons: List[Posy] = []
+        ct = s.comp_time_coeff
+        for i in range(s.N):                       # (22)
+            cons.append(float(ct[i]) * v.Kn[i] / v.T1)
+        for i in range(s.N):                       # (23)
+            cons.append(v.Kn[i] / v.T2)
+        tau = s.comm_time                          # (24)
+        cons.append((tau / self.T_max) * v.K0
+                    + (1.0 / self.T_max) * (v.K0 * v.B * v.T1))
+        # box bounds on the actual variables
+        n = v.n
+        for i in range(n):
+            if v.lower is not None and v.lower[i] > 0:
+                cons.append(Posy(np.array([v.lower[i]]), -np.eye(n)[i:i+1]))
+            if v.upper is not None and np.isfinite(v.upper[i]):
+                cons.append(Posy(np.array([1.0 / v.upper[i]]), np.eye(n)[i:i+1]))
+        return cons
+
+    def _sum_Kn(self) -> Posy:
+        out = self.vmap.Kn[0]
+        for k in self.vmap.Kn[1:]:
+            out = out + k
+        return out
+
+    def _sum_q_Kn2(self) -> Posy:
+        qp = self.sys.q_pairs
+        v = self.vmap
+        out = None
+        for i in range(self.sys.N):
+            t = float(max(qp[i], 1e-300)) * (v.Kn[i] ** 2)
+            out = t if out is None else out + t
+        return out
+
+    # -- convergence-error constraint per m ----------------------------------
+    def _conv_constraint(self, z_prev: np.ndarray) -> List[Posy]:
+        c1, c2, c3, c4 = self.consts.c
+        v = self.vmap
+        Cmax = self.C_max
+        sumK = self._sum_Kn()
+        sumQ = self._sum_q_Kn2()
+        M = amgm_monomial(sumK, z_prev)  # condensed sum_n K_n
+
+        if self.m == "C":                                   # (26)
+            g = self.gamma
+            con = (c1 / (Cmax * g)) / (v.K0 * M) \
+                + (c2 * g**2 / Cmax) * (v.T2 ** 2) \
+                + (c3 * g / Cmax) / v.B \
+                + ((c4 * g / Cmax) * sumQ) / M
+            return [con]
+
+        if self.m == "J":                                   # (40)
+            gam = v.extra
+            con = (c1 / Cmax) / (gam * v.K0 * M) \
+                + (c2 / Cmax) * (gam ** 2) * (v.T2 ** 2) \
+                + (c3 / Cmax) * gam / v.B \
+                + (c4 / Cmax) * (gam * sumQ) / M
+            # (39): gamma <= 1/L  (lower bound comes from the box)
+            return [con, float(self.consts.L) * gam]
+
+        if self.m == "D":                                   # (35)
+            g, rho = self.gamma, self.rho
+            b1 = 1.0 / (rho * g)
+            b2 = rho**2 * g**2 / (rho + 1.0)**3 + rho**2 * g**2 / (2 * (rho + 1.0)**2)
+            b3 = rho * g / (rho + 1.0)**2 + rho * g / (rho + 1.0)
+            K0_prev = float(np.exp(z_prev @ v.K0.A[0]) * v.K0.c[0])
+            # RHS phi(K0) = K0 log((K0+rho+1)/(rho+1)) is convex; Taylor lower
+            # bound a*K0 - b tightens the constraint (inner approximation).
+            a = float(np.log((K0_prev + rho + 1.0) / (rho + 1.0))
+                      + K0_prev / (K0_prev + rho + 1.0))
+            b = float(K0_prev**2 / (K0_prev + rho + 1.0))
+            lhs = (b1 * c1) / M + b2 * c2 * (v.T2 ** 2) + (b3 * c3) / v.B \
+                + (b3 * c4 * sumQ) / M + b * Cmax
+            return [lhs / ((Cmax * a) * v.K0)]
+
+        if self.m == "E":                                   # (31)-(33)
+            g, rho = self.gamma, self.rho
+            a1 = (1.0 - rho) / g
+            a2 = g**2 / (1.0 + rho + rho**2)
+            a3 = g / (1.0 + rho)
+            X0 = v.extra
+            num = const(a1 * c1, v.n) \
+                + (a2 * c2) * (v.T2 ** 2) * sumK \
+                + (a3 * c3) * (sumK / v.B) \
+                + Cmax * (X0 * sumK) \
+                + a3 * c4 * sumQ
+            den = Cmax * sumK \
+                + (a2 * c2) * (v.T2 ** 2) * (X0 ** 3) * sumK \
+                + (a3 * c3) * ((X0 ** 2) * sumK / v.B) \
+                + (a3 * c4) * (X0 ** 2) * sumQ
+            cons = [ratio_to_posy(num, den, z_prev)]
+            # (28)/(29) sandwich X0 = rho^{K0}.  The Taylor surrogates (32),
+            # (33) are *active* at a consistent expansion point, so we relax
+            # each by a small margin delta to keep a strict interior for the
+            # barrier method (the exact equality is re-imposed by
+            # ``project_expansion`` every GIA iteration, and the final point
+            # is validated with the true C_E).
+            delta = np.exp(-3e-3)
+            # (28) -> (32):  X0 log(1/X0) <= X0 K0 log(1/rho)
+            X0_prev = float(np.exp(z_prev @ X0.A[0]) * X0.c[0])
+            lam = float(np.log(1.0 / rho))
+            a_t, b_t = taylor_xlog1x(X0_prev, v.n, -1)
+            # (a_t X0 + b_t) <= X0 K0 lam  ==>  move negative a_t if needed
+            if a_t >= 0:
+                lhs32 = a_t * X0 + const(b_t, v.n)
+                den32 = lam * (X0 * v.K0)
+            else:
+                lhs32 = const(b_t, v.n)
+                den32 = lam * (X0 * v.K0) + (-a_t) * X0
+            cons.append(ratio_to_posy(lhs32, den32, z_prev) * delta)
+            # (29) -> (33):  K0 log(1/rho) <= log(1/X0); use the affine upper
+            # bound log(X0) <= aX*X0 + bX  ==>  K0 lam + aX X0 + bX <= 0
+            aX, bX = taylor_logx(X0_prev)
+            rhs = -bX  # = 1 + log(1/X0_prev) > 0 since X0_prev < 1
+            assert rhs > 0
+            cons.append(((lam * v.K0 + aX * X0) / rhs) * delta)
+            # (30): X0 < 1 (strict; use 1 - eps)
+            cons.append(X0 * (1.0 / (1.0 - 1e-9)))
+            return cons
+
+        raise ValueError(self.m)
+
+    # -- public API -----------------------------------------------------------
+    def build(self, z_prev: np.ndarray) -> GP:
+        """The iteration-t approximate GP (Problems 4 / 6 / 8 / 12)."""
+        z_prev = self.project_expansion(z_prev)
+        cons = self._common_constraints() + self._conv_constraint(z_prev)
+        return GP(self._objective(), cons)
+
+    def project_expansion(self, z: np.ndarray) -> np.ndarray:
+        """Make the expansion point consistent before building surrogates.
+
+        For m=E the constraints (28)/(29) sandwich X0 = rho^{K0}; Taylor
+        surrogates built at an inconsistent point have (near-)empty interiors,
+        so we re-impose the equality exactly at every expansion.
+        """
+        if self.m != "E":
+            return z
+        z = z.copy()
+        v = self.vmap
+        i_x0 = v.names.index("extra")
+        K0 = float(np.exp(v.K0.logvalue(z)))
+        z[i_x0] = K0 * np.log(self.rho)
+        return z
+
+    def z_init(self) -> np.ndarray:
+        """Find a *feasible* starting point of the original problem
+        (Algorithms 2-5, line 1: "choose any feasible solution").
+
+        Searches a small grid over the integer-ish actual variables and picks
+        the smallest K0 restoring C <= C_max (C_m is non-increasing in K0).
+        """
+        v = self.vmap
+        names = v.names
+        z = np.zeros(v.n)
+        best = None
+        gamma_grid = ([None] if self.m != "J"
+                      else [0.5 / self.consts.L, 0.1 / self.consts.L,
+                            0.01 / self.consts.L, 1.0 / self.consts.L])
+        for gam in gamma_grid:
+            for Bv in (1, 2, 4, 8, 16, 32, 64, 128):
+                for Kv in (1, 2, 3, 4, 6, 8, 12, 16, 24, 32):
+                    zc = z.copy()
+                    for i, nm in enumerate(names):
+                        if nm == "K0":
+                            zc[i] = 0.0
+                        elif nm.startswith("K") or nm == "l":
+                            zc[i] = np.log(float(Kv))
+                        elif nm == "B":
+                            zc[i] = np.log(float(Bv))
+                        elif nm == "extra" and self.m == "J":
+                            zc[i] = np.log(gam)
+                    Kn = np.array([float(np.exp(k.logvalue(zc))) for k in v.Kn])
+                    B = float(np.exp(v.B.logvalue(zc)))
+                    # smallest K0 with C <= C_max (monotone), bounded by T
+                    K0, ok = 1, False
+                    for _ in range(64):
+                        ev = self.evaluate(K0, Kn, B, gam)
+                        if ev["C"] <= self.C_max * (1 - 1e-3):
+                            ok = ev["T"] <= self.T_max * (1 - 1e-3)
+                            break
+                        if ev["T"] > self.T_max:
+                            break
+                        K0 = int(np.ceil(K0 * 1.5))
+                    if not ok:
+                        continue
+                    ev = self.evaluate(K0, Kn, B, gam)
+                    if best is None or ev["E"] < best[0]:
+                        best = (ev["E"], K0, Kv, Bv, gam)
+        if best is not None:
+            _, K0, Kv, Bv, gam = best
+        else:  # no feasible grid point; fall back to a benign interior guess
+            K0, Kv, Bv, gam = 64, 4, 4, (0.1 / self.consts.L
+                                         if self.m == "J" else None)
+        for i, nm in enumerate(names):
+            if nm == "K0":
+                z[i] = np.log(float(K0))
+            elif nm.startswith("K") or nm == "l":
+                z[i] = np.log(float(Kv))
+            elif nm == "B":
+                z[i] = np.log(float(Bv))
+            elif nm == "extra" and self.m == "J":
+                z[i] = np.log(gam)
+        Kn = np.array([float(np.exp(k.logvalue(z))) for k in v.Kn])
+        ct = self.sys.comp_time_coeff
+        if "T1" in names:  # keep (22)/(23) strictly slack at the start
+            z[names.index("T1")] = float(np.log(np.max(ct * Kn) * 1.5))
+        if "T2" in names:
+            z[names.index("T2")] = float(np.log(np.max(Kn) * 1.5))
+        return self.project_expansion(z)
+
+    # -- true (non-approximate) evaluation ------------------------------------
+    def evaluate(self, K0: float, Kn: np.ndarray, B: float,
+                 extra: Optional[float] = None) -> Dict[str, float]:
+        from ..core import convergence as conv
+        from ..core.cost import energy_cost, time_cost
+        c = self.consts.c
+        qp = self.sys.q_pairs
+        if self.m == "C":
+            C = conv.c_constant(K0, Kn, B, self.gamma, c, qp)
+        elif self.m == "E":
+            C = conv.c_exponential(K0, Kn, B, self.gamma, self.rho, c, qp)
+        elif self.m == "D":
+            C = conv.c_diminishing(K0, Kn, B, self.gamma, self.rho, c, qp)
+        elif self.m == "J":
+            assert extra is not None
+            C = conv.c_constant(K0, Kn, B, extra, c, qp)
+        return {
+            "E": energy_cost(self.sys, K0, Kn, B),
+            "T": time_cost(self.sys, K0, Kn, B),
+            "C": C,
+        }
+
+    def feasible(self, K0, Kn, B, extra=None, rtol: float = 1e-6) -> bool:
+        ev = self.evaluate(K0, np.asarray(Kn, dtype=np.float64), B, extra)
+        ok = (ev["T"] <= self.T_max * (1 + rtol)
+              and ev["C"] <= self.C_max * (1 + rtol))
+        if self.m == "J" and extra is not None:
+            ok = ok and extra <= 1.0 / self.consts.L * (1 + rtol)
+        return ok

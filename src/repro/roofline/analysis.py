@@ -1,0 +1,116 @@
+"""Roofline extraction from compiled XLA artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes  / (chips × HBM_bw)
+    collective = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``; collective
+bytes are parsed from ``compiled.as_text()`` by summing the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+
+Scan caveat (measured, see DESIGN.md §5): XLA counts a while-loop body once,
+so for layer-scanned programs the caller extrapolates using 1-repeat and
+2-repeat *unrolled* compiles: per_rep = cost(2) - cost(1);
+total = cost(1) + (reps - 1) * per_rep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "TPU_V5E", "cost_summary", "collective_bytes",
+           "roofline_terms", "extrapolate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float     # bf16 FLOP/s per chip
+    hbm_bw: float         # bytes/s per chip
+    ici_bw: float         # bytes/s per link per chip
+
+
+TPU_V5E = HW("tpu_v5e", 197e12, 819e9, 50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[^\]]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of 'f32[128,256]' or tuple '(f32[2,4], s8[8])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict:
+    """Sum result bytes per collective op kind over the whole module.
+
+    Note: ops inside while bodies appear once (see scan caveat).
+    """
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_str)
+        counts[op] += 1
+    return {
+        "bytes": out,
+        "counts": counts,
+        "total_bytes": sum(out.values()),
+    }
+
+
+def cost_summary(ca: Optional[dict]) -> Dict:
+    if not ca:
+        return {}
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "transcendentals": float(ca.get("transcendentals", 0.0)),
+           "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   chips: int, hw: HW = TPU_V5E) -> Dict:
+    compute = flops / (chips * hw.peak_flops)
+    memory = bytes_accessed / (chips * hw.hbm_bw)
+    collective = coll_bytes / (chips * hw.ici_bw)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    total = max(compute, memory, collective)
+    terms["bound_s"] = total
+    return terms
+
+
+def extrapolate(cost1: Dict, cost2: Dict, reps: float) -> Dict:
+    """total = cost1 + (reps - 1) * (cost2 - cost1), clamped at >= cost1."""
+    out = {}
+    for k in set(cost1) | set(cost2):
+        c1 = float(cost1.get(k, 0.0))
+        c2 = float(cost2.get(k, 0.0))
+        per = max(c2 - c1, 0.0)
+        out[k] = c1 + (reps - 1.0) * per
+    return out

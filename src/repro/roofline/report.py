@@ -1,0 +1,60 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from results JSON."""
+from __future__ import annotations
+
+import json
+import os
+
+__all__ = ["dryrun_table", "roofline_table"]
+
+
+def _gib(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(path="results/dryrun/summary.json") -> str:
+    rs = json.load(open(path))
+    lines = ["| arch | shape | mesh | fl | lower s | compile s | args GiB/dev"
+             " | temp GiB/dev | HLO GFLOP/dev | coll MiB/dev | status |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"| | | | | | | {r['status']}: "
+                         f"{r.get('reason', r.get('error', ''))[:70]} |")
+            continue
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['fl_axis']} | "
+            f"{r['lower_s']} | {r['compile_s']} | "
+            f"{_gib(m['argument_bytes'])} | {_gib(m['temp_bytes'])} | "
+            f"{r['cost'].get('flops', 0)/1e9:.1f} | "
+            f"{r['collectives']['total_bytes']/2**20:.0f} | ok |")
+    return "\n".join(lines)
+
+
+def roofline_table(path="results/roofline/summary.json") -> str:
+    rs = json.load(open(path))
+    lines = ["| arch | shape | chips | compute s | memory s | collective s |"
+             " dominant | MODEL_FLOPS | HLO FLOPs (global) | useful ratio |"
+             " next move |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rs:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | | | | | skipped |"
+                         f" | | | {r.get('reason','')[:60]} |")
+            continue
+        t = r["terms"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} | "
+            f"{t['compute_s']:.3g} | {t['memory_s']:.3g} | "
+            f"{t['collective_s']:.3g} | **{t['dominant']}** | "
+            f"{r['model_flops']:.3g} | {r['hlo_flops_global']:.3g} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['hint'][:58]} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline\n")
+    print(roofline_table())

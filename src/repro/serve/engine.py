@@ -1,0 +1,132 @@
+"""Batched serving engine: slot-based continuous batching over the
+decode_step the dry-run shapes lower.
+
+A fixed pool of ``slots`` shares one KV cache; requests join free slots,
+prefill as a batch-of-one (cache splice), then decode together.  Greedy
+sampling; completion on EOS or max_new_tokens.  This is the minimal real
+engine shape (vLLM-lite without paging) — enough to serve the smoke models
+on CPU and to lower at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models.registry import model_api
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (P,) int32 token ids
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: Optional[List[int]] = None
+    slot: int = -1
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ArchConfig, slots: int = 4,
+                 max_len: int = 256, cache_dtype=jnp.bfloat16):
+        self.params = params
+        self.cfg = cfg
+        self.api = model_api(cfg)
+        self.slots = slots
+        self.max_len = max_len
+        self.caches = self.api.init_caches(cfg, slots, max_len,
+                                           dtype=cache_dtype)
+        self.pos = np.zeros(slots, np.int32)        # next position per slot
+        self.active: List[Optional[Request]] = [None] * slots
+        self.last_tok = np.zeros((slots, 1), np.int32)
+        self._decode = jax.jit(
+            lambda p, t, c, po: self.api.decode_step(p, cfg, t, c, po))
+        self._prefill_one = jax.jit(
+            lambda p, b: self.api.prefill(p, cfg, b, cache_len=max_len,
+                                          cache_dtype=cache_dtype))
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def _splice_cache(self, slot: int, new_caches):
+        """Copy a freshly prefilled batch-of-one cache into slot ``slot``."""
+        def splice(full, one):
+            # leaves are (count, B, ...) or (B, ...) or scalars per segment
+            if full.ndim >= 2 and full.shape[1] == self.slots \
+                    and one.ndim == full.ndim and one.shape[1] == 1:
+                return full.at[:, slot:slot + 1].set(one.astype(full.dtype))
+            if full.ndim >= 1 and full.shape[0] == self.slots \
+                    and one.ndim == full.ndim and one.shape[0] == 1:
+                return full.at[slot:slot + 1].set(one.astype(full.dtype))
+            return one  # shared scalars (e.g. write cursors)
+        self.caches = jax.tree.map(splice, self.caches, new_caches)
+
+    def submit(self, req: Request) -> bool:
+        """Admit a request if a slot is free.  Prefills immediately."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        P = len(req.prompt)
+        assert P + req.max_new_tokens <= self.max_len
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None],
+                 "labels": jnp.zeros((1, P), jnp.int32)}
+        if self.cfg.family == "vlm":
+            npatch = max(1, int(P * self.cfg.vision_patches_frac))
+            batch["patch_embeds"] = jnp.zeros((1, npatch, self.cfg.d_model))
+            pos = jnp.arange(P)[None]
+            batch["positions3"] = jnp.stack([pos, pos, pos])
+        if self.cfg.encdec:
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.max_source_positions, self.cfg.d_model))
+        logits, one_caches = self._prefill_one(self.params, batch)
+        self._splice_cache(slot, one_caches)
+        req.slot = slot
+        req.output = [int(jnp.argmax(logits[0]))]
+        self.pos[slot] = P
+        self.last_tok[slot, 0] = req.output[-1]
+        self.active[slot] = req
+        return True
+
+    def step(self) -> int:
+        """One decode step for every active slot.  Returns #active."""
+        if not any(r is not None for r in self.active):
+            return 0
+        toks = jnp.asarray(self.last_tok)
+        pos = jnp.asarray(self.pos[:, None])
+        logits, self.caches = self._decode(self.params, toks, self.caches,
+                                           pos)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        n_active = 0
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.output.append(int(nxt[i]))
+            self.pos[i] += 1
+            self.last_tok[i, 0] = nxt[i]
+            if (len(r.output) >= r.max_new_tokens
+                    or (r.eos_id is not None and nxt[i] == r.eos_id)):
+                r.done = True
+                self.active[i] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        """Serve a list of requests to completion (simple FCFS queue)."""
+        queue = list(requests)
+        while queue or any(r is not None for r in self.active):
+            while queue and self.submit(queue[0]):
+                queue.pop(0)
+            self.step()
+        return requests

@@ -1,0 +1,2 @@
+from .checkpoint import save, load
+from .trainer import GenQSGDTrainer, TrainState

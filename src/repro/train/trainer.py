@@ -1,0 +1,77 @@
+"""GenQSGD trainer: the driver that strings rounds together.
+
+Uses the distributed round from :mod:`repro.fed.runtime` (works on 1 CPU
+device or a full mesh alike) with a step-size sequence from
+:mod:`repro.core.step_rules` and the offline-optimized (K, B, Γ) from
+:mod:`repro.opt` when requested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.step_rules import StepRule
+from ..fed import sharding as SH
+from ..fed.runtime import FedConfig, make_round_fn
+from . import checkpoint as CKPT
+
+__all__ = ["TrainState", "GenQSGDTrainer"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: object
+    round: int
+    history: list
+
+
+class GenQSGDTrainer:
+    def __init__(self, api, cfg: ArchConfig, fed: FedConfig, mesh,
+                 step_rule: StepRule, checkpoint_dir: Optional[str] = None):
+        self.api = api
+        self.cfg = cfg
+        self.fed = fed
+        self.mesh = mesh
+        self.rule = step_rule
+        self.ckpt_dir = checkpoint_dir
+        round_fn = make_round_fn(api, cfg, fed, mesh)
+        self._round = jax.jit(round_fn)
+
+    def init(self, key, dtype=jnp.float32) -> TrainState:
+        params = self.api.init_params(key, self.cfg, dtype=dtype)
+        if self.mesh.devices.size > 1:
+            sh = SH.param_shardings(params, self.mesh)
+            params = jax.device_put(params, sh)
+        return TrainState(params=params, round=0, history=[])
+
+    def run(self, state: TrainState, batches: Iterator, key, n_rounds: int,
+            log_every: int = 10, eval_fn: Optional[Callable] = None,
+            ckpt_every: int = 0) -> TrainState:
+        gammas = self.rule.sequence(state.round + n_rounds)
+        for r in range(state.round, state.round + n_rounds):
+            key, rkey = jax.random.split(key)
+            batch = next(batches)
+            t0 = time.time()
+            state.params, metrics = self._round(
+                state.params, batch, rkey, jnp.float32(gammas[r]))
+            if r % log_every == 0 or r == state.round + n_rounds - 1:
+                rec = {"round": r, "gamma": float(gammas[r]),
+                       "loss": float(metrics["loss"]),
+                       "delta_norm": float(metrics["delta_norm"]),
+                       "dt": time.time() - t0}
+                if eval_fn is not None:
+                    rec.update(eval_fn(state.params))
+                state.history.append(rec)
+                print("  " + " ".join(f"{k}={v:.4g}" if isinstance(v, float)
+                                      else f"{k}={v}" for k, v in rec.items()),
+                      flush=True)
+            if self.ckpt_dir and ckpt_every and (r + 1) % ckpt_every == 0:
+                CKPT.save(f"{self.ckpt_dir}/round_{r+1:06d}.ckpt",
+                          state.params, {"round": r + 1})
+            state.round = r + 1
+        return state

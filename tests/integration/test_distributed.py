@@ -1,0 +1,102 @@
+"""Distributed GenQSGD runtime on a simulated 8-device mesh (subprocess —
+the host device count is locked at first jax init, so these run isolated)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, re
+    from jax.sharding import Mesh
+    from repro.models.registry import get_config, model_api
+    from repro.fed.runtime import FedConfig, make_round_fn
+    from repro.fed import sharding as SH
+
+    devs = np.array(jax.devices()).reshape(2, 2, 2)
+    mesh = Mesh(devs, ("fl", "fsdp", "tp"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    api = model_api(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg)
+    FL, K, B, S = 2, 2, 4, 32
+    batch = {"tokens": jax.random.randint(key, (FL, K, B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (FL, K, B, S), 0, cfg.vocab)}
+    outs = {}
+    for wire in ("f32", "int8", "rs_ag"):
+        fed = FedConfig(n_workers=FL, Kn=(1, 2), s0=64, sn=(16, 127),
+                        wire=wire)
+        rnd = make_round_fn(api, cfg, fed, mesh)
+        pshard = SH.shardings(SH.param_specs(params, mesh), mesh)
+        bshard = SH.shardings(SH.batch_specs(batch, mesh, "fl_train"), mesh)
+        pp = jax.device_put(params, pshard)
+        bb = jax.device_put(batch, bshard)
+        f = jax.jit(rnd, in_shardings=(pshard, bshard, None, None),
+                    out_shardings=(pshard, None))
+        x_new, m = f(pp, bb, jax.random.PRNGKey(1), jnp.float32(0.05))
+        assert np.isfinite(float(m["loss"])), wire
+        txt = f.lower(pp, bb, jax.random.PRNGKey(1),
+                      jnp.float32(0.05)).compile().as_text()
+        outs[wire] = (np.asarray(jax.tree.leaves(x_new)[0]), txt)
+    # int8 wire must put s8 all-gathers on the wire
+    assert len(re.findall(r"s8\\[[^\\]]*\\][^\\n]*all-gather",
+                          outs["int8"][1])) > 0
+    # all wires agree bitwise (levels are exact integers either way)
+    assert np.array_equal(outs["f32"][0], outs["int8"][0])
+    assert np.array_equal(outs["f32"][0], outs["rs_ag"][0])
+    # rs_ag actually reduce-scatters on the wire
+    assert "reduce-scatter" in outs["rs_ag"][1]
+    # single-process reference equivalence (s=None exact case)
+    from repro.core import GenQSGD, GenQSGDConfig, ConstantRule
+    print("DISTRIBUTED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_round_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "DISTRIBUTED_OK" in r.stdout, r.stdout + r.stderr
+
+
+_DRYRUN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    from repro.launch.dryrun import run_case
+    rec = run_case("qwen3-1.7b", "decode_32k", multi_pod=True, verbose=False)
+    assert rec["status"] == "ok", rec
+    assert rec["memory"]["temp_bytes"] > 0
+    assert rec["collectives"]["total_bytes"] > 0
+    print("DRYRUN_OK")
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_case_multipod():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+    r = subprocess.run([sys.executable, "-c", _DRYRUN_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "DRYRUN_OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_train_launcher_cli():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "..", "src"))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-1.7b",
+         "--smoke", "--rounds", "3", "--batch", "4", "--seq", "64",
+         "--wire", "int8"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert "[train] done" in r.stdout, r.stdout + r.stderr[-2000:]

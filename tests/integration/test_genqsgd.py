@@ -1,0 +1,137 @@
+"""GenQSGD algorithm behaviour: convergence, special-case reductions
+(Remark 2), and the single-process reference vs distributed-runtime
+equivalence (s = infinity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ConstantRule, GenQSGD, GenQSGDConfig
+from repro.data.federated import sample_minibatch
+from repro.models import mlp
+
+
+def _toy_problem(key, N=4, per=64, dim=8):
+    true_w = jax.random.normal(key, (dim,))
+    X = jax.random.normal(jax.random.fold_in(key, 1), (N, per, dim))
+    T = X @ true_w + 0.01 * jax.random.normal(jax.random.fold_in(key, 2),
+                                              (N, per))
+    return true_w, (X, T)
+
+
+def _loss(params, batch):
+    x, t = batch
+    return ((x @ params["w"] - t) ** 2).mean()
+
+
+def _sample(worker_data, key, B):
+    x, t = worker_data
+    idx = jax.random.randint(key, (B,), 0, x.shape[0])
+    return x[idx], t[idx]
+
+
+def test_converges_quadratic():
+    key = jax.random.PRNGKey(0)
+    true_w, data = _toy_problem(key)
+    cfg = GenQSGDConfig(K0=40, Kn=(3, 3, 5, 5), B=8,
+                        step_rule=ConstantRule(0.05), s0=64, sn=[64] * 4)
+    alg = GenQSGD(_loss, _sample, cfg)
+    xf, hist = alg.run({"w": jnp.zeros(8)}, data, key,
+                       eval_fn=lambda p: {"err": float(
+                           jnp.linalg.norm(p["w"] - true_w))})
+    assert hist[-1]["err"] < 0.1 * hist[0]["err"]
+
+
+def test_quantization_error_decreases_with_s():
+    """Coarser quantizers give larger deviation from the unquantized run."""
+    key = jax.random.PRNGKey(1)
+    _, data = _toy_problem(key)
+
+    def run_with(s):
+        cfg = GenQSGDConfig(K0=10, Kn=(2,) * 4, B=8,
+                            step_rule=ConstantRule(0.05), s0=s, sn=[s] * 4)
+        alg = GenQSGD(_loss, _sample, cfg)
+        xf, _ = alg.run({"w": jnp.zeros(8)}, data, key)
+        return xf["w"]
+
+    exact = run_with(None)
+    err2 = float(jnp.linalg.norm(run_with(2) - exact))
+    err64 = float(jnp.linalg.norm(run_with(64) - exact))
+    assert err64 < err2
+
+
+def test_pm_sgd_reduction():
+    """Remark 2: GenQSGD with K_n = 1, s = inf is parallel mini-batch SGD —
+    one round must equal one global step of averaged mini-batch gradients."""
+    key = jax.random.PRNGKey(2)
+    _, data = _toy_problem(key)
+    gamma = 0.05
+    cfg = GenQSGDConfig(K0=1, Kn=(1,) * 4, B=8, step_rule=ConstantRule(gamma),
+                        s0=None, sn=None)
+    alg = GenQSGD(_loss, _sample, cfg)
+    x0 = {"w": jnp.zeros(8)}
+    # reproduce the round's exact per-worker mini-batches
+    key_run = jax.random.PRNGKey(3)
+    x1, _ = alg.run(x0, data, key_run, eval_fn=None)
+    # manual PM-SGD with the same RNG pattern
+    k_round = jax.random.split(key_run, 1 + 1)[1] if False else None
+    # (we re-run the round function directly to share the RNG)
+    key2, rkey = jax.random.split(key_run)
+    x1b, _ = alg._round(x0, data, rkey, jnp.float32(gamma))
+    keys = jax.random.split(rkey, cfg.N + 1)
+    grads = []
+    for n in range(4):
+        wd = jax.tree.map(lambda a: a[n], data)
+        kb = jax.random.split(keys[n])[1]
+        batch = _sample(wd, kb, 8)
+        grads.append(jax.grad(_loss)(x0, batch)["w"])
+    expected = x0["w"] - gamma * jnp.mean(jnp.stack(grads), axis=0)
+    np.testing.assert_allclose(np.asarray(x1b["w"]), np.asarray(expected),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_heterogeneous_kn_virtual_updates():
+    """Workers with K_n < K_max must contribute exactly K_n real updates."""
+    key = jax.random.PRNGKey(4)
+    _, data = _toy_problem(key)
+    # K = (1, 3): worker 0 stops after 1 local step
+    cfg_h = GenQSGDConfig(K0=1, Kn=(1, 3, 1, 3), B=64,
+                          step_rule=ConstantRule(0.01), s0=None, sn=None)
+    alg = GenQSGD(_loss, _sample, cfg_h)
+    x0 = {"w": jnp.zeros(8)}
+    x1, _ = alg._round(x0, data, jax.random.PRNGKey(5), jnp.float32(0.01))
+    # against manual simulation
+    keys = jax.random.split(jax.random.PRNGKey(5), cfg_h.N + 1)
+    deltas = []
+    for n, kn in enumerate((1, 3, 1, 3)):
+        wd = jax.tree.map(lambda a: a[n], data)
+        p = dict(x0)
+        kk = keys[n]
+        for step in range(3):
+            kk, kb = jax.random.split(kk)
+            batch = _sample(wd, kb, 64)
+            g = jax.grad(_loss)(p, batch)["w"]
+            if step < kn:
+                p = {"w": p["w"] - 0.01 * g}
+        deltas.append((p["w"] - x0["w"]) / 0.01)
+    expected = x0["w"] + 0.01 * jnp.mean(jnp.stack(deltas), 0)
+    np.testing.assert_allclose(np.asarray(x1["w"]), np.asarray(expected),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_mlp_paper_model_trains():
+    """The Sec.-VII MLP under GenQSGD improves accuracy on MNIST-like data."""
+    from repro.data.synthetic import mnist_like
+    from repro.data.federated import partition_iid
+    X, y = mnist_like(n=4000, seed=1)
+    Xw, yw = partition_iid(X[:3000], y[:3000], 5)
+    data = (jnp.stack([jnp.asarray(a) for a in Xw]),
+            jnp.stack([jnp.asarray(a) for a in yw]))
+    cfg = GenQSGDConfig(K0=30, Kn=(4,) * 5, B=16,
+                        step_rule=ConstantRule(0.5), s0=2**14, sn=[2**14] * 5)
+    alg = GenQSGD(mlp.loss, sample_minibatch, cfg)
+    p0 = mlp.init_params(jax.random.PRNGKey(0))
+    acc0 = mlp.accuracy(p0, jnp.asarray(X[3000:]), jnp.asarray(y[3000:]))
+    pf, _ = alg.run(p0, data, jax.random.PRNGKey(1))
+    acc1 = mlp.accuracy(pf, jnp.asarray(X[3000:]), jnp.asarray(y[3000:]))
+    assert acc1 > max(acc0 + 0.2, 0.5), (acc0, acc1)

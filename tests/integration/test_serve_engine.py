@@ -1,0 +1,49 @@
+"""Batched serving engine: slot reuse + cross-slot isolation (a request
+served alongside others must produce the same tokens as served alone)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import get_config, model_api
+from repro.serve import Request, ServeEngine
+
+
+def _setup():
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    api = model_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_slot_reuse_and_completion():
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, slots=2, max_len=64,
+                      cache_dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, 12).astype(np.int32),
+                    max_new_tokens=6) for _ in range(5)]
+    out = eng.run(reqs)
+    assert all(r.done and len(r.output) == 6 for r in out)
+
+
+def test_cross_slot_isolation():
+    """Mixed prompt lengths in one batch must not interfere (per-row cache
+    cursors)."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32)
+               for n in (7, 19, 13)]
+
+    # served together
+    eng = ServeEngine(params, cfg, slots=3, max_len=64,
+                      cache_dtype=jnp.float32)
+    together = eng.run([Request(prompt=p, max_new_tokens=5)
+                        for p in prompts])
+
+    # each served alone
+    for i, p in enumerate(prompts):
+        eng1 = ServeEngine(params, cfg, slots=1, max_len=64,
+                           cache_dtype=jnp.float32)
+        alone = eng1.run([Request(prompt=p, max_new_tokens=5)])[0]
+        assert alone.output == together[i].output, (
+            f"request {i}: {alone.output} vs {together[i].output}")

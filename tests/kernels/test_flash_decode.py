@@ -1,0 +1,56 @@
+"""Flash-decode kernel: interpret-mode sweep vs the plain-softmax oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import BLOCK_C, flash_decode_call
+
+
+def _oracle(q, k, v, valid):
+    dh = q.shape[-1]
+    s = jnp.einsum("bhgd,bchd->bhgc", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    s = jnp.where(valid[:, None, None, :] > 0, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgc,bchd->bhgd", w, v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("B,KV,G,dh,nb", [
+    (1, 1, 1, 64, 1),
+    (2, 4, 2, 64, 2),
+    (2, 2, 8, 128, 4),
+    (1, 8, 1, 256, 2),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(B, KV, G, dh, nb, dtype):
+    C = nb * BLOCK_C
+    key = jax.random.PRNGKey(B * 31 + KV * 7 + dh)
+    q = (jax.random.normal(key, (B, KV, G, dh)) * 2).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, C, KV, dh)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, C, KV, dh)).astype(dtype)
+    lens = jax.random.randint(jax.random.fold_in(key, 3), (B,), 1, C + 1)
+    valid = (jnp.arange(C)[None] < lens[:, None]).astype(jnp.float32)
+    out = flash_decode_call(q, k, v, valid)
+    ref = _oracle(q, k, v, valid)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+    assert out.dtype == dtype
+
+
+def test_flash_decode_single_valid_token():
+    """Degenerate cache (one valid entry) -> output == that V row."""
+    B, KV, G, dh, C = 1, 2, 2, 64, BLOCK_C
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (B, KV, G, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, C, KV, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, C, KV, dh))
+    valid = jnp.zeros((B, C)).at[:, 0].set(1.0)
+    out = flash_decode_call(q, k, v, valid)
+    expect = jnp.broadcast_to(v[:, 0][:, :, None, :], out.shape)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-6)

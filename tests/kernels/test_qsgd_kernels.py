@@ -1,0 +1,72 @@
+"""Pallas kernel validation: interpret-mode execution vs the pure-jnp oracle
+across a shape × dtype × s sweep (per-kernel allclose requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.ops import _to_grid2d
+
+SHAPES = [(127,), (1024,), (512, 1024), (3, 5, 77), (2**16 + 3,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+S_VALUES = [1, 7, 64, 127]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("s", S_VALUES)
+def test_quantize_matches_ref(shape, dtype, s):
+    key = jax.random.PRNGKey(hash((shape, s)) % 2**31)
+    y = (jax.random.normal(key, shape) * 3).astype(dtype)
+    lvl, norm = ops.qsgd_quantize(y, key, s=s)
+    y2d, n = _to_grid2d(y.reshape(-1).astype(jnp.float32))
+    u = jax.random.uniform(key, y2d.shape, jnp.float32)
+    ref_norm = jnp.sqrt(ref.sumsq_ref(y))
+    lvl_ref = ref.qsgd_quantize_ref(
+        y2d, u, s, ref_norm).reshape(-1)[:n].reshape(shape)
+    np.testing.assert_allclose(float(norm), float(ref_norm), rtol=1e-5)
+    assert jnp.array_equal(lvl, lvl_ref), (shape, dtype, s)
+    assert lvl.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(lvl.astype(jnp.int32)))) <= s
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dequant_apply_matches_ref(shape, dtype):
+    s = 64
+    key = jax.random.PRNGKey(0)
+    y = (jax.random.normal(key, shape)).astype(dtype)
+    x = (jax.random.normal(jax.random.fold_in(key, 1), shape)).astype(dtype)
+    lvl, norm = ops.qsgd_quantize(y, key, s=s)
+    out = ops.qsgd_dequant_apply(x, lvl, norm, 0.05, s=s)
+    out_ref = ref.qsgd_dequant_apply_ref(x, lvl, norm, s, 0.05)
+    atol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out_ref, np.float32),
+                               rtol=1e-5, atol=atol)
+    assert out.dtype == x.dtype
+
+
+@given(st.integers(min_value=1, max_value=2**18))
+@settings(max_examples=20, deadline=None)
+def test_norm_kernel_any_length(n):
+    y = jnp.arange(n, dtype=jnp.float32) / max(n, 1)
+    got = float(ops.tensor_norm(y))
+    want = float(jnp.linalg.norm(y))
+    assert got == pytest.approx(want, rel=1e-5, abs=1e-6)
+
+
+def test_quantize_roundtrip_error_bound():
+    """dequant(quant(y)) error satisfies Assumption 1's bound (kernel path)."""
+    key = jax.random.PRNGKey(7)
+    for s in (4, 16, 64):
+        y = jax.random.normal(key, (4096,))
+        lvl, norm = ops.qsgd_quantize(y, key, s=s)
+        deq = ops.qsgd_dequant_apply(jnp.zeros_like(y), lvl, norm, 1.0, s=s)
+        err = float(jnp.sum((deq - y) ** 2))
+        qs = min(4096 / s**2, np.sqrt(4096) / s)
+        # single-draw bound (holds in expectation; allow slack)
+        assert err <= 3.0 * qs * float(jnp.sum(y**2))

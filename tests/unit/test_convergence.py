@@ -1,0 +1,80 @@
+"""Theorem 1 / Lemmas 1-4: closed-form convergence bounds + their structural
+properties used by the optimizer."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import convergence as C
+from repro.core.step_rules import ConstantRule, DiminishingRule, ExponentialRule
+
+CONSTS = C.coefficients(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=10)
+QP = np.full(10, 0.04)
+
+
+def test_constant_matches_arbitrary():
+    """C_C (Lemma 1) must equal C_A (Thm 1) under a constant sequence."""
+    K0, Kn, B, g = 50, np.array([3] * 10), 4, 0.01
+    ca = C.c_arbitrary(K0, Kn, B, np.full(K0, g), CONSTS, QP)
+    cc = C.c_constant(K0, Kn, B, g, CONSTS, QP)
+    assert ca == pytest.approx(cc, rel=1e-12)
+
+
+def test_exponential_matches_arbitrary():
+    K0, Kn, B = 80, np.array([2] * 10), 8
+    rule = ExponentialRule(0.02, 0.999)
+    ca = C.c_arbitrary(K0, Kn, B, rule.sequence(K0), CONSTS, QP)
+    ce = C.c_exponential(K0, Kn, B, 0.02, 0.999, CONSTS, QP)
+    assert ca == pytest.approx(ce, rel=1e-9)
+
+
+def test_diminishing_upper_bounds_arbitrary():
+    """C_D (16) is an upper bound on C_A under the rule (15)."""
+    K0, Kn, B = 120, np.array([4] * 10), 2
+    rule = DiminishingRule(0.02, 600.0)
+    ca = C.c_arbitrary(K0, Kn, B, rule.sequence(K0), CONSTS, QP)
+    cd = C.c_diminishing(K0, Kn, B, 0.02, 600.0, CONSTS, QP)
+    assert cd >= ca
+
+
+def test_exponential_approaches_constant():
+    """Sec. III-B: as rho_E -> 1 with gamma_E = gamma_C, C_E -> C_C."""
+    K0, Kn, B, g = 60, np.array([3] * 10), 4, 0.01
+    cc = C.c_constant(K0, Kn, B, g, CONSTS, QP)
+    for rho, tol in ((0.999, 0.1), (0.99999, 1e-3)):
+        ce = C.c_exponential(K0, Kn, B, g, rho, CONSTS, QP)
+        assert ce == pytest.approx(cc, rel=tol)
+
+
+@given(st.integers(10, 500), st.integers(1, 16), st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_monotonicity(K0, Kv, B):
+    """C_C decreases in K0 and in B (the structure the K0-search relies on)."""
+    Kn = np.full(10, Kv)
+    g = 0.01
+    c0 = C.c_constant(K0, Kn, B, g, CONSTS, QP)
+    assert C.c_constant(K0 + 1, Kn, B, g, CONSTS, QP) <= c0 + 1e-12
+    assert C.c_constant(K0, Kn, B + 1, g, CONSTS, QP) <= c0 + 1e-12
+
+
+def test_quantization_term_vanishes():
+    """Remark 3: with s = infinity (q = 0) the bound loses its last term."""
+    K0, Kn, B, g = 50, np.array([3] * 10), 4, 0.01
+    with_q = C.c_constant(K0, Kn, B, g, CONSTS, QP)
+    no_q = C.c_constant(K0, Kn, B, g, CONSTS, np.zeros(10))
+    c1, c2, c3, c4 = CONSTS
+    expected_gap = c4 * g * (QP * Kn**2).sum() / Kn.sum()
+    assert with_q - no_q == pytest.approx(expected_gap, rel=1e-9)
+
+
+def test_lemma4_constant_step_optimal():
+    """Lemma 4: among sequences with the same sum S, the constant sequence
+    minimizes C_A."""
+    rng = np.random.default_rng(0)
+    K0, Kn, B = 40, np.array([3] * 10), 4
+    Ssum = 0.4
+    const = C.c_arbitrary(K0, Kn, B, np.full(K0, Ssum / K0), CONSTS, QP)
+    for _ in range(20):
+        g = rng.uniform(0.2, 1.0, K0)
+        g = g / g.sum() * Ssum
+        assert C.c_arbitrary(K0, Kn, B, g, CONSTS, QP) >= const - 1e-12

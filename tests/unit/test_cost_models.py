@@ -1,0 +1,56 @@
+"""T(K,B) (17) and E(K,B) (18) cost models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import EdgeSystem, energy_cost, time_cost
+
+
+def test_paper_system_shape():
+    s = EdgeSystem.paper_sec_vii()
+    assert s.N == 10
+    assert s.Fn[:5].mean() / s.Fn[5:].mean() == pytest.approx(10.0)
+    assert (s.Fn[:5].mean() + s.Fn[5:].mean()) / 2 == pytest.approx(1e9)
+
+
+def test_cost_formulas_manual():
+    s = EdgeSystem.paper_sec_vii()
+    K0, Kn, B = 10, np.array([2] * 10), 4
+    T = time_cost(s, K0, Kn, B)
+    expected_T = K0 * (B * np.max(s.Cn / s.Fn * Kn) + s.C0 / s.F0
+                       + np.max(s.M_sn / s.rn) + s.M_s0 / s.r0)
+    assert T == pytest.approx(expected_T)
+    E = energy_cost(s, K0, Kn, B)
+    expected_E = K0 * (B * np.sum(s.alphan * s.Cn * s.Fn**2 * Kn)
+                       + s.alpha0 * s.C0 * s.F0**2
+                       + s.p0 * s.M_s0 / s.r0
+                       + np.sum(s.pn * s.M_sn / s.rn))
+    assert E == pytest.approx(expected_E)
+
+
+@given(st.integers(1, 1000), st.integers(1, 50), st.integers(1, 512))
+@settings(max_examples=30, deadline=None)
+def test_costs_linear_in_k0_and_monotone(K0, Kv, B):
+    s = EdgeSystem.paper_sec_vii()
+    Kn = np.full(10, Kv)
+    assert time_cost(s, 2 * K0, Kn, B) == pytest.approx(
+        2 * time_cost(s, K0, Kn, B))
+    assert energy_cost(s, K0, Kn, B + 1) >= energy_cost(s, K0, Kn, B)
+    assert time_cost(s, K0, Kn + 1, B) >= time_cost(s, K0, Kn, B)
+
+
+def test_quantization_bits_affect_comm():
+    lo = EdgeSystem.paper_sec_vii(s0=2**8)
+    hi = EdgeSystem.paper_sec_vii(s0=2**20)
+    assert hi.M_s0 > lo.M_s0
+    assert hi.comm_time > lo.comm_time
+    assert hi.q_s0 < lo.q_s0
+
+
+def test_tpu_fleet_parameterization():
+    s = EdgeSystem.tpu_v5e_fleet(dim=int(1e9), n_groups=2,
+                                 chips_per_group=256)
+    assert s.N == 2
+    assert time_cost(s, 10, [1, 1], 1) > 0
+    assert energy_cost(s, 10, [1, 1], 1) > 0

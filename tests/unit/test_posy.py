@@ -1,0 +1,72 @@
+"""Posynomial algebra property tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.opt.posy import Posy, const, monomial, var
+
+
+def _rand_posy(rng, n=3, k=4):
+    return Posy(rng.uniform(0.1, 3.0, k), rng.uniform(-2, 2, (k, n)))
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_add_mul_values(seed):
+    rng = np.random.default_rng(seed)
+    n = 3
+    p, q = _rand_posy(rng), _rand_posy(rng)
+    z = rng.normal(size=n)
+    assert (p + q).value(z) == pytest.approx(p.value(z) + q.value(z),
+                                             rel=1e-9)
+    assert (p * q).value(z) == pytest.approx(p.value(z) * q.value(z),
+                                             rel=1e-9)
+    assert (p * 2.5).value(z) == pytest.approx(2.5 * p.value(z), rel=1e-9)
+
+
+@given(st.integers(0, 100))
+@settings(max_examples=25, deadline=None)
+def test_monomial_division_and_powers(seed):
+    rng = np.random.default_rng(seed)
+    n = 3
+    p = _rand_posy(rng)
+    m = monomial(1.7, {0: 1.0, 2: -0.5}, n)
+    z = rng.normal(size=n)
+    assert (p / m).value(z) == pytest.approx(p.value(z) / m.value(z),
+                                             rel=1e-9)
+    assert (3.0 / m).value(z) == pytest.approx(3.0 / m.value(z), rel=1e-9)
+    assert (m ** 2.5).value(z) == pytest.approx(m.value(z) ** 2.5, rel=1e-9)
+    assert (p ** 2).value(z) == pytest.approx(p.value(z) ** 2, rel=1e-8)
+
+
+def test_grad_hess_match_finite_differences():
+    rng = np.random.default_rng(0)
+    n = 3
+    p = _rand_posy(rng)
+    z = rng.normal(size=n) * 0.3
+    f, g, H = p.grad_hess_log(z)
+    eps = 1e-5
+    for i in range(n):
+        dz = np.zeros(n)
+        dz[i] = eps
+        fd = (p.logvalue(z + dz) - p.logvalue(z - dz)) / (2 * eps)
+        assert g[i] == pytest.approx(fd, abs=1e-6)
+        for j in range(n):
+            dj = np.zeros(n)
+            dj[j] = eps
+            fd2 = ((p.logvalue(z + dz + dj) - p.logvalue(z + dz - dj)
+                    - p.logvalue(z - dz + dj) + p.logvalue(z - dz - dj))
+                   / (4 * eps * eps))
+            assert H[i, j] == pytest.approx(fd2, abs=1e-4)
+
+
+def test_coefficients_must_be_positive():
+    with pytest.raises(ValueError):
+        Posy(np.array([1.0, -0.1]), np.zeros((2, 2)))
+
+
+def test_division_by_posynomial_rejected():
+    p = const(1.0, 2) + var(0, 2)
+    with pytest.raises(ValueError):
+        _ = var(1, 2) / p

@@ -1,0 +1,98 @@
+"""Assumption 1 (unbiasedness + variance bound) for the QSGD quantizer —
+statistical tests for both the reference implementation (repro.core) and the
+distributed runtime's counter-RNG variant (repro.fed.runtime)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quantizer as Q
+from repro.fed import runtime as RT
+
+
+@pytest.mark.parametrize("s", [1, 4, 16, 127])
+def test_unbiased_and_variance_bound(s):
+    key = jax.random.PRNGKey(0)
+    dim = 256
+    y = jax.random.normal(key, (dim,)) * 2.0
+    n = 4000
+    qs = Q.variance_bound(s, dim)
+    samples = jax.vmap(lambda k: Q.quantize_dequantize(y, s, k))(
+        jax.random.split(key, n))
+    err = samples - y
+    # unbiasedness: per-coordinate mean error within 6 sigma, using the
+    # ANALYTIC Bernoulli variance (norm/s)^2 frac(1-frac) — the empirical
+    # estimate degenerates for rare-event coordinates at small s.
+    norm = jnp.linalg.norm(y)
+    u = s * jnp.abs(y) / norm
+    frac = u - jnp.floor(u)
+    coord_var = (norm / s) ** 2 * frac * (1 - frac)
+    z = jnp.abs(samples.mean(0) - y) / (jnp.sqrt(coord_var / n) + 1e-9)
+    assert float(jnp.max(z)) < 6.0
+    # variance bound: E||Q(y)-y||^2 <= q_s ||y||^2
+    ratio = float((err**2).sum(1).mean() / (y**2).sum())
+    assert ratio <= qs * 1.05
+
+
+def test_identity_when_s_none():
+    y = jnp.arange(8.0)
+    out = Q.quantize_dequantize(y, None, jax.random.PRNGKey(0))
+    assert jnp.array_equal(out, y)
+
+
+def test_levels_in_range():
+    key = jax.random.PRNGKey(1)
+    y = jax.random.normal(key, (512,)) * 10
+    for s in (2, 8, 64):
+        lvl, norm = Q.quantize(y, s, key)
+        assert int(jnp.max(jnp.abs(lvl))) <= s
+        assert float(norm) == pytest.approx(float(jnp.linalg.norm(y)),
+                                            rel=1e-6)
+
+
+@given(st.integers(min_value=1, max_value=127),
+       st.integers(min_value=2, max_value=2048))
+@settings(max_examples=30, deadline=None)
+def test_bits_and_variance_monotone(s, dim):
+    """M_s grows with s; q_s shrinks with s (the paper's trade-off axis)."""
+    assert Q.bits_per_message(s + 1, dim) >= Q.bits_per_message(s, dim) - 1e-9
+    assert Q.variance_bound(s + 1, dim) <= Q.variance_bound(s, dim) + 1e-12
+    assert Q.variance_bound(s, dim) <= min(dim / s**2, np.sqrt(dim) / s) + 1e-12
+
+
+def test_q_pair():
+    assert Q.q_pair(0.0, 0.0) == 0.0
+    assert Q.q_pair(0.5, 0.2) == pytest.approx(0.5 + 0.2 + 0.1)
+
+
+# --- runtime (counter-RNG) variant -----------------------------------------
+def test_runtime_quantizer_unbiased():
+    dim, s, n = 128, 8, 3000
+    key = jax.random.PRNGKey(2)
+    y = jax.random.normal(key, (dim,))
+    norm = jnp.linalg.norm(y)
+
+    def one(i):
+        u = RT.uniform_like(y, RT._seed_from(jax.random.PRNGKey(i), 0))
+        lvl, nrm = RT.quantize_tensor(y, s, u)
+        return RT.dequantize_tensor(lvl, nrm, s)
+
+    samples = jnp.stack([one(i) for i in range(n)])
+    err = samples - y
+    per_coord_std = jnp.sqrt((err**2).mean(0)) / np.sqrt(n)
+    assert float(jnp.max(jnp.abs(samples.mean(0) - y)
+                         / (per_coord_std + 1e-9))) < 6.0
+    ratio = float((err**2).sum(1).mean() / (y**2).sum())
+    assert ratio <= Q.variance_bound(s, dim) * 1.05
+
+
+def test_counter_rng_uniformity():
+    x = jnp.zeros(200_000)
+    u = np.asarray(RT.uniform_like(x, jnp.uint32(1234)))
+    assert 0.0 <= u.min() and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.005
+    assert abs(np.var(u) - 1 / 12) < 0.002
+    hist, _ = np.histogram(u, bins=16, range=(0, 1))
+    assert hist.min() > 0.9 * len(u) / 16

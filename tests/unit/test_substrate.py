@@ -1,0 +1,165 @@
+"""Data pipeline, checkpointing, step rules, configs — substrate sanity."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import INPUT_SHAPES
+from repro.core.step_rules import (ConstantRule, DiminishingRule,
+                                   ExponentialRule, make_rule)
+from repro.data.federated import partition_iid
+from repro.data.synthetic import mnist_like, token_batches
+from repro.models.registry import ARCH_IDS, get_config
+from repro.train import checkpoint as CKPT
+
+
+def test_step_rules():
+    assert np.allclose(ConstantRule(0.1).sequence(5), 0.1)
+    e = ExponentialRule(0.02, 0.9).sequence(4)
+    assert np.allclose(e, [0.02, 0.018, 0.0162, 0.01458])
+    d = DiminishingRule(0.02, 600.0).sequence(3)
+    assert np.allclose(d, [600 * 0.02 / (k + 600) for k in (1, 2, 3)])
+    with pytest.raises(ValueError):
+        ExponentialRule(0.02, 1.5)
+    assert isinstance(make_rule("c", 0.1), ConstantRule)
+
+
+def test_mnist_like_deterministic():
+    X1, y1 = mnist_like(n=500, seed=3)
+    X2, y2 = mnist_like(n=500, seed=3)
+    assert np.array_equal(X1, X2) and np.array_equal(y1, y2)
+    assert X1.shape == (500, 784) and set(np.unique(y1)) <= set(range(10))
+    # classes are separable: a centered template matcher nails them
+    Xb, yb = mnist_like(n=2000, seed=3)
+    Xc = Xb - Xb.mean(0)
+    templates = np.stack([Xc[yb == c].mean(0) for c in range(10)])
+    pred = np.argmax(Xc @ templates.T, axis=1)
+    assert (pred == yb).mean() > 0.9
+
+
+def test_partition_iid():
+    X, y = mnist_like(n=1000, seed=0)
+    Xw, yw = partition_iid(X, y, 10)
+    assert len(Xw) == 10 and all(len(a) == 100 for a in Xw)
+    flat = np.concatenate([a for a in yw])
+    assert sorted(flat.tolist()) == sorted(y[:1000].tolist())
+
+
+def test_token_stream_has_structure():
+    it = token_batches(seed=0, batch=4, seq=64, vocab=128)
+    b = next(it)
+    assert b["tokens"].shape == (4, 64)
+    assert jnp.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "c": [jnp.zeros((2,), jnp.int32), jnp.float32(3.0)]}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.ckpt")
+        CKPT.save(path, tree, {"round": 7})
+        out, meta = CKPT.load(path, like=tree)
+        assert meta["round"] == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            assert a.dtype == b.dtype
+            assert jnp.array_equal(jnp.asarray(a, jnp.float32),
+                                   jnp.asarray(b, jnp.float32))
+
+
+def test_all_configs_exact_shapes():
+    """The assigned table: exact published dims in every full config."""
+    expect = {
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    }
+    for arch, (L, D, H, KV, F, V) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff,
+                c.vocab) == (L, D, H, KV, F, V), arch
+    # moe extras
+    assert get_config("olmoe-1b-7b").n_experts == 64
+    assert get_config("olmoe-1b-7b").top_k == 8
+    assert get_config("phi3.5-moe-42b-a6.6b").n_experts == 16
+    assert get_config("phi3.5-moe-42b-a6.6b").top_k == 2
+    assert get_config("zamba2-2.7b").ssm_state == 64
+    assert get_config("qwen3-1.7b").qk_norm
+    assert get_config("qwen2-vl-7b").mrope
+
+
+def test_input_shapes_table():
+    t = INPUT_SHAPES
+    assert (t["train_4k"].seq_len, t["train_4k"].global_batch) == (4096, 256)
+    assert (t["prefill_32k"].seq_len, t["prefill_32k"].global_batch) == (32768, 32)
+    assert (t["decode_32k"].seq_len, t["decode_32k"].global_batch) == (32768, 128)
+    assert (t["long_500k"].seq_len, t["long_500k"].global_batch) == (524288, 1)
+
+
+def test_long_context_eligibility():
+    eligible = {a for a in ARCH_IDS
+                if get_config(a).supports_long_context()}
+    assert eligible == {"gemma3-4b", "xlstm-1.3b", "zamba2-2.7b"}
+
+
+def test_mesh_layout_math():
+    from repro.configs.base import MeshLayout
+    ml = MeshLayout(fl_sub=4, tp=16)
+    assert ml.logical_shape(2, 16, 16) == (8, 4, 16)
+
+
+def test_sharding_rules_valid_for_every_arch():
+    """System invariant: every PartitionSpec produced by the rules divides
+    its dimension on the production train/serve meshes (no invalid specs)."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import jax
+        from repro.launch.specs import build_case
+        from repro.models.registry import ARCH_IDS
+        from repro.configs.base import INPUT_SHAPES
+        from repro.launch.specs import case_supported
+        from repro.models.registry import get_config
+        import numpy as np
+        for arch in ARCH_IDS:
+            for shape in ("train_4k", "decode_32k"):
+                if case_supported(get_config(arch), INPUT_SHAPES[shape]):
+                    continue
+                case = build_case(arch, shape)
+                sizes = dict(zip(case.mesh.axis_names,
+                                 case.mesh.devices.shape))
+                def check(sds):
+                    spec = getattr(sds, "sharding", None)
+                    if spec is None:
+                        return
+                    for dim, ax in zip(sds.shape, spec.spec):
+                        if ax is None:
+                            continue
+                        axes = ax if isinstance(ax, tuple) else (ax,)
+                        n = int(np.prod([sizes[a] for a in axes]))
+                        assert dim % n == 0, (arch, shape, sds.shape,
+                                              spec.spec)
+                jax.tree.map(check, case.args,
+                             is_leaf=lambda x: hasattr(x, "sharding"))
+        print("SHARDING_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "SHARDING_OK" in r.stdout, r.stdout + r.stderr[-2000:]
