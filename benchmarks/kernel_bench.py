@@ -1,18 +1,21 @@
-"""Pallas kernel micro-benchmarks (interpret mode on CPU — semantics, not
-TPU wall-time) + the pure-jnp oracle timings for reference."""
+"""Codec micro-benchmarks: Pallas backend (interpret mode on CPU — semantics,
+not TPU wall-time) vs the reference jnp backend, plus the int4 wire
+pack/unpack and the flash-decode kernel."""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.compress import make_codec, pack_int4, unpack_int4
 from repro.kernels.flash_decode import BLOCK_C, flash_decode_call
 
 from .common import RESULTS, write_csv
 
 SIZES = (2**16, 2**20, 2**22)
+SMOKE_SIZES = (2**16,)
 
 
 def _time(fn, *args, reps=5):
@@ -25,37 +28,52 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run(tag="kernel_bench"):
+def run(tag="kernel_bench", smoke=False):
     key = jax.random.PRNGKey(0)
+    c_pallas = make_codec(64, wire="int8", backend="pallas")
+    c_ref = make_codec(64, wire="int8", backend="jnp")
+    enc_pallas = jax.jit(lambda yy, uu: c_pallas.encode(yy, uu))
+    enc_ref = jax.jit(lambda yy, uu: c_ref.encode(yy, uu))
+    apply_pallas = jax.jit(
+        lambda xx, ll, nn: c_pallas.decode_apply(xx, ll, nn, 0.01))
+    pack = jax.jit(lambda ll: unpack_int4(pack_int4(ll), ll.size))
+    reps = 2 if smoke else 5
     rows = []
     t0 = time.time()
-    for n in SIZES:
+    for n in SMOKE_SIZES if smoke else SIZES:
         y = jax.random.normal(key, (n,))
-        lvl, norm = ops.qsgd_quantize(y, key, s=64)
-        us_q = _time(lambda: ops.qsgd_quantize(y, key, s=64))
-        us_d = _time(lambda: ops.qsgd_dequant_apply(y, lvl, norm, 0.01, s=64))
-        ref_q = jax.jit(lambda yy, u: ref.qsgd_quantize_ref(
-            yy, u, 64, jnp.sqrt(ref.sumsq_ref(yy))))
         u = jax.random.uniform(key, (n,))
-        us_ref = _time(lambda: ref_q(y, u))
+        lvl, norm = enc_pallas(y, u)
+        assert jnp.array_equal(lvl, enc_ref(y, u)[0]), "backends diverge"
+        us_q = _time(enc_pallas, y, u, reps=reps)
+        us_d = _time(apply_pallas, y, lvl, norm, reps=reps)
+        us_ref = _time(enc_ref, y, u, reps=reps)
+        us_pk = _time(pack, jnp.clip(lvl, -7, 7), reps=reps)
         rows.append({"n": n, "quantize_us": round(us_q, 1),
                      "dequant_apply_us": round(us_d, 1),
-                     "ref_us": round(us_ref, 1)})
+                     "ref_us": round(us_ref, 1),
+                     "int4_roundtrip_us": round(us_pk, 1)})
     # flash-decode kernel at a 4k-deep cache
-    B, KV, G, dh, C = 2, 4, 2, 128, 8 * BLOCK_C
+    B, KV, G, dh, C = 2, 4, 2, 128, (1 if smoke else 8) * BLOCK_C
     q = jax.random.normal(key, (B, KV, G, dh))
     k = jax.random.normal(key, (B, C, KV, dh))
     v = jax.random.normal(key, (B, C, KV, dh))
     valid = jnp.ones((B, C))
     fd = jax.jit(lambda *a: flash_decode_call(*a))
-    us_fd = _time(lambda: fd(q, k, v, valid))
+    us_fd = _time(lambda: fd(q, k, v, valid), reps=reps)
     rows.append({"n": f"flash_decode_C{C}", "quantize_us": round(us_fd, 1),
-                 "dequant_apply_us": "", "ref_us": ""})
+                 "dequant_apply_us": "", "ref_us": "",
+                 "int4_roundtrip_us": ""})
     path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
-                     ["n", "quantize_us", "dequant_apply_us", "ref_us"])
+                     ["n", "quantize_us", "dequant_apply_us", "ref_us",
+                      "int4_roundtrip_us"])
     return {"rows": len(rows), "csv": path,
             "derived": rows[-1]["quantize_us"], "dt": time.time() - t0}
 
 
 if __name__ == "__main__":
-    print(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small size, fewer reps (CI verify recipe)")
+    args = ap.parse_args()
+    print(run(smoke=args.smoke))

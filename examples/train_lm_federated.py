@@ -16,7 +16,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
 from repro.core import ConstantRule
@@ -44,16 +43,21 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
     ap.add_argument("--k-local", type=int, default=2)
-    ap.add_argument("--wire", default="int8", choices=["f32", "int8"])
+    from repro.compress import RUNTIME_WIRES, wire_max_s
+    ap.add_argument("--wire", default="int8", choices=list(RUNTIME_WIRES))
+    ap.add_argument("--s", type=int, default=None,
+                    help="quantization parameter s0=sn (default: 64, "
+                         "clamped to the wire's cap)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+    s_q = args.s if args.s is not None else min(64, wire_max_s(args.wire) or 64)
 
     cfg = small_cfg(args.full)
+    from repro.compat import make_mesh
     devs = np.array(jax.devices()).reshape(2, 2, 2)
-    mesh = Mesh(devs, ("fl", "fsdp", "tp"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh(devs, ("fl", "fsdp", "tp"))
     fl = 2
-    fed = FedConfig(n_workers=fl, Kn=(args.k_local,) * fl, s0=64, sn=64,
+    fed = FedConfig(n_workers=fl, Kn=(args.k_local,) * fl, s0=s_q, sn=s_q,
                     wire=args.wire)
     trainer = GenQSGDTrainer(lm, cfg, fed, mesh,
                              step_rule=ConstantRule(0.01),

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# One-step verify recipe: tier-1 test suite + a fast kernel-bench smoke run.
+#
+#   ./scripts/check.sh            # everything
+#   SKIP_BENCH=1 ./scripts/check.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+if [ -z "${SKIP_BENCH:-}" ]; then
+  echo "== kernel_bench --smoke =="
+  python -m benchmarks.kernel_bench --smoke
+fi
+
+echo "== check.sh OK =="

@@ -1,0 +1,50 @@
+"""Version shims for the moving parts of the jax API surface.
+
+The repo targets current jax (``jax.shard_map``, ``Mesh(axis_types=...)``),
+but clean environments may carry 0.4.x where shard_map still lives in
+``jax.experimental`` (``check_rep`` instead of ``check_vma``) and meshes have
+no axis types.  Routing the three call sites through here keeps every
+transport runnable on both.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "make_mesh_by_shape"]
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map with replication checking off, on any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def make_mesh(devices, axis_names) -> jax.sharding.Mesh:
+    """Mesh with Auto axis types where the installed jax supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.sharding.Mesh(devices, axis_names)
+    return jax.sharding.Mesh(
+        devices, axis_names, axis_types=(axis_type.Auto,) * len(axis_names))
+
+
+def make_mesh_by_shape(shape, axis_names) -> jax.sharding.Mesh:
+    """jax.make_mesh (topology-aware device ordering on real fleets) with
+    Auto axis types when supported; enumeration-order fallback otherwise."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if hasattr(jax, "make_mesh"):
+        if axis_type is not None:
+            try:
+                return jax.make_mesh(
+                    shape, axis_names,
+                    axis_types=(axis_type.Auto,) * len(axis_names))
+            except TypeError:  # make_mesh predates axis_types
+                pass
+        return jax.make_mesh(shape, axis_names)
+    import numpy as np
+    n = int(np.prod(shape))
+    return make_mesh(np.asarray(jax.devices()[:n]).reshape(shape), axis_names)

@@ -1,0 +1,40 @@
+"""repro.compress — the codec subsystem: one quantizer, many consumers.
+
+The paper reduces every algorithm in its family to one abstract object, the
+random quantizer ``Q(·; s)`` characterized by its variance constant ``q_s``
+(Assumption 1) and message size ``M_s``.  This package is that object's single
+concrete home.  It splits the concern into three orthogonal axes:
+
+  codec     (*what* is sent)   — :class:`QSGDCodec` (Assumption-1 stochastic
+            levels, optional per-bucket norms) and :class:`IdentityCodec`
+            (s = ∞, recovering PM-SGD / FedAvg / PR-SGD);
+  backend   (*how* it is computed) — reference ``jnp`` math or the Pallas TPU
+            kernels from :mod:`repro.kernels.qsgd`, interchangeable per call
+            and verified bit-identical;
+  wire      (*how* it travels / what it costs) — "packed" | "f32" | "int8" |
+            "int4" | "rs_ag" formats with the bit accounting in
+            :mod:`repro.compress.wire`.
+
+Consumers:
+  * :mod:`repro.core.genqsgd` — Algorithm 1 reference, via ``make_codec``;
+  * :mod:`repro.fed.runtime` — per-tensor encode + aggregation transports,
+    via the traced-``s``-capable ``encode_tensor`` / ``decode_tensor``;
+  * :mod:`repro.core.cost` — ``M_s`` / ``q_s`` via ``codec.wire_bits`` /
+    ``codec.variance_bound``, so the GIA/CGP optimizer prices exactly the
+    bytes the runtime sends;
+  * :mod:`repro.train.trainer` and ``benchmarks/kernel_bench.py``.
+"""
+from .backends import (default_interpret, decode_tensor, encode_tensor,
+                       level_dtype, qsgd_levels)
+from .codec import (Codec, IdentityCodec, QSGDCodec, bits_per_message,
+                    make_codec, q_pair, variance_bound)
+from .wire import (RUNTIME_WIRES, WIRE_FORMATS, level_bits, pack_int4,
+                   unpack_int4, wire_bits, wire_max_s)
+
+__all__ = [
+    "Codec", "QSGDCodec", "IdentityCodec", "make_codec",
+    "encode_tensor", "decode_tensor", "qsgd_levels", "level_dtype",
+    "variance_bound", "bits_per_message", "q_pair",
+    "WIRE_FORMATS", "RUNTIME_WIRES", "wire_bits", "level_bits",
+    "wire_max_s", "pack_int4", "unpack_int4", "default_interpret",
+]

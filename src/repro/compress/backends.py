@@ -1,0 +1,156 @@
+"""The two interchangeable execution backends of the codec subsystem.
+
+This module owns the ONE implementation of the QSGD stochastic level
+assignment in the repository:
+
+    xi_i = floor(s * |y_i| / ||y||) + Bernoulli(frac)          (Assumption 1)
+
+``qsgd_levels`` is the reference ``jnp`` form; the Pallas backend reaches the
+same math through the tiled TPU kernels in :mod:`repro.kernels.qsgd` (whose
+kernel body is the lowered twin of this formula) and is verified bit-identical
+against the reference in ``tests/kernels/test_qsgd_kernels.py``.
+
+Every former copy of this computation — ``core/quantizer._levels``,
+``fed/runtime.quantize_tensor``, ``kernels/ref.qsgd_quantize_ref`` — was
+deleted in favour of this module; consumers go through
+:mod:`repro.compress.codec` or the functional ``encode_tensor`` /
+``decode_tensor`` pair below.
+
+Randomness is externally supplied as a uniform(0,1) tensor shaped like the
+input (callers choose ``jax.random`` or the runtime's partitionable
+counter-RNG), so both backends are deterministic functions of their inputs
+and can be cross-checked exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import qsgd as _K
+
+__all__ = [
+    "qsgd_levels", "encode_jnp", "decode_jnp", "encode_pallas",
+    "decode_apply_pallas", "encode_tensor", "decode_tensor",
+    "tensor_norm_pallas", "default_interpret", "level_dtype",
+]
+
+
+def default_interpret() -> bool:
+    """Pallas kernels run under the interpreter off-TPU (semantics identical)."""
+    return jax.default_backend() != "tpu"
+
+
+def level_dtype(s: int):
+    """Narrowest signed container for levels in [-s, s]."""
+    return jnp.int8 if s <= 127 else jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# reference jnp backend
+# ---------------------------------------------------------------------------
+def qsgd_levels(y: jax.Array, u: jax.Array, s, norm: jax.Array) -> jax.Array:
+    """Signed stochastic levels sign(y) * xi as f32 (caller picks container).
+
+    ``s`` may be a Python int or a traced scalar (heterogeneous per-worker
+    quantizers vectorize through vmap); ``u`` is uniform(0,1) noise like y.
+    """
+    yf = y.astype(jnp.float32)
+    safe = jnp.where(norm > 0, norm, 1.0)
+    scaled = jnp.asarray(s, jnp.float32) * jnp.abs(yf) / safe
+    base = jnp.floor(scaled)
+    xi = base + (u < (scaled - base)).astype(jnp.float32)
+    return jnp.sign(yf) * xi
+
+
+def encode_jnp(y: jax.Array, s, u: jax.Array):
+    """-> (levels f32, norm f32 scalar) with the per-tensor L2 norm."""
+    yf = y.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(yf * yf))
+    return qsgd_levels(y, u, s, norm), norm
+
+
+def decode_jnp(levels: jax.Array, norm: jax.Array, s,
+               dtype=jnp.float32) -> jax.Array:
+    """Q(y; s) value from (levels, norm): levels * norm / s."""
+    s_f = jnp.asarray(s, jnp.float32)
+    return (levels.astype(jnp.float32) * (norm / s_f)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel backend (pads to the kernel tile grid, delegates to
+# repro.kernels.qsgd; int8 container, so s <= 127)
+# ---------------------------------------------------------------------------
+def _to_grid2d(flat: jax.Array):
+    """Pad a 1-D array to a (R, BLOCK_COLS) grid; returns (2d, orig_len)."""
+    n = flat.shape[0]
+    cols = _K.BLOCK_COLS
+    rows = max(_K.BLOCK_ROWS, -(-n // cols))
+    rows = -(-rows // _K.BLOCK_ROWS) * _K.BLOCK_ROWS
+    pad = rows * cols - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, cols), n
+
+
+def encode_pallas(y: jax.Array, s: int, u: jax.Array,
+                  interpret: Optional[bool] = None):
+    """Kernel-backed encode: -> (levels int8 shaped like y, norm f32)."""
+    if s > 127:
+        raise ValueError(f"the Pallas backend stores levels as int8 "
+                         f"(s <= 127), got {s}")
+    itp = default_interpret() if interpret is None else interpret
+    y2d, n = _to_grid2d(y.reshape(-1).astype(jnp.float32))
+    # zero-padded noise is safe: padded y is 0 => frac 0 => u < 0 never fires
+    u2d, _ = _to_grid2d(u.reshape(-1).astype(jnp.float32))
+    norm = jnp.sqrt(_K.sumsq_kernel_call(y2d, interpret=itp))
+    safe = jnp.where(norm > 0, norm, 1.0)
+    lvl2d = _K.quantize_kernel_call(y2d, u2d, jnp.float32(s) / safe,
+                                    interpret=itp)
+    return lvl2d.reshape(-1)[:n].reshape(y.shape), norm
+
+
+def decode_apply_pallas(x: jax.Array, levels: jax.Array, norm: jax.Array,
+                        s: int, gamma, interpret: Optional[bool] = None):
+    """Fused x + gamma * decode(levels) — the model-update apply (3)."""
+    itp = default_interpret() if interpret is None else interpret
+    x2d, n = _to_grid2d(x.reshape(-1))
+    l2d, _ = _to_grid2d(levels.reshape(-1).astype(jnp.float32))
+    out = _K.dequant_apply_kernel_call(
+        x2d, l2d.astype(jnp.int8), (norm / s).astype(jnp.float32),
+        jnp.float32(gamma), interpret=itp)
+    return out.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def tensor_norm_pallas(y: jax.Array, interpret: Optional[bool] = None):
+    itp = default_interpret() if interpret is None else interpret
+    y2d, _ = _to_grid2d(y.reshape(-1).astype(jnp.float32))
+    return jnp.sqrt(_K.sumsq_kernel_call(y2d, interpret=itp))
+
+
+# ---------------------------------------------------------------------------
+# functional per-tensor entry points (traced-s capable; None = identity)
+# ---------------------------------------------------------------------------
+def encode_tensor(y: jax.Array, s, u: jax.Array, backend: str = "jnp"):
+    """-> (levels int8, norm f32 scalar); passthrough (y, 1.0) for s=None.
+
+    The int8 container bounds ``s`` at 127 — exactly the runtime's wire
+    constraint; use a :class:`~repro.compress.codec.QSGDCodec` for wider
+    static quantizers.
+    """
+    if s is None:
+        return y, jnp.float32(1.0)
+    if isinstance(s, int) and s > 127:
+        raise ValueError(f"encode_tensor's int8 container carries s <= 127, "
+                         f"got {s}; use QSGDCodec for wider quantizers")
+    if backend == "pallas":
+        return encode_pallas(y, int(s), u)
+    lvl, norm = encode_jnp(y, s, u)
+    return lvl.astype(jnp.int8), norm
+
+
+def decode_tensor(levels: jax.Array, norm: jax.Array, s,
+                  dtype=jnp.float32) -> jax.Array:
+    if s is None:
+        return levels.astype(dtype)
+    return decode_jnp(levels, norm, s, dtype)

@@ -1,0 +1,215 @@
+"""Codec objects: the paper's abstract quantizer (q_s, M_s) made concrete.
+
+A codec bundles the four things every layer of the system needs from the
+quantizer ``Q(·; s)``:
+
+  encode(tensor, noise) -> (levels, norm)   stochastic quantization
+  decode(levels, norm)  -> tensor           dequantization
+  wire_bits(dim)        -> M_s              bits per message (cost layer)
+  variance_bound(dim)   -> q_s              Assumption-1 variance constant
+
+Instances:
+  :class:`QSGDCodec`     — the paper's Assumption-1 quantizer; optional
+                           per-bucket norms (QSGD bucketing, matching the
+                           cost layer's ``q_dim``); backend "jnp" or
+                           "pallas" (bit-identical, kernel-tiled).
+  :class:`IdentityCodec` — s = ∞: exact passthrough, q_s = 0, recovering
+                           PM-SGD / FedAvg / PR-SGD as special cases.
+
+``make_codec`` is the single constructor the rest of the repo uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import backends as B
+from . import wire as W
+
+__all__ = [
+    "Codec", "QSGDCodec", "IdentityCodec", "make_codec",
+    "variance_bound", "bits_per_message", "q_pair",
+]
+
+
+def variance_bound(s: Optional[int], dim: int) -> float:
+    """q_s of Assumption 1 for the QSGD quantizer: min(D/s^2, sqrt(D)/s)."""
+    if s is None:
+        return 0.0
+    if s <= 0:
+        raise ValueError(f"quantization parameter s must be positive, got {s}")
+    return min(dim / s**2, math.sqrt(dim) / s)
+
+
+def bits_per_message(s: Optional[int], dim: int) -> float:
+    """M_s under the fixed-length "packed" wire model (monotone in s)."""
+    return W.wire_bits(s, dim, wire="packed")
+
+
+def q_pair(q_s0: float, q_sn: float) -> float:
+    """q_{s0,sn} = q_{s0} + q_{sn} + q_{s0} q_{sn} (Theorem 1)."""
+    return q_s0 + q_sn + q_s0 * q_sn
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Interface + shared conveniences.  ``wire`` only affects bit pricing
+    and transport validation — encode/decode math is wire-independent."""
+
+    wire: str = "packed"
+
+    @property
+    def s(self) -> Optional[int]:
+        raise NotImplementedError
+
+    def encode(self, y: jax.Array, u: jax.Array):
+        raise NotImplementedError
+
+    def decode(self, levels: jax.Array, norm: jax.Array, dtype=jnp.float32):
+        raise NotImplementedError
+
+    def wire_bits(self, dim: int) -> float:
+        raise NotImplementedError
+
+    def variance_bound(self, dim: int) -> float:
+        raise NotImplementedError
+
+    @property
+    def is_identity(self) -> bool:
+        return self.s is None
+
+    def quantize_dequantize(self, y: jax.Array, key: jax.Array) -> jax.Array:
+        """Q(y; s) as a value (the paper's math; jax.random noise)."""
+        u = jax.random.uniform(key, y.shape, jnp.float32)
+        lvl, norm = self.encode(y, u)
+        return self.decode(lvl, norm, dtype=y.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec(Codec):
+    """s = ∞: exact communication, q_s = 0, raw f32 on the wire."""
+
+    @property
+    def s(self) -> Optional[int]:
+        return None
+
+    def encode(self, y, u):
+        return y, jnp.float32(1.0)
+
+    def decode(self, levels, norm, dtype=jnp.float32):
+        return levels.astype(dtype)
+
+    def wire_bits(self, dim: int) -> float:
+        return W.wire_bits(None, dim, wire=self.wire)
+
+    def variance_bound(self, dim: int) -> float:
+        return 0.0
+
+    def quantize_dequantize(self, y, key):
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class QSGDCodec(Codec):
+    """The Assumption-1 QSGD quantizer with s levels.
+
+    Attributes:
+      s_levels: quantization parameter s (>= 1).
+      wire: pricing/transport format (see :mod:`repro.compress.wire`).
+      bucket: per-bucket-norm quantization — the flattened input is split
+        into buckets of this many coordinates, each normalized by its own
+        L2 norm (Assumption 1 then holds per bucket with D = bucket).
+        ``None`` = one norm for the whole tensor.
+      backend: "jnp" reference math or "pallas" TPU kernels (s <= 127,
+        whole-tensor norm); verified bit-identical.
+    """
+
+    s_levels: int = 1
+    bucket: Optional[int] = None
+    backend: str = "jnp"
+    interpret: Optional[bool] = None  # Pallas interpreter override
+
+    def __post_init__(self):
+        if self.s_levels <= 0:
+            raise ValueError(f"s must be positive, got {self.s_levels}")
+        cap = W.wire_max_s(self.wire)
+        if cap is not None and self.s_levels > cap:
+            raise ValueError(f"wire {self.wire!r} carries s <= {cap}, "
+                             f"got {self.s_levels}")
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.backend == "pallas" and self.bucket is not None:
+            raise ValueError("the Pallas backend computes whole-tensor norms")
+        if self.backend == "pallas" and self.s_levels > 127:
+            raise ValueError("the Pallas backend stores levels as int8 "
+                             f"(s <= 127), got {self.s_levels}")
+
+    @property
+    def s(self) -> int:
+        return self.s_levels
+
+    @property
+    def level_dtype(self):
+        return B.level_dtype(self.s_levels)
+
+    # -- encode / decode -------------------------------------------------
+    def _bucketed(self, flat: jax.Array):
+        nb = -(-flat.shape[0] // self.bucket)
+        pad = nb * self.bucket - flat.shape[0]
+        return jnp.pad(flat, (0, pad)).reshape(nb, self.bucket)
+
+    def encode(self, y: jax.Array, u: jax.Array):
+        """-> (levels shaped like y, norm) — norm is a scalar, or (n_buckets,)
+        when ``bucket`` is set."""
+        if self.backend == "pallas":
+            return B.encode_pallas(y, self.s_levels, u, self.interpret)
+        if self.bucket is not None:
+            y2 = self._bucketed(y.reshape(-1).astype(jnp.float32))
+            u2 = self._bucketed(u.reshape(-1).astype(jnp.float32))
+            lvl2, norms = jax.vmap(
+                lambda yy, uu: B.encode_jnp(yy, self.s_levels, uu))(y2, u2)
+            lvl = lvl2.reshape(-1)[:y.size].reshape(y.shape)
+            return lvl.astype(self.level_dtype), norms
+        lvl, norm = B.encode_jnp(y, self.s_levels, u)
+        return lvl.astype(self.level_dtype), norm
+
+    def decode(self, levels: jax.Array, norm: jax.Array, dtype=jnp.float32):
+        if self.bucket is not None and norm.ndim == 1:
+            l2 = self._bucketed(levels.reshape(-1).astype(jnp.float32))
+            v2 = jax.vmap(
+                lambda ll, nn: B.decode_jnp(ll, nn, self.s_levels))(l2, norm)
+            return v2.reshape(-1)[:levels.size].reshape(levels.shape) \
+                     .astype(dtype)
+        return B.decode_jnp(levels, norm, self.s_levels, dtype)
+
+    def decode_apply(self, x: jax.Array, levels: jax.Array, norm: jax.Array,
+                     gamma) -> jax.Array:
+        """x + gamma * decode(levels) — kernel-fused on the Pallas backend."""
+        if self.backend == "pallas":
+            return B.decode_apply_pallas(x, levels, norm, self.s_levels,
+                                         gamma, self.interpret)
+        upd = gamma * self.decode(levels, norm)
+        return (x.astype(jnp.float32) + upd).astype(x.dtype)
+
+    # -- cost-layer views ------------------------------------------------
+    def wire_bits(self, dim: int) -> float:
+        return W.wire_bits(self.s_levels, dim, wire=self.wire,
+                           bucket=self.bucket)
+
+    def variance_bound(self, dim: int) -> float:
+        eff = dim if self.bucket is None else min(self.bucket, dim)
+        return variance_bound(self.s_levels, eff)
+
+
+def make_codec(s: Optional[int], wire: str = "packed",
+               bucket: Optional[int] = None, backend: str = "jnp",
+               interpret: Optional[bool] = None) -> Codec:
+    """The one constructor: s=None -> IdentityCodec, else QSGDCodec."""
+    if s is None:
+        return IdentityCodec(wire=wire)
+    return QSGDCodec(wire=wire, s_levels=int(s), bucket=bucket,
+                     backend=backend, interpret=interpret)

@@ -1,0 +1,118 @@
+"""Wire formats and cost-model-consistent bit accounting.
+
+A *codec* decides how a tensor becomes (levels, norm); a *wire format*
+decides how those travel and therefore how many bits one message costs.
+The same table serves both sides of the system:
+
+  * the :mod:`repro.fed.runtime` aggregation transports validate their
+    quantizers against :func:`wire_max_s` and move exactly the payloads
+    priced here;
+  * :class:`repro.core.cost.EdgeSystem` derives ``M_s`` from
+    :func:`wire_bits` via the codec, so the GIA/CGP optimizer provably
+    prices the same bytes the runtime sends.
+
+Formats:
+  "packed" — fixed-length code: 32-bit norm per bucket plus, per coordinate,
+             a sign bit and ceil(log2(s+1)) level bits.  The paper's
+             monotone-in-s cost model (arbitrary s); not a runtime transport.
+  "f32"    — dequantized values as f32 (paper-faithful math on the wire).
+  "rs_ag"  — same f32 payload moved as reduce-scatter + all-gather.
+  "int8"   — raw int8 levels + f32 norms; s <= 127.
+  "int4"   — two levels packed per byte + f32 norms; s <= 7 (the paper's
+             low-s regime), 2x fewer aggregation bytes than int8.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "WIRE_FORMATS", "RUNTIME_WIRES", "wire_max_s", "level_bits",
+    "wire_bits", "pack_int4", "unpack_int4",
+]
+
+#: every format the bit model prices
+WIRE_FORMATS = ("packed", "f32", "int8", "int4", "rs_ag")
+#: the subset the fed runtime accepts as aggregation transports
+RUNTIME_WIRES = ("f32", "int8", "int4", "rs_ag")
+
+#: largest s each format can carry (None = unbounded)
+_WIRE_MAX_S = {"packed": None, "f32": 127, "rs_ag": 127,
+               "int8": 127, "int4": 7}
+
+
+def wire_max_s(wire: str) -> Optional[int]:
+    """Largest quantization parameter the format's container can hold.
+
+    f32/rs_ag move f32 *values*, but the runtime still materializes levels
+    in an int8 container first, hence the shared 127 cap there.
+    """
+    if wire not in _WIRE_MAX_S:
+        raise ValueError(f"unknown wire format {wire!r}; "
+                         f"expected one of {WIRE_FORMATS}")
+    return _WIRE_MAX_S[wire]
+
+
+def level_bits(s: Optional[int], wire: str) -> float:
+    """Bits one coordinate occupies on the wire."""
+    if s is None or wire in ("f32", "rs_ag"):
+        return 32.0
+    if wire == "packed":
+        return 1.0 + math.ceil(math.log2(s + 1))
+    if wire == "int8":
+        return 8.0
+    if wire == "int4":
+        return 4.0
+    raise ValueError(f"unknown wire format {wire!r}")
+
+
+def wire_bits(s: Optional[int], dim: int, wire: str = "packed",
+              bucket: Optional[int] = None) -> float:
+    """M_s: bits to represent one D-dimensional message on this wire.
+
+    ``bucket`` = per-bucket-norm quantization (QSGD bucketing): each bucket
+    contributes its own 32-bit norm word.  Raises for (s, wire) pairs the
+    transport cannot carry, so the cost layer can never price a message the
+    runtime would reject.
+    """
+    cap = wire_max_s(wire)
+    if s is not None and s <= 0:
+        raise ValueError(f"quantization parameter s must be positive, got {s}")
+    if s is not None and cap is not None and s > cap:
+        raise ValueError(f"wire format {wire!r} carries s <= {cap}, got {s}")
+    if s is None:
+        if wire == "int4":
+            # mirror the runtime: the packing wire cannot carry an exact
+            # (s = infinity) f32 passthrough, so refuse to price one
+            raise ValueError("wire format 'int4' packs quantized levels and "
+                             "cannot carry exact (s=None) messages")
+        return 32.0 * (dim + 1)  # raw f32 vector + norm word
+    if wire in ("f32", "rs_ag"):
+        return 32.0 * dim        # values on the wire; norm already folded in
+    n_buckets = 1 if bucket is None else -(-dim // bucket)
+    return 32.0 * n_buckets + dim * level_bits(s, wire)
+
+
+# ---------------------------------------------------------------------------
+# int4 packing: two signed nibbles per int8 byte (levels in [-7, 7])
+# ---------------------------------------------------------------------------
+def pack_int4(levels: jax.Array) -> jax.Array:
+    """Pack int levels in [-7, 7] into ceil(n/2) bytes (lo nibble first)."""
+    flat = levels.reshape(-1).astype(jnp.uint8)
+    if flat.shape[0] % 2:
+        flat = jnp.pad(flat, (0, 1))
+    lo = flat[0::2] & jnp.uint8(0x0F)
+    hi = (flat[1::2] & jnp.uint8(0x0F)) << jnp.uint8(4)
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_int4`: -> flat int8 levels of length ``n``."""
+    p = packed.reshape(-1).astype(jnp.uint8)
+    lo = p & jnp.uint8(0x0F)
+    hi = (p >> jnp.uint8(4)) & jnp.uint8(0x0F)
+    nib = jnp.stack([lo, hi], axis=-1).reshape(-1)[:n].astype(jnp.int32)
+    return jnp.where(nib > 7, nib - 16, nib).astype(jnp.int8)

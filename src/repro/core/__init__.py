@@ -1,14 +1,15 @@
 """The paper's primary contribution: GenQSGD + its convergence/cost models.
 
 Layers:
-  quantizer    — Assumption-1 random quantizer (QSGD instance) + (q_s, M_s)
   step_rules   — constant / exponential / diminishing Γ generators
   convergence  — C_A / C_C / C_E / C_D closed forms (Theorem 1, Lemmas 1-3)
   cost         — T(K,B), E(K,B) heterogeneous-system cost models
   genqsgd      — Algorithm 1 (single-process reference; SPMD twin in repro.fed)
+
+The quantizer itself lives in :mod:`repro.compress` (codecs + backends +
+wire formats); the (q_s, M_s) helpers are re-exported here for convenience.
 """
-from .quantizer import (QuantizerSpec, variance_bound, bits_per_message,
-                        quantize, dequantize, quantize_dequantize, q_pair)
+from ..compress import (bits_per_message, make_codec, q_pair, variance_bound)
 from .step_rules import (ConstantRule, ExponentialRule, DiminishingRule,
                          StepRule, make_rule)
 from .convergence import (MLProblemConstants, coefficients, c_arbitrary,

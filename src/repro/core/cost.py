@@ -22,7 +22,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .quantizer import bits_per_message, variance_bound, q_pair
+from ..compress import make_codec, q_pair
 
 __all__ = ["EdgeSystem", "time_cost", "energy_cost"]
 
@@ -49,6 +49,9 @@ class EdgeSystem:
     # quantization-bucket dimension for q_s (QSGD bucketing: per-bucket norms;
     # Assumption 1 holds per bucket exactly as per tensor).  None = whole-dim.
     q_dim: Optional[int] = None
+    # wire format priced by M_s ("packed" = fixed-length code, arbitrary s;
+    # "f32"/"int8"/"int4"/"rs_ag" = the runtime's aggregation transports).
+    wire: str = "packed"
 
     def __post_init__(self):
         for name in ("Fn", "Cn", "pn", "rn", "alphan"):
@@ -61,22 +64,26 @@ class EdgeSystem:
     def N(self) -> int:
         return int(self.Fn.shape[0])
 
-    # --- quantization-derived quantities -------------------------------
+    # --- quantization-derived quantities (delegated to repro.compress so
+    # the optimizer provably prices the same bytes the runtime sends) ----
+    def codec(self, s: Optional[int]):
+        return make_codec(s, wire=self.wire, bucket=self.q_dim)
+
     @property
     def M_s0(self) -> float:
-        return bits_per_message(self.s0, self.dim)
+        return self.codec(self.s0).wire_bits(self.dim)
 
     @property
     def M_sn(self) -> np.ndarray:
-        return np.array([bits_per_message(s, self.dim) for s in self.sn])
+        return np.array([self.codec(s).wire_bits(self.dim) for s in self.sn])
 
     @property
     def q_s0(self) -> float:
-        return variance_bound(self.s0, self.q_dim or self.dim)
+        return self.codec(self.s0).variance_bound(self.dim)
 
     @property
     def q_sn(self) -> np.ndarray:
-        return np.array([variance_bound(s, self.q_dim or self.dim)
+        return np.array([self.codec(s).variance_bound(self.dim)
                          for s in self.sn])
 
     @property

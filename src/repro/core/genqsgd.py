@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import quantizer as Q
+from ..compress import make_codec
 from .step_rules import StepRule
 
 __all__ = ["GenQSGDConfig", "GenQSGD", "flatten_like", "unflatten_like"]
@@ -136,22 +136,23 @@ class GenQSGD:
         # (5): per-worker quantized normalized deltas, then the server mean.
         flat_hat = flatten_like(x_hat)
 
-        def worker_delta(xw, wkey, s):
+        def worker_delta(xw, wkey, codec):
             d = (flatten_like(xw) - flat_hat) / gamma
-            return Q.quantize_dequantize(d, s, wkey)
+            return codec.quantize_dequantize(d, wkey)
 
-        sn = cfg.worker_s()
-        if len(set(sn)) == 1:
-            deltas = jax.vmap(worker_delta, in_axes=(0, 0, None))(
-                x_workers, wkeys, sn[0])
-        else:  # heterogeneous quantizers: unrolled per worker
+        codecs = [make_codec(s) for s in cfg.worker_s()]
+        if len(set(codecs)) == 1:
+            deltas = jax.vmap(
+                lambda xw, wk: worker_delta(xw, wk, codecs[0]))(
+                x_workers, wkeys)
+        else:  # heterogeneous codecs: unrolled per worker
             deltas = jnp.stack([
                 worker_delta(jax.tree.map(lambda l: l[i], x_workers),
-                             wkeys[i], sn[i]) for i in range(cfg.N)])
+                             wkeys[i], codecs[i]) for i in range(cfg.N)])
         delta_hat = deltas.mean(axis=0)
 
         # (3): server quantizes the averaged update and everyone applies it.
-        delta_q = Q.quantize_dequantize(delta_hat, cfg.s0, skey)
+        delta_q = make_codec(cfg.s0).quantize_dequantize(delta_hat, skey)
         new_flat = flat_hat + gamma * delta_q
         x_new = unflatten_like(new_flat, x_hat)
         metrics = {

@@ -1,2 +1,2 @@
-from .runtime import FedConfig, make_round_fn, quantize_tensor, dequantize_tensor
+from .runtime import FedConfig, make_round_fn
 from . import sharding

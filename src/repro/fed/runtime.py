@@ -4,23 +4,41 @@ One *round* = the body of Algorithm 1's global iteration:
   1. every fl worker group starts from the shared global model x̂,
   2. runs K_max local mini-batch SGD steps (workers with K_n < K_max do the
      paper's "virtual" masked updates, eqs. (6)-(8)),
-  3. quantizes its normalized model delta (x_n - x̂)/γ per tensor (Assumption
-     1 holds per tensor, hence for the concatenation with q = max_t q_t),
+  3. encodes its normalized model delta (x_n - x̂)/γ per tensor with its
+     codec (Assumption 1 holds per tensor, hence for the concatenation with
+     q = max_t q_t),
   4. aggregation: the server mean of quantized deltas (5), re-quantized with
-     the server quantizer and applied by every node (3).
+     the server codec and applied by every node (3).
 
-Aggregation transports:
-  wire="f32"   — paper-faithful math: quantized *values* travel as f32
-                 (mean over fl => an XLA all-reduce of f32).
-  wire="int8"  — beyond-paper optimized: QSGD levels travel as int8 via an
-                 explicit all-gather inside shard_map; dequantize + average
-                 locally.  4x fewer collective bytes on the fl (cross-pod)
-                 axis; bit-identical results to "f32" (levels are exact
-                 integers in both).
-  wire="rs_ag" — reduce-scatter + all-gather decomposition of the f32 mean
-                 (each fl member owns 1/fl of the delta): ~2x fewer wire
-                 bytes than a ring all-reduce of the same payload, exact
-                 f32 math.
+The runtime splits the communication concern along the codec/transport axis
+of :mod:`repro.compress`:
+
+  * the *codec* (what is sent) is QSGD with per-worker ``s_n`` — possibly
+    heterogeneous — or the identity (``s=None``), evaluated through the
+    package's single level implementation (``compress.encode_tensor`` /
+    ``decode_tensor``, traced-``s`` capable so heterogeneous workers
+    vectorize through vmap);
+  * the *transport* (how it travels) is ``FedConfig.wire``, one of
+    ``compress.RUNTIME_WIRES``:
+
+    wire="f32"   — paper-faithful math: quantized *values* travel as f32
+                   (mean over fl => an XLA all-reduce of f32).
+    wire="int8"  — QSGD levels travel as int8 via an explicit all-gather
+                   inside shard_map; dequantize + average locally.  4x fewer
+                   collective bytes on the fl (cross-pod) axis; bit-identical
+                   results to "f32" (levels are exact integers in both).
+    wire="int4"  — two levels packed per byte (``compress.pack_int4``) before
+                   the all-gather: 8x fewer bytes than f32, 2x fewer than
+                   int8, for the paper's low-s regime (s_n <= 7).  Packing is
+                   lossless, so results stay bit-identical to "f32".
+    wire="rs_ag" — reduce-scatter + all-gather decomposition of the f32 mean
+                   (each fl member owns 1/fl of the delta): ~2x fewer wire
+                   bytes than a ring all-reduce of the same payload, exact
+                   f32 math.
+
+  The cost layer (:class:`repro.core.cost.EdgeSystem`) prices ``M_s`` through
+  the same ``codec.wire_bits`` table, so the (K, B, s) the optimizer picks
+  refer to exactly the bytes these transports move.
 
 Local steps are vmapped over an explicit leading fl axis sharded P('fl', ...)
 — GSPMD keeps each worker group's replica resident on its own (fsdp, tp)
@@ -39,10 +57,13 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+from ..compress import (RUNTIME_WIRES, decode_tensor, encode_tensor,
+                        make_codec, pack_int4, unpack_int4, wire_max_s)
 from ..configs.base import ArchConfig
 from . import sharding as SH
 
-__all__ = ["FedConfig", "make_round_fn", "quantize_tensor", "dequantize_tensor"]
+__all__ = ["FedConfig", "make_round_fn"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,14 +74,29 @@ class FedConfig:
     s0: Optional[int]                    # server quantizer (None = exact)
     sn: object = None                    # worker quantizer: int (homogeneous),
                                          # tuple of per-worker ints, or None
-    wire: str = "f32"                    # "f32" | "int8"
+    wire: str = "f32"                    # one of compress.RUNTIME_WIRES
     aux_weight: float = 0.01
     microbatch: int = 1                  # grad-accumulation splits per local step
 
     def __post_init__(self):
-        for s in self.sn_tuple():
-            assert s is None or s <= 127, "int8 wire format requires s <= 127"
-        assert self.s0 is None or self.s0 <= 127
+        if self.wire not in RUNTIME_WIRES:
+            raise ValueError(f"wire must be one of {RUNTIME_WIRES}, "
+                             f"got {self.wire!r}")
+        cap = wire_max_s(self.wire)
+        for s in self.sn_tuple() + (self.s0,):
+            if s is not None and s > cap:
+                raise ValueError(
+                    f"wire {self.wire!r} carries s <= {cap}, got {s}")
+        sn = self.sn_tuple()
+        if not self.sn_exact and any(s is None for s in sn):
+            # the level transports carry every worker's delta in the same
+            # integer container, which cannot represent an exact passthrough
+            raise ValueError("mixed exact (s=None) and quantized workers are "
+                             "not supported: set s_n for every worker, or "
+                             "None for all")
+        if self.wire == "int4" and self.sn_exact:
+            raise ValueError("int4 wire packs quantized levels; exact "
+                             "(s=None) workers need the f32 or rs_ag wire")
 
     @property
     def K_max(self) -> int:
@@ -76,6 +112,17 @@ class FedConfig:
     @property
     def sn_exact(self) -> bool:
         return all(s is None for s in self.sn_tuple())
+
+    def codecs(self) -> tuple:
+        """Per-worker codec views (cost accounting / introspection)."""
+        return tuple(make_codec(s, wire=self.wire) for s in self.sn_tuple())
+
+    def server_codec(self):
+        """An exact server multicast (s0=None) is raw f32 regardless of the
+        worker wire — the packing wire can't carry it, but the runtime never
+        packs the server update anyway."""
+        wire = self.wire if self.s0 is not None else "f32"
+        return make_codec(self.s0, wire=wire)
 
 
 # ---------------------------------------------------------------------------
@@ -108,35 +155,6 @@ def _seed_from(key: jax.Array, salt: int) -> jax.Array:
     for i in range(words.shape[0]):
         seed = _mix32(seed ^ words[i])
     return seed
-
-
-# ---------------------------------------------------------------------------
-# per-tensor QSGD with externally supplied uniform noise
-# ---------------------------------------------------------------------------
-def quantize_tensor(y: jax.Array, s, u: jax.Array):
-    """-> (levels int8, norm f32 scalar).  u: uniform(0,1) noise like y.
-
-    ``s`` may be a Python int or a traced scalar (heterogeneous per-worker
-    quantizers vectorize through vmap); None = exact passthrough.
-    """
-    if s is None:
-        return y, jnp.float32(1.0)
-    yf = y.astype(jnp.float32)
-    norm = jnp.sqrt(jnp.sum(yf * yf))
-    safe = jnp.where(norm > 0, norm, 1.0)
-    s_f = jnp.asarray(s, jnp.float32)
-    scaled = s_f * jnp.abs(yf) / safe
-    lvl = jnp.floor(scaled) + (u < (scaled - jnp.floor(scaled)))
-    lvl = jnp.sign(yf) * lvl
-    return lvl.astype(jnp.int8), norm
-
-
-def dequantize_tensor(lvl: jax.Array, norm: jax.Array, s,
-                      dtype=jnp.float32):
-    if s is None:
-        return lvl.astype(dtype)
-    s_f = jnp.asarray(s, jnp.float32)
-    return (lvl.astype(jnp.float32) * (norm / s_f)).astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -222,8 +240,8 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         lvls, norms = [], []
         for i, leaf in enumerate(leaves):
             u = uniform_like(leaf, _seed_from(key, i))
-            lvl, nrm = quantize_tensor(leaf, None if sn_arr is None else s_w,
-                                       u)
+            lvl, nrm = encode_tensor(leaf, None if sn_arr is None else s_w,
+                                     u)
             lvls.append(lvl)
             norms.append(nrm)
         return (jax.tree.unflatten(treedef, lvls),
@@ -234,7 +252,7 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         """Paper-faithful: dequantize then mean over fl (f32 all-reduce)."""
         deq = jax.tree.map(
             lambda l, n: jax.vmap(
-                lambda li, ni, si: dequantize_tensor(
+                lambda li, ni, si: decode_tensor(
                     li, ni, None if sn_arr is None else si))(
                 l, n, jnp.zeros(fed.n_workers) if sn_arr is None else sn_arr),
             levels_fl, norms_fl)
@@ -249,7 +267,7 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                 else sn_arr[jax.lax.axis_index("fl")])
 
         def per_leaf(lvl, nrm):
-            d = dequantize_tensor(lvl[0], nrm[0], my_s) / n
+            d = decode_tensor(lvl[0], nrm[0], my_s) / n
             if d.size % n:  # ragged leaf: fall back to psum
                 return jax.lax.psum(d, "fl")
             own = jax.lax.psum_scatter(d.reshape(n, -1), "fl",
@@ -258,19 +276,31 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
 
         return jax.tree.map(per_leaf, levels_loc, norms_loc)
 
-    def _agg_int8_local(levels_loc, norms_loc):
-        """Runs inside shard_map: all-gather int8 levels over fl, dequantize
-        and average locally."""
+    def _agg_levels_local(levels_loc, norms_loc, pack_nibbles=False):
+        """Runs inside shard_map: all-gather the level payload over fl,
+        dequantize and average locally.  With ``pack_nibbles`` two levels
+        travel per byte (half the int8 wire bytes); packing is lossless for
+        s <= 7, so the result stays bit-identical to the f32 transport."""
         def per_leaf(lvl, nrm):
             # lvl: (1, ...) local block; gather -> (fl, ...)
-            g = jax.lax.all_gather(lvl[0], "fl")          # int8 on the wire
+            payload = pack_int4(lvl[0]) if pack_nibbles else lvl[0]
+            g = jax.lax.all_gather(payload, "fl")         # int8 on the wire
             gn = jax.lax.all_gather(nrm[0], "fl")
             ss = (jnp.zeros(fed.n_workers) if sn_arr is None else sn_arr)
-            deq = jax.vmap(
-                lambda li, ni, si: dequantize_tensor(
-                    li, ni, None if sn_arr is None else si))(g, gn, ss)
-            return deq.mean(axis=0)
+
+            def dec(pi, ni, si):
+                li = (unpack_int4(pi, lvl[0].size).reshape(lvl[0].shape)
+                      if pack_nibbles else pi)
+                return decode_tensor(li, ni, None if sn_arr is None else si)
+
+            return jax.vmap(dec)(g, gn, ss).mean(axis=0)
         return jax.tree.map(per_leaf, levels_loc, norms_loc)
+
+    def _agg_int8_local(levels_loc, norms_loc):
+        return _agg_levels_local(levels_loc, norms_loc)
+
+    def _agg_int4_local(levels_loc, norms_loc):
+        return _agg_levels_local(levels_loc, norms_loc, pack_nibbles=True)
 
     def make_agg_sm(x_hat_example, body):
         pspecs = SH.param_specs(x_hat_example, mesh, fsdp_weights,
@@ -278,10 +308,8 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         lv_specs = SH.with_fl(pspecs)
         nm_specs = jax.tree.map(lambda _: P("fl"), pspecs,
                                 is_leaf=lambda x: isinstance(x, P))
-        return jax.shard_map(
-            body, mesh=mesh,
-            in_specs=(lv_specs, nm_specs), out_specs=pspecs,
-            check_vma=False)
+        return shard_map(body, mesh=mesh,
+                         in_specs=(lv_specs, nm_specs), out_specs=pspecs)
 
     # -- the round ----------------------------------------------------------
     def genqsgd_round(x_hat, batch, key, gamma):
@@ -301,6 +329,9 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         if fed.wire == "int8":
             delta_hat = make_agg_sm(x_hat, _agg_int8_local)(levels_fl,
                                                             norms_fl)
+        elif fed.wire == "int4":
+            delta_hat = make_agg_sm(x_hat, _agg_int4_local)(levels_fl,
+                                                            norms_fl)
         elif fed.wire == "rs_ag":
             delta_hat = make_agg_sm(x_hat, _agg_rs_ag_local)(levels_fl,
                                                              norms_fl)
@@ -312,8 +343,8 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         new_leaves = []
         for i, (leaf, xh) in enumerate(zip(leaves, jax.tree.leaves(x_hat))):
             u = uniform_like(leaf, _seed_from(skey, 1000 + i))
-            lvl, nrm = quantize_tensor(leaf, fed.s0, u)
-            dq = dequantize_tensor(lvl, nrm, fed.s0)
+            lvl, nrm = encode_tensor(leaf, fed.s0, u)
+            dq = decode_tensor(lvl, nrm, fed.s0)
             new_leaves.append((xh.astype(jnp.float32)
                                + gamma * dq).astype(xh.dtype))
         x_new = jax.tree.unflatten(treedef, new_leaves)

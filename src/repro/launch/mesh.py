@@ -20,14 +20,15 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from ..compat import make_mesh, make_mesh_by_shape
+
 __all__ = ["make_production_mesh", "logical_mesh", "mesh_axis_sizes"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_by_shape(shape, axes)
 
 
 def logical_mesh(mesh: Mesh, fl_sub: int = 1, tp: Optional[int] = None) -> Mesh:
@@ -56,8 +57,7 @@ def logical_mesh(mesh: Mesh, fl_sub: int = 1, tp: Optional[int] = None) -> Mesh:
                          f" ({per_pod})")
     fsdp = per_pod // (fl_sub * tp)
     new = devs.reshape(pods * fl_sub, fsdp, tp)
-    return Mesh(new, ("fl", "fsdp", "tp"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh(new, ("fl", "fsdp", "tp"))
 
 
 def mesh_axis_sizes(mesh: Mesh) -> dict:

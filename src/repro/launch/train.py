@@ -25,9 +25,14 @@ def main():
     ap.add_argument("--gamma", type=float, default=0.01)
     ap.add_argument("--rule", default="C", choices=["C", "E", "D"])
     ap.add_argument("--rho", type=float, default=None)
-    ap.add_argument("--s0", type=int, default=64)
-    ap.add_argument("--sn", type=int, default=64)
-    ap.add_argument("--wire", default="f32", choices=["f32", "int8"])
+    ap.add_argument("--s0", type=int, default=None,
+                    help="server quantizer (default: 64, or 7 on int4)")
+    ap.add_argument("--sn", type=int, default=None,
+                    help="worker quantizer (default: 64, or 7 on int4)")
+    # literal list (== compress.RUNTIME_WIRES): importing repro here would
+    # pull in jax before XLA_FLAGS is set below; FedConfig re-validates
+    ap.add_argument("--wire", default="f32",
+                    choices=["f32", "int8", "int4", "rs_ag"])
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--devices", type=int, default=None,
                     help="host-platform device count (default fl*fsdp*tp)")
@@ -39,7 +44,6 @@ def main():
 
     import jax
     import numpy as np
-    from jax.sharding import Mesh
 
     from repro.core.step_rules import make_rule
     from repro.data.federated import round_batches
@@ -53,12 +57,16 @@ def main():
     if cfg.encdec:
         raise SystemExit("enc-dec archs train via examples (frames input); "
                          "use a decoder-only arch here")
+    from repro.compat import make_mesh
     devs = np.array(jax.devices()[:args.fl * args.fsdp * args.tp]).reshape(
         args.fl, args.fsdp, args.tp)
-    mesh = Mesh(devs, ("fl", "fsdp", "tp"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh(devs, ("fl", "fsdp", "tp"))
+    from repro.compress import wire_max_s
+    s_default = min(64, wire_max_s(args.wire) or 64)
+    s0 = args.s0 if args.s0 is not None else s_default
+    sn = args.sn if args.sn is not None else s_default
     fed = FedConfig(n_workers=args.fl, Kn=(args.k_local,) * args.fl,
-                    s0=args.s0, sn=args.sn, wire=args.wire)
+                    s0=s0, sn=sn, wire=args.wire)
     rule = make_rule(args.rule, args.gamma, args.rho)
     trainer = GenQSGDTrainer(api, cfg, fed, mesh, step_rule=rule,
                              checkpoint_dir=args.ckpt)

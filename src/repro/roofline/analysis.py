@@ -83,6 +83,8 @@ def collective_bytes(hlo_text: str) -> Dict:
 
 
 def cost_summary(ca: Optional[dict]) -> Dict:
+    if isinstance(ca, (list, tuple)):  # older jax: one dict per computation
+        ca = ca[0] if ca else None
     if not ca:
         return {}
     out = {"flops": float(ca.get("flops", 0.0)),

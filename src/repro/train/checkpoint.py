@@ -4,19 +4,52 @@ Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
 path-keyed so checkpoints are robust to ordering.  Sharded arrays are
 gathered to host before writing (fine at the example scales this repo
 actually executes; the dry-run never writes checkpoints).
+
+``zstandard`` is an optional extra: without it, checkpoints fall back to
+zlib.  A 4-byte magic prefix records the compressor, so either build reads
+both formats (zstd-written checkpoints still need zstandard to load).
 """
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional extra; zlib fallback below
+    zstandard = None
 
 __all__ = ["save", "load", "tree_paths"]
+
+_MAGIC_ZSTD = b"RZS1"
+_MAGIC_ZLIB = b"RZL1"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return _MAGIC_ZSTD + zstandard.ZstdCompressor(level=3).compress(raw)
+    return _MAGIC_ZLIB + zlib.compress(raw, level=3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    magic, body = blob[:4], blob[4:]
+    if magic == _MAGIC_ZSTD:
+        if zstandard is None:
+            raise RuntimeError("checkpoint was written with zstandard, "
+                               "which is not installed")
+        return zstandard.ZstdDecompressor().decompress(body)
+    if magic == _MAGIC_ZLIB:
+        return zlib.decompress(body)
+    # pre-magic checkpoints were raw zstd frames
+    if zstandard is None:
+        raise RuntimeError("legacy zstd checkpoint needs zstandard installed")
+    return zstandard.ZstdDecompressor().decompress(blob)
 
 
 def tree_paths(tree) -> dict:
@@ -41,12 +74,12 @@ def save(path: str, tree: Any, metadata: dict | None = None):
     raw = msgpack.packb(payload, use_bin_type=True)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+        f.write(_compress(raw))
 
 
 def load(path: str, like: Any | None = None):
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = _decompress(f.read())
     payload = msgpack.unpackb(raw, raw=False)
     meta = payload.pop("__meta__", {})
     arrays = {k: np.frombuffer(v["data"],

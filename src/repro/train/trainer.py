@@ -20,7 +20,14 @@ from ..fed import sharding as SH
 from ..fed.runtime import FedConfig, make_round_fn
 from . import checkpoint as CKPT
 
-__all__ = ["TrainState", "GenQSGDTrainer"]
+
+def round_comm_bits(fed: FedConfig, dim: int) -> float:
+    """Wire bits one round moves: N worker uploads + the server multicast,
+    priced by the same codec table the cost-layer optimizer uses."""
+    up = sum(c.wire_bits(dim) for c in fed.codecs())
+    return up + fed.server_codec().wire_bits(dim)
+
+__all__ = ["TrainState", "GenQSGDTrainer", "round_comm_bits"]
 
 
 @dataclasses.dataclass
@@ -53,6 +60,8 @@ class GenQSGDTrainer:
             log_every: int = 10, eval_fn: Optional[Callable] = None,
             ckpt_every: int = 0) -> TrainState:
         gammas = self.rule.sequence(state.round + n_rounds)
+        dim = sum(int(l.size) for l in jax.tree.leaves(state.params))
+        comm_mbits = round_comm_bits(self.fed, dim) / 1e6
         for r in range(state.round, state.round + n_rounds):
             key, rkey = jax.random.split(key)
             batch = next(batches)
@@ -63,6 +72,7 @@ class GenQSGDTrainer:
                 rec = {"round": r, "gamma": float(gammas[r]),
                        "loss": float(metrics["loss"]),
                        "delta_norm": float(metrics["delta_norm"]),
+                       "comm_mbits": comm_mbits,
                        "dt": time.time() - t0}
                 if eval_fn is not None:
                     rec.update(eval_fn(state.params))

@@ -11,14 +11,13 @@ _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np, re
-    from jax.sharding import Mesh
+    from repro.compat import make_mesh
     from repro.models.registry import get_config, model_api
     from repro.fed.runtime import FedConfig, make_round_fn
     from repro.fed import sharding as SH
 
     devs = np.array(jax.devices()).reshape(2, 2, 2)
-    mesh = Mesh(devs, ("fl", "fsdp", "tp"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh(devs, ("fl", "fsdp", "tp"))
     cfg = get_config("qwen3-1.7b", smoke=True)
     api = model_api(cfg)
     key = jax.random.PRNGKey(0)
@@ -50,8 +49,17 @@ _SCRIPT = textwrap.dedent("""
     assert np.array_equal(outs["f32"][0], outs["rs_ag"][0])
     # rs_ag actually reduce-scatters on the wire
     assert "reduce-scatter" in outs["rs_ag"][1]
-    # single-process reference equivalence (s=None exact case)
-    from repro.core import GenQSGD, GenQSGDConfig, ConstantRule
+    # int4 wire (s <= 7): packed payload, bit-identical to the f32 transport
+    outs4 = {}
+    for wire in ("f32", "int4"):
+        fed = FedConfig(n_workers=FL, Kn=(1, 2), s0=7, sn=(7, 5), wire=wire)
+        rnd = make_round_fn(api, cfg, fed, mesh)
+        f = jax.jit(rnd, in_shardings=(pshard, bshard, None, None),
+                    out_shardings=(pshard, None))
+        x_new, m = f(pp, bb, jax.random.PRNGKey(1), jnp.float32(0.05))
+        assert np.isfinite(float(m["loss"])), wire
+        outs4[wire] = np.asarray(jax.tree.leaves(x_new)[0])
+    assert np.array_equal(outs4["f32"], outs4["int4"])
     print("DISTRIBUTED_OK")
 """)
 

@@ -1,14 +1,15 @@
-"""Pallas kernel validation: interpret-mode execution vs the pure-jnp oracle
-across a shape × dtype × s sweep (per-kernel allclose requirement)."""
+"""Backend equivalence: the Pallas kernels (interpret mode) must be
+bit-identical to the reference jnp backend for the same noise tensor, plus
+int4 wire pack/unpack round-trips and the fused dequant-apply."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.kernels import ops, ref
-from repro.kernels.ops import _to_grid2d
+from tests.compat import given, settings, st
+
+from repro import compress as C
+from repro.compress import backends as B
 
 SHAPES = [(127,), (1024,), (512, 1024), (3, 5, 77), (2**16 + 3,)]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -18,19 +19,17 @@ S_VALUES = [1, 7, 64, 127]
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("dtype", DTYPES)
 @pytest.mark.parametrize("s", S_VALUES)
-def test_quantize_matches_ref(shape, dtype, s):
+def test_backends_bit_identical(shape, dtype, s):
+    """Pallas and reference backends: identical int8 levels AND norms."""
     key = jax.random.PRNGKey(hash((shape, s)) % 2**31)
     y = (jax.random.normal(key, shape) * 3).astype(dtype)
-    lvl, norm = ops.qsgd_quantize(y, key, s=s)
-    y2d, n = _to_grid2d(y.reshape(-1).astype(jnp.float32))
-    u = jax.random.uniform(key, y2d.shape, jnp.float32)
-    ref_norm = jnp.sqrt(ref.sumsq_ref(y))
-    lvl_ref = ref.qsgd_quantize_ref(
-        y2d, u, s, ref_norm).reshape(-1)[:n].reshape(shape)
-    np.testing.assert_allclose(float(norm), float(ref_norm), rtol=1e-5)
-    assert jnp.array_equal(lvl, lvl_ref), (shape, dtype, s)
-    assert lvl.dtype == jnp.int8
-    assert int(jnp.max(jnp.abs(lvl.astype(jnp.int32)))) <= s
+    u = jax.random.uniform(jax.random.fold_in(key, 1), shape, jnp.float32)
+    lvl_p, norm_p = C.make_codec(s, wire="int8", backend="pallas").encode(y, u)
+    lvl_j, norm_j = C.make_codec(s, wire="int8", backend="jnp").encode(y, u)
+    assert lvl_p.dtype == jnp.int8 and lvl_j.dtype == jnp.int8
+    assert jnp.array_equal(lvl_p, lvl_j), (shape, dtype, s)
+    np.testing.assert_allclose(float(norm_p), float(norm_j), rtol=1e-6)
+    assert int(jnp.max(jnp.abs(lvl_p.astype(jnp.int32)))) <= s
 
 
 @pytest.mark.parametrize("shape", SHAPES)
@@ -40,9 +39,12 @@ def test_dequant_apply_matches_ref(shape, dtype):
     key = jax.random.PRNGKey(0)
     y = (jax.random.normal(key, shape)).astype(dtype)
     x = (jax.random.normal(jax.random.fold_in(key, 1), shape)).astype(dtype)
-    lvl, norm = ops.qsgd_quantize(y, key, s=s)
-    out = ops.qsgd_dequant_apply(x, lvl, norm, 0.05, s=s)
-    out_ref = ref.qsgd_dequant_apply_ref(x, lvl, norm, s, 0.05)
+    u = jax.random.uniform(jax.random.fold_in(key, 2), shape, jnp.float32)
+    pallas = C.make_codec(s, wire="int8", backend="pallas")
+    ref = C.make_codec(s, wire="int8", backend="jnp")
+    lvl, norm = pallas.encode(y, u)
+    out = pallas.decode_apply(x, lvl, norm, 0.05)
+    out_ref = ref.decode_apply(x, lvl, norm, 0.05)
     atol = 1e-6 if dtype == jnp.float32 else 3e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(out_ref, np.float32),
@@ -50,11 +52,34 @@ def test_dequant_apply_matches_ref(shape, dtype):
     assert out.dtype == x.dtype
 
 
+@pytest.mark.parametrize("n", [1, 2, 7, 128, 2**12 + 5])
+def test_int4_pack_unpack_roundtrip(n):
+    key = jax.random.PRNGKey(n)
+    lvl = jax.random.randint(key, (n,), -7, 8, jnp.int32).astype(jnp.int8)
+    packed = C.pack_int4(lvl)
+    assert packed.dtype == jnp.int8 and packed.shape[0] == (n + 1) // 2
+    got = C.unpack_int4(packed, n)
+    assert got.dtype == jnp.int8
+    assert jnp.array_equal(got, lvl), n
+
+
+def test_int4_roundtrip_through_encode():
+    """pack/unpack composed with a real s<=7 encode is the identity."""
+    key = jax.random.PRNGKey(9)
+    y = jax.random.normal(key, (4097,))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), y.shape, jnp.float32)
+    codec = C.make_codec(7, wire="int4")
+    lvl, norm = codec.encode(y, u)
+    lvl2 = C.unpack_int4(C.pack_int4(lvl), y.size).reshape(y.shape)
+    assert jnp.array_equal(lvl, lvl2)
+    assert jnp.array_equal(codec.decode(lvl, norm), codec.decode(lvl2, norm))
+
+
 @given(st.integers(min_value=1, max_value=2**18))
 @settings(max_examples=20, deadline=None)
 def test_norm_kernel_any_length(n):
     y = jnp.arange(n, dtype=jnp.float32) / max(n, 1)
-    got = float(ops.tensor_norm(y))
+    got = float(B.tensor_norm_pallas(y))
     want = float(jnp.linalg.norm(y))
     assert got == pytest.approx(want, rel=1e-5, abs=1e-6)
 
@@ -64,8 +89,10 @@ def test_quantize_roundtrip_error_bound():
     key = jax.random.PRNGKey(7)
     for s in (4, 16, 64):
         y = jax.random.normal(key, (4096,))
-        lvl, norm = ops.qsgd_quantize(y, key, s=s)
-        deq = ops.qsgd_dequant_apply(jnp.zeros_like(y), lvl, norm, 1.0, s=s)
+        u = jax.random.uniform(jax.random.fold_in(key, s), y.shape)
+        codec = C.make_codec(s, wire="int8", backend="pallas")
+        lvl, norm = codec.encode(y, u)
+        deq = codec.decode_apply(jnp.zeros_like(y), lvl, norm, 1.0)
         err = float(jnp.sum((deq - y) ** 2))
         qs = min(4096 / s**2, np.sqrt(4096) / s)
         # single-draw bound (holds in expectation; allow slack)

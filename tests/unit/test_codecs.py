@@ -1,0 +1,154 @@
+"""repro.compress codec subsystem: wire formats, bucketed norms, and the
+int4-transport == f32-transport bit-identity the runtime relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compress as C
+
+
+def test_make_codec_dispatch():
+    assert isinstance(C.make_codec(None), C.IdentityCodec)
+    assert isinstance(C.make_codec(8), C.QSGDCodec)
+    with pytest.raises(ValueError):
+        C.make_codec(0)
+    with pytest.raises(ValueError):
+        C.make_codec(8, wire="int4")          # cap: int4 carries s <= 7
+    with pytest.raises(ValueError):
+        C.make_codec(200, wire="int8")        # cap: int8 carries s <= 127
+    with pytest.raises(ValueError):
+        C.make_codec(8, backend="cuda")
+    with pytest.raises(ValueError):
+        C.make_codec(300, backend="pallas")  # int8 kernel container
+    with pytest.raises(ValueError):
+        C.encode_tensor(jnp.ones(4), 300, jnp.zeros(4))
+
+
+def test_wire_bits_table():
+    dim = 1000
+    assert C.wire_bits(None, dim) == 32.0 * (dim + 1)
+    assert C.wire_bits(7, dim, "int4") == 32 + 4 * dim
+    assert C.wire_bits(127, dim, "int8") == 32 + 8 * dim
+    assert C.wire_bits(64, dim, "f32") == 32.0 * dim
+    assert C.wire_bits(64, dim, "rs_ag") == 32.0 * dim
+    assert C.wire_bits(64, dim, "packed") == 32 + dim * (1 + 7)
+    # bucketing adds one 32-bit norm word per bucket
+    assert C.wire_bits(7, dim, "int4", bucket=100) == 10 * 32 + 4 * dim
+    with pytest.raises(ValueError):
+        C.wire_bits(8, dim, "int4")
+    with pytest.raises(ValueError):
+        C.wire_bits(64, dim, "carrier_pigeon")
+
+
+def test_int4_wire_bit_identical_to_f32_transport():
+    """The acceptance bar: for s <= 7 the packed int4 payload dequantizes to
+    the SAME aggregated mean as the f32 transport — packing is lossless."""
+    key = jax.random.PRNGKey(0)
+    n_workers, dim = 4, 2053                      # odd dim: exercises padding
+    sn = (7, 5, 3, 7)                             # heterogeneous codecs
+    deltas = jax.random.normal(key, (n_workers, dim)) * 2.0
+    noise = jax.random.uniform(jax.random.fold_in(key, 1), (n_workers, dim))
+
+    f32_terms, int4_terms = [], []
+    for w, s in enumerate(sn):
+        codec = C.make_codec(s, wire="int4")
+        lvl, norm = codec.encode(deltas[w], noise[w])
+        # f32 transport: dequantized values travel
+        f32_terms.append(codec.decode(lvl, norm))
+        # int4 transport: packed levels travel, dequantize at the receiver
+        wire_payload = C.pack_int4(lvl)
+        assert wire_payload.size == (dim + 1) // 2  # 2x fewer bytes than int8
+        lvl_rx = C.unpack_int4(wire_payload, dim)
+        int4_terms.append(codec.decode(lvl_rx, norm))
+
+    mean_f32 = jnp.stack(f32_terms).mean(0)
+    mean_int4 = jnp.stack(int4_terms).mean(0)
+    assert jnp.array_equal(mean_f32, mean_int4)
+    # and the cost layer prices the 4-bit M_s for this wire
+    assert C.make_codec(7, wire="int4").wire_bits(dim) == 32 + 4 * dim
+
+
+def test_bucketed_codec_matches_cost_layer_q():
+    """Per-bucket norms: decode error obeys the bucket-dim variance bound,
+    and codec.variance_bound reports the bucket-dim q_s the cost layer uses."""
+    key = jax.random.PRNGKey(2)
+    dim, bucket, s = 4096, 256, 16
+    codec = C.make_codec(s, bucket=bucket)
+    assert codec.variance_bound(dim) == C.variance_bound(s, bucket)
+    assert codec.variance_bound(dim) < C.variance_bound(s, dim)
+    y = jax.random.normal(key, (dim,))
+    n = 400
+    keys = jax.random.split(key, n)
+    samples = jnp.stack([codec.quantize_dequantize(y, k) for k in keys])
+    ratio = float(((samples - y) ** 2).sum(1).mean() / (y**2).sum())
+    assert ratio <= codec.variance_bound(dim) * 1.1
+    # unbiased per coordinate, against the ANALYTIC per-bucket Bernoulli
+    # variance (norm_b/s)^2 frac(1-frac); rare-event coordinates (frac near
+    # 0/1) make any z-test degenerate at finite n, so only well-conditioned
+    # fractions are checked per coordinate.
+    y2 = y.reshape(dim // bucket, bucket)
+    norms = jnp.linalg.norm(y2, axis=1, keepdims=True)
+    u = s * jnp.abs(y2) / norms
+    frac = u - jnp.floor(u)
+    coord_sd = jnp.sqrt((norms / s) ** 2 * frac * (1 - frac) / n)
+    z = jnp.abs(samples.mean(0).reshape(y2.shape) - y2) / (coord_sd + 1e-9)
+    ok = (frac > 0.1) & (frac < 0.9)
+    assert int(ok.sum()) > dim // 4          # the check has real coverage
+    assert float(jnp.max(jnp.where(ok, z, 0.0))) < 6.0
+
+
+def test_bucketed_encode_decode_shapes():
+    key = jax.random.PRNGKey(3)
+    y = jax.random.normal(key, (777,))            # ragged vs bucket=256
+    u = jax.random.uniform(jax.random.fold_in(key, 1), y.shape)
+    codec = C.make_codec(64, bucket=256)
+    lvl, norms = codec.encode(y, u)
+    assert lvl.shape == y.shape and norms.shape == (4,)
+    out = codec.decode(lvl, norms)
+    assert out.shape == y.shape
+    assert float(jnp.abs(out - y).max()) < float(jnp.linalg.norm(y)) / 8
+
+
+def test_codec_equality_and_hetero_sets():
+    """Frozen dataclasses: equal parameters == equal codecs (the reference
+    algorithm uses set() to detect the homogeneous fast path)."""
+    assert C.make_codec(8) == C.make_codec(8)
+    assert C.make_codec(None) == C.make_codec(None)
+    assert len({C.make_codec(8), C.make_codec(8), C.make_codec(16)}) == 2
+
+
+def test_level_dtype_boundary():
+    assert C.level_dtype(127) == jnp.int8
+    assert C.level_dtype(128) == jnp.int32
+
+
+def test_fedconfig_rejects_unrepresentable_codecs():
+    """Transport validation happens at construction, with ValueError (not
+    assert, so it survives python -O): over-cap s, mixed exact+quantized
+    workers (the int8 level container can't carry a passthrough), and
+    all-exact workers on the packing wire."""
+    from repro.fed.runtime import FedConfig
+    FedConfig(n_workers=2, Kn=(1, 1), s0=7, sn=(7, 5), wire="int4")
+    FedConfig(n_workers=2, Kn=(1, 1), s0=None, sn=None, wire="rs_ag")
+    with pytest.raises(ValueError):
+        FedConfig(n_workers=2, Kn=(1, 1), s0=64, sn=64, wire="int4")
+    with pytest.raises(ValueError):
+        FedConfig(n_workers=2, Kn=(1, 1), s0=64, sn=(None, 8), wire="f32")
+    with pytest.raises(ValueError):
+        FedConfig(n_workers=2, Kn=(1, 1), s0=None, sn=None, wire="int4")
+    with pytest.raises(ValueError):
+        FedConfig(n_workers=2, Kn=(1, 1), s0=64, sn=64, wire="carrier_pigeon")
+
+
+def test_exact_server_on_int4_wire_is_priced_as_f32():
+    """s0=None with quantized int4 workers is a legal config (the server
+    multicast is a local f32 passthrough); bit accounting must price it
+    instead of raising."""
+    from repro.fed.runtime import FedConfig
+    from repro.train.trainer import round_comm_bits
+    fed = FedConfig(n_workers=2, Kn=(1, 1), s0=None, sn=7, wire="int4")
+    dim = 1000
+    assert fed.server_codec().wire_bits(dim) == 32.0 * (dim + 1)
+    up = 2 * (32 + 4 * dim)
+    assert round_comm_bits(fed, dim) == up + 32.0 * (dim + 1)

@@ -2,8 +2,7 @@
 properties used by the optimizer."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests.compat import given, settings, st
 
 from repro.core import convergence as C
 from repro.core.step_rules import ConstantRule, DiminishingRule, ExponentialRule

@@ -1,8 +1,7 @@
 """T(K,B) (17) and E(K,B) (18) cost models."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests.compat import given, settings, st
 
 from repro.core import EdgeSystem, energy_cost, time_cost
 
@@ -46,6 +45,60 @@ def test_quantization_bits_affect_comm():
     assert hi.M_s0 > lo.M_s0
     assert hi.comm_time > lo.comm_time
     assert hi.q_s0 < lo.q_s0
+
+
+def _system_with(sn, s0, wire, dim=1000, q_dim=None):
+    n = len(sn)
+    return EdgeSystem(F0=1e9, C0=100.0, p0=1.0, r0=1e6, s0=s0, alpha0=1e-28,
+                      Fn=np.full(n, 1e9), Cn=np.full(n, 1e8),
+                      pn=np.full(n, 1.0), rn=np.full(n, 1e6), sn=sn,
+                      alphan=np.full(n, 1e-28), dim=dim, q_dim=q_dim,
+                      wire=wire)
+
+
+def test_cost_model_matches_codec_for_every_runtime_wire():
+    """The optimizer can never price a transport the runtime doesn't send:
+    EdgeSystem's M_s / q_s equal codec.wire_bits / codec.variance_bound for
+    every (s, wire) combination the runtime accepts."""
+    from repro.compress import RUNTIME_WIRES, make_codec, wire_max_s
+    dim, q_dim = 1000, 128
+    for wire in RUNTIME_WIRES:
+        cap = wire_max_s(wire)
+        for s in (None, 1, 5, 7, 64, 127):
+            over_cap = s is not None and cap is not None and s > cap
+            exact_on_packing_wire = s is None and wire == "int4"
+            if over_cap or exact_on_packing_wire:
+                # unrepresentable on this wire: both the codec and the cost
+                # layer must refuse, exactly like the runtime does
+                with pytest.raises(ValueError):
+                    make_codec(s, wire=wire).wire_bits(dim)
+                with pytest.raises(ValueError):
+                    _ = _system_with([s, s], s0=s, wire=wire, dim=dim,
+                                     q_dim=q_dim).M_s0
+                continue
+            sys_ = _system_with([s, s], s0=s, wire=wire, dim=dim, q_dim=q_dim)
+            codec = make_codec(s, wire=wire, bucket=q_dim)
+            assert sys_.M_s0 == codec.wire_bits(dim), (s, wire)
+            assert np.all(sys_.M_sn == codec.wire_bits(dim)), (s, wire)
+            assert sys_.q_s0 == codec.variance_bound(dim), (s, wire)
+            assert np.all(sys_.q_sn == codec.variance_bound(dim)), (s, wire)
+
+
+def test_cost_model_rejects_unrepresentable_s():
+    """An s the wire can't carry must fail at pricing time, not silently
+    underestimate bytes."""
+    sys_ = _system_with([64, 64], s0=64, wire="int4")
+    with pytest.raises(ValueError):
+        _ = sys_.M_s0
+
+
+def test_int4_wire_prices_4_bits_per_coordinate():
+    dim = 10_000
+    sys_ = _system_with([7, 7], s0=7, wire="int4", dim=dim)
+    assert sys_.M_s0 == 32 + 4 * dim
+    sys8 = _system_with([7, 7], s0=7, wire="int8", dim=dim)
+    assert sys8.M_s0 == 32 + 8 * dim
+    assert sys_.comm_time < sys8.comm_time
 
 
 def test_tpu_fleet_parameterization():

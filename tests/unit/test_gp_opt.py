@@ -2,8 +2,7 @@
 condensation properties (Marks-Wright (i)-(iii))."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests.compat import given, settings, st
 
 from repro.core import EdgeSystem, MLProblemConstants
 from repro.opt import (GP, ParamOptProblem, amgm_monomial, solve_gp,

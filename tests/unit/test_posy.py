@@ -1,8 +1,7 @@
 """Posynomial algebra property tests (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests.compat import given, settings, st
 
 from repro.opt.posy import Posy, const, monomial, var
 

@@ -1,14 +1,15 @@
-"""Assumption 1 (unbiasedness + variance bound) for the QSGD quantizer —
-statistical tests for both the reference implementation (repro.core) and the
-distributed runtime's counter-RNG variant (repro.fed.runtime)."""
+"""Assumption 1 (unbiasedness + variance bound) for the QSGD codec —
+statistical tests for the single level implementation in repro.compress,
+exercised both through jax.random noise (codec path) and the distributed
+runtime's counter-RNG."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.core import quantizer as Q
+from tests.compat import given, settings, st
+
+from repro import compress as C
 from repro.fed import runtime as RT
 
 
@@ -18,8 +19,9 @@ def test_unbiased_and_variance_bound(s):
     dim = 256
     y = jax.random.normal(key, (dim,)) * 2.0
     n = 4000
-    qs = Q.variance_bound(s, dim)
-    samples = jax.vmap(lambda k: Q.quantize_dequantize(y, s, k))(
+    qs = C.variance_bound(s, dim)
+    codec = C.make_codec(s)
+    samples = jax.vmap(lambda k: codec.quantize_dequantize(y, k))(
         jax.random.split(key, n))
     err = samples - y
     # unbiasedness: per-coordinate mean error within 6 sigma, using the
@@ -36,20 +38,42 @@ def test_unbiased_and_variance_bound(s):
     assert ratio <= qs * 1.05
 
 
-def test_identity_when_s_none():
+def test_identity_codec_exact():
     y = jnp.arange(8.0)
-    out = Q.quantize_dequantize(y, None, jax.random.PRNGKey(0))
-    assert jnp.array_equal(out, y)
+    codec = C.make_codec(None)
+    assert codec.is_identity and codec.variance_bound(8) == 0.0
+    assert jnp.array_equal(codec.quantize_dequantize(y, jax.random.PRNGKey(0)),
+                           y)
+    lvl, norm = codec.encode(y, jnp.zeros_like(y))
+    assert jnp.array_equal(codec.decode(lvl, norm), y)
 
 
 def test_levels_in_range():
     key = jax.random.PRNGKey(1)
     y = jax.random.normal(key, (512,)) * 10
     for s in (2, 8, 64):
-        lvl, norm = Q.quantize(y, s, key)
-        assert int(jnp.max(jnp.abs(lvl))) <= s
+        codec = C.make_codec(s)
+        u = jax.random.uniform(key, y.shape, jnp.float32)
+        lvl, norm = codec.encode(y, u)
+        assert lvl.dtype == jnp.int8
+        assert int(jnp.max(jnp.abs(lvl.astype(jnp.int32)))) <= s
         assert float(norm) == pytest.approx(float(jnp.linalg.norm(y)),
                                             rel=1e-6)
+
+
+def test_wide_quantizer_level_container():
+    """s > 127 (the paper's s0 = 2^14) needs the int32 level container."""
+    key = jax.random.PRNGKey(2)
+    y = jax.random.normal(key, (128,))
+    codec = C.make_codec(2**14)
+    u = jax.random.uniform(key, y.shape, jnp.float32)
+    lvl, norm = codec.encode(y, u)
+    assert lvl.dtype == jnp.int32
+    assert int(jnp.max(jnp.abs(lvl))) <= 2**14
+    # stochastic rounding is within one quantization step per coordinate
+    step = float(norm) / 2**14
+    np.testing.assert_allclose(np.asarray(codec.decode(lvl, norm)),
+                               np.asarray(y), rtol=0, atol=step * 1.001)
 
 
 @given(st.integers(min_value=1, max_value=127),
@@ -57,27 +81,26 @@ def test_levels_in_range():
 @settings(max_examples=30, deadline=None)
 def test_bits_and_variance_monotone(s, dim):
     """M_s grows with s; q_s shrinks with s (the paper's trade-off axis)."""
-    assert Q.bits_per_message(s + 1, dim) >= Q.bits_per_message(s, dim) - 1e-9
-    assert Q.variance_bound(s + 1, dim) <= Q.variance_bound(s, dim) + 1e-12
-    assert Q.variance_bound(s, dim) <= min(dim / s**2, np.sqrt(dim) / s) + 1e-12
+    assert C.bits_per_message(s + 1, dim) >= C.bits_per_message(s, dim) - 1e-9
+    assert C.variance_bound(s + 1, dim) <= C.variance_bound(s, dim) + 1e-12
+    assert C.variance_bound(s, dim) <= min(dim / s**2, np.sqrt(dim) / s) + 1e-12
 
 
 def test_q_pair():
-    assert Q.q_pair(0.0, 0.0) == 0.0
-    assert Q.q_pair(0.5, 0.2) == pytest.approx(0.5 + 0.2 + 0.1)
+    assert C.q_pair(0.0, 0.0) == 0.0
+    assert C.q_pair(0.5, 0.2) == pytest.approx(0.5 + 0.2 + 0.1)
 
 
-# --- runtime (counter-RNG) variant -----------------------------------------
-def test_runtime_quantizer_unbiased():
+# --- runtime (counter-RNG) noise through the same implementation -----------
+def test_runtime_noise_unbiased():
     dim, s, n = 128, 8, 3000
     key = jax.random.PRNGKey(2)
     y = jax.random.normal(key, (dim,))
-    norm = jnp.linalg.norm(y)
 
     def one(i):
         u = RT.uniform_like(y, RT._seed_from(jax.random.PRNGKey(i), 0))
-        lvl, nrm = RT.quantize_tensor(y, s, u)
-        return RT.dequantize_tensor(lvl, nrm, s)
+        lvl, nrm = C.encode_tensor(y, s, u)
+        return C.decode_tensor(lvl, nrm, s)
 
     samples = jnp.stack([one(i) for i in range(n)])
     err = samples - y
@@ -85,7 +108,21 @@ def test_runtime_quantizer_unbiased():
     assert float(jnp.max(jnp.abs(samples.mean(0) - y)
                          / (per_coord_std + 1e-9))) < 6.0
     ratio = float((err**2).sum(1).mean() / (y**2).sum())
-    assert ratio <= Q.variance_bound(s, dim) * 1.05
+    assert ratio <= C.variance_bound(s, dim) * 1.05
+
+
+def test_traced_s_matches_static():
+    """encode_tensor with a traced scalar s (heterogeneous vmap path) must
+    agree exactly with the static-s codec."""
+    key = jax.random.PRNGKey(3)
+    y = jax.random.normal(key, (300,))
+    u = jax.random.uniform(key, y.shape, jnp.float32)
+    for s in (3, 64):
+        lvl_static, n_static = C.make_codec(s).encode(y, u)
+        lvl_traced, n_traced = jax.jit(
+            lambda ss: C.encode_tensor(y, ss, u))(jnp.float32(s))
+        assert jnp.array_equal(lvl_static, lvl_traced)
+        assert float(n_static) == float(n_traced)
 
 
 def test_counter_rng_uniformity():
