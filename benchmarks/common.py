@@ -1,7 +1,9 @@
 """Shared harness for the paper-reproduction benchmarks (Sec. VII setup).
 
-Provides: cached pre-training constants, the Sec.-VII EdgeSystem, and the
-13-algorithm suite (Gen-C/E/D/O + {PM,FA,PR}-{C,E,D}-opt and -fix).
+Provides: cached pre-training constants, the Sec.-VII EdgeSystem/task, and
+the 13-algorithm suite (Gen-C/E/D/O + {PM,FA,PR}-{C,E,D}-opt and -fix) —
+all expressed through the repro.api Scenario facade (algorithm names map to
+(family, step-rule) Scenarios; no direct ParamOptProblem construction).
 """
 from __future__ import annotations
 
@@ -9,17 +11,12 @@ import json
 import math
 import os
 import time
-from typing import Dict, Optional
+from typing import Dict, Tuple
 
 import numpy as np
 
-from repro.core import EdgeSystem, MLProblemConstants, make_rule
-from repro.core.convergence import c_m
-from repro.core.cost import energy_cost, time_cost
-from repro.data.synthetic import mnist_like
-from repro.models import mlp
-from repro.opt import (ParamOptProblem, fa_varmap, identity_varmap, pm_varmap,
-                       pr_varmap, solve_param_opt)
+from repro.api import (EdgeSystem, MLProblemConstants, MNISTTask, Scenario,
+                       make_step_rule)
 
 RESULTS = os.environ.get("REPRO_RESULTS", "results")
 CONST_PATH = os.path.join(RESULTS, "paper_constants.json")
@@ -29,26 +26,58 @@ GAMMAS = {"C": dict(gamma=0.01), "E": dict(gamma=0.02, rho=0.9995),
           "D": dict(gamma=0.02, rho=600.0)}
 I_N = 6000.0  # samples per worker (60k over N=10)
 
+#: benchmark algorithm prefix -> repro.api family registry key
+FAMILY_OF = {"Gen": "genqsgd", "PM": "pm", "FA": "fa", "PR": "pr"}
+
+_TASK = None
+
+
+def get_task() -> MNISTTask:
+    """The Sec.-VII MNIST-like task (shared/cached across figures)."""
+    global _TASK
+    if _TASK is None:
+        _TASK = MNISTTask()
+    return _TASK
+
 
 def get_constants(force: bool = False) -> MLProblemConstants:
     os.makedirs(RESULTS, exist_ok=True)
     if os.path.exists(CONST_PATH) and not force:
         d = json.load(open(CONST_PATH))
-    else:
-        import jax
-        X, y = mnist_like()
-        d = mlp.estimate_constants(X, y, jax.random.PRNGKey(0))
-        json.dump(d, open(CONST_PATH, "w"), indent=2)
-    return MLProblemConstants(L=d["L"], sigma=d["sigma"], G=d["G"],
-                              f_gap=d["f_gap"], N=10)
+        return MLProblemConstants(L=d["L"], sigma=d["sigma"], G=d["G"],
+                                  f_gap=d["f_gap"], N=10)
+    consts = get_task().estimate_constants(N=10)
+    json.dump({"L": consts.L, "sigma": consts.sigma, "G": consts.G,
+               "f_gap": consts.f_gap}, open(CONST_PATH, "w"), indent=2)
+    return consts
 
 
 def paper_system(**kw) -> EdgeSystem:
-    return EdgeSystem.paper_sec_vii(dim=mlp.PARAM_DIM, **kw)
+    return EdgeSystem.paper_sec_vii(dim=MNISTTask.dim, **kw)
 
 
-def _fixed_eval(prob: ParamOptProblem, Kn_val: float, B: int,
-                max_k0: int = 200_000) -> Dict:
+def make_scenario(name: str, sys_: EdgeSystem, consts, T_max: float,
+                  C_max: float) -> Tuple[Scenario, str]:
+    """Map a benchmark algorithm name ('Gen-O', 'PM-E-opt', 'FA-C-fix', ...)
+    to a (Scenario, mode) pair; mode is 'opt' or 'fix'."""
+    parts = name.split("-")
+    algo = parts[0]
+    m = "J" if (algo == "Gen" and parts[1] == "O") else parts[1]
+    step = None if m == "J" else make_step_rule(m, **GAMMAS[m])
+    scn = Scenario(system=sys_, consts=consts, T_max=T_max, C_max=C_max,
+                   family=FAMILY_OF[algo], step=step, samples_per_worker=I_N)
+    return scn, (parts[2] if len(parts) > 2 else "opt")
+
+
+def plan_record(name: str, plan, dt: float) -> Dict:
+    """Flatten a Plan into the benchmark CSV row shape."""
+    return {"name": name, "K0": plan.K0, "Kn": int(plan.Kn[0]), "B": plan.B,
+            "gamma": plan.gamma, "E": plan.predicted_E,
+            "T": plan.predicted_T, "C": plan.predicted_C,
+            "feasible": bool(plan.feasible), "dt": dt}
+
+
+def _fixed_eval(prob, Kn_val: float, B: int, max_k0: int = 200_000) -> Dict:
     """-fix baselines: parameters preset, K0 = smallest meeting C_max."""
     Kn = np.full(10, max(1, int(round(Kn_val))), dtype=np.int64)
     K0, ok = 1, False
@@ -68,37 +97,17 @@ def _fixed_eval(prob: ParamOptProblem, Kn_val: float, B: int,
 def run_algorithm(name: str, sys_: EdgeSystem, consts, T_max: float,
                   C_max: float) -> Dict:
     """name: e.g. 'Gen-C', 'Gen-O', 'PM-E-opt', 'FA-D-fix', 'PR-C-opt'."""
-    parts = name.split("-")
     t0 = time.time()
-    if parts[0] == "Gen":
-        if parts[1] == "O":
-            prob = ParamOptProblem(sys=sys_, consts=consts, T_max=T_max,
-                                   C_max=C_max, m="J")
-        else:
-            prob = ParamOptProblem(sys=sys_, consts=consts, T_max=T_max,
-                                   C_max=C_max, m=parts[1],
-                                   **GAMMAS[parts[1]])
-        r = solve_param_opt(prob)
-        return {"name": name, "K0": r.K0, "Kn": int(r.Kn[0]), "B": r.B,
-                "gamma": r.gamma, "E": r.E, "T": r.T, "C": r.C,
-                "feasible": bool(r.feasible), "dt": time.time() - t0}
-    algo, m, mode = parts
-    we = (m == "E")
-    vm = {"PM": lambda: pm_varmap(10, with_extra=we),
-          "FA": lambda: fa_varmap(10, [I_N] * 10, with_extra=we),
-          "PR": lambda: pr_varmap(10, with_extra=we)}[algo]()
-    prob = ParamOptProblem(sys=sys_, consts=consts, T_max=T_max, C_max=C_max,
-                           m=m, vmap=vm, **GAMMAS[m])
-    if mode == "opt":
-        r = solve_param_opt(prob)
-        return {"name": name, "K0": r.K0, "Kn": int(r.Kn[0]), "B": r.B,
-                "gamma": r.gamma, "E": r.E, "T": r.T, "C": r.C,
-                "feasible": bool(r.feasible), "dt": time.time() - t0}
-    # -fix: PM: Kn=1,B=32; FA: l=1 (Kn=I/B), B=600; PR: B=1, Kn=4
-    prob_id = ParamOptProblem(sys=sys_, consts=consts, T_max=T_max,
-                              C_max=C_max, m=m, **GAMMAS[m])
+    parts = name.split("-")
+    if len(parts) < 3 or parts[2] == "opt":
+        scn, _ = make_scenario(name, sys_, consts, T_max, C_max)
+        return plan_record(name, scn.optimize(), time.time() - t0)
+    # -fix: PM: Kn=1,B=32; FA: l=1 (Kn=I/B), B=600; PR: B=1, Kn=4 —
+    # evaluated on the free-variable (genqsgd) problem of the same m.
+    algo, m, _ = parts
+    gen_scn, _ = make_scenario(f"Gen-{m}", sys_, consts, T_max, C_max)
     fixed = {"PM": (1, 32), "FA": (I_N / 600.0, 600), "PR": (4, 1)}[algo]
-    rec = _fixed_eval(prob_id, *fixed)
+    rec = _fixed_eval(gen_scn.problem(), *fixed)
     rec.update({"name": name, "dt": time.time() - t0})
     return rec
 

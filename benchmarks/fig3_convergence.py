@@ -1,72 +1,35 @@
 """Fig. 3: training loss / test accuracy of optimization-based GenQSGD
 (Gen-C/E/D/O) vs global iteration, at C_max=0.25, T_max=1e5.
 
-Runs the REAL GenQSGD (Algorithm 1) on the synthetic MNIST-like task with the
-(K, B, Γ) produced by Algorithms 2-5.
+Optimizes each scenario and executes the resulting Plan on the REAL GenQSGD
+(Algorithm 1) via ``Scenario.run`` — entirely through the repro.api facade.
 """
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import ConstantRule, GenQSGD, GenQSGDConfig, make_rule
-from repro.data.federated import partition_iid, sample_minibatch
-from repro.data.synthetic import mnist_like
-from repro.models import mlp
-
-from .common import (GAMMAS, RESULTS, get_constants, paper_system,
-                     run_algorithm, write_csv)
+from .common import (RESULTS, get_constants, get_task, make_scenario,
+                     paper_system, write_csv)
 
 MAX_K0 = 1200  # cap on executed global iterations (curves flatten well before)
-
-
-def _train(params_rec, X, y, Xte, yte, s0, sn, eval_every=25, max_k0=MAX_K0):
-    N = 10
-    Xw, yw = partition_iid(X, y, N)
-    data = (jnp.stack([jnp.asarray(x) for x in Xw]),
-            jnp.stack([jnp.asarray(v) for v in yw]))
-    K0 = min(int(params_rec["K0"]), max_k0)
-    rule_name = params_rec.get("rule", "C")
-    if params_rec["name"] == "Gen-O":
-        rule = ConstantRule(float(params_rec["gamma"]))
-    else:
-        m = params_rec["name"].split("-")[1]
-        rule = make_rule(m, **GAMMAS[m])
-    cfg = GenQSGDConfig(K0=K0, Kn=(int(params_rec["Kn"]),) * N,
-                        B=int(params_rec["B"]), step_rule=rule,
-                        s0=s0, sn=[sn] * N)
-    alg = GenQSGD(mlp.loss, sample_minibatch, cfg)
-    p0 = mlp.init_params(jax.random.PRNGKey(1))
-    Xte_j, yte_j = jnp.asarray(Xte), jnp.asarray(yte)
-
-    def eval_fn(p):
-        return {"train_loss": float(mlp.loss(p, (Xte_j[:2048], yte_j[:2048]))),
-                "test_acc": mlp.accuracy(p, Xte_j, yte_j)}
-
-    _, hist = alg.run(p0, data, jax.random.PRNGKey(2), eval_fn=eval_fn,
-                      eval_every=eval_every)
-    return hist
 
 
 def run(tag="fig3"):
     consts = get_constants()
     sys_ = paper_system()
-    X, y = mnist_like()
-    Xtr, ytr, Xte, yte = X[:50000], y[:50000], X[50000:], y[50000:]
+    task = get_task()
     rows = []
     t0 = time.time()
     for name in ("Gen-C", "Gen-E", "Gen-D", "Gen-O"):
-        rec = run_algorithm(name, sys_, consts, T_max=1e5, C_max=0.25)
-        hist = _train(rec, Xtr, ytr, Xte, yte, s0=sys_.s0, sn=sys_.sn[0])
-        for h in hist:
+        scn, _ = make_scenario(name, sys_, consts, T_max=1e5, C_max=0.25)
+        plan = scn.optimize()
+        rep = scn.run(plan, task=task, max_rounds=MAX_K0, eval_every=25)
+        for h in rep.history:
             rows.append({"algo": name, **h})
-        print(f"  {name}: K0={rec['K0']} Kn={rec['Kn']} B={rec['B']} "
-              f"final acc={hist[-1]['test_acc']:.3f}", flush=True)
+        print(f"  {name}: K0={plan.K0} Kn={plan.Kn[0]} B={plan.B} "
+              f"final acc={rep.final_metrics['test_acc']:.3f}", flush=True)
     path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
-                     ["algo", "k0", "train_loss", "test_acc", "delta_norm",
+                     ["algo", "k0", "eval_loss", "test_acc", "delta_norm",
                       "update_norm"])
     return {"rows": len(rows), "csv": path,
             "derived": rows[-1]["test_acc"], "dt": time.time() - t0}

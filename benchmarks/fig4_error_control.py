@@ -1,21 +1,16 @@
 """Fig. 4: realized training loss / test accuracy versus the convergence-
 error limit C_max — demonstrating that the constraint in (36) actually
 controls the achieved model quality (the paper's "C_A effectively
-characterizes training loss and test accuracy" claim)."""
+characterizes training loss and test accuracy" claim).  Runs the optimized
+Plans through ``Scenario.run`` on the Sec.-VII task."""
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
+from repro.api import MNISTTask
 
-from repro.core import ConstantRule, GenQSGD, GenQSGDConfig
-from repro.data.federated import partition_iid, sample_minibatch
-from repro.data.synthetic import mnist_like
-from repro.models import mlp
-
-from .common import RESULTS, get_constants, paper_system, run_algorithm, \
-    write_csv
+from .common import (RESULTS, get_constants, make_scenario, paper_system,
+                     write_csv)
 
 C_GRID = (0.2, 0.3, 0.5, 0.8)
 MAX_K0 = 1500
@@ -24,31 +19,20 @@ MAX_K0 = 1500
 def run(tag="fig4"):
     consts = get_constants()
     sys_ = paper_system()
-    X, y = mnist_like()
-    Xtr, ytr, Xte, yte = X[:50000], y[:50000], X[50000:], y[50000:]
-    N = 10
-    Xw, yw = partition_iid(Xtr, ytr, N)
-    data = (jnp.stack([jnp.asarray(a) for a in Xw]),
-            jnp.stack([jnp.asarray(a) for a in yw]))
-    Xte_j, yte_j = jnp.asarray(Xte), jnp.asarray(yte)
+    task = MNISTTask(eval_samples=4096)
     rows, t0 = [], time.time()
     for cmax in C_GRID:
-        rec = run_algorithm("Gen-O", sys_, consts, T_max=1e5, C_max=cmax)
-        K0 = min(int(rec["K0"]), MAX_K0)
-        cfg = GenQSGDConfig(K0=K0, Kn=(int(rec["Kn"]),) * N, B=int(rec["B"]),
-                            step_rule=ConstantRule(float(rec["gamma"])),
-                            s0=sys_.s0, sn=list(sys_.sn))
-        alg = GenQSGD(mlp.loss, sample_minibatch, cfg)
-        pf, _ = alg.run(mlp.init_params(jax.random.PRNGKey(1)), data,
-                        jax.random.PRNGKey(2))
-        loss = float(mlp.loss(pf, (Xte_j[:4096], yte_j[:4096])))
-        acc = mlp.accuracy(pf, Xte_j, yte_j)
-        rows.append({"C_max": cmax, "K0_opt": rec["K0"], "K0_run": K0,
-                     "Kn": rec["Kn"], "B": rec["B"],
-                     "gamma": rec["gamma"], "test_loss": round(loss, 4),
+        scn, _ = make_scenario("Gen-O", sys_, consts, T_max=1e5, C_max=cmax)
+        plan = scn.optimize()
+        rep = scn.run(plan, task=task, max_rounds=MAX_K0)
+        loss = rep.final_metrics["eval_loss"]
+        acc = rep.final_metrics["test_acc"]
+        rows.append({"C_max": cmax, "K0_opt": plan.K0, "K0_run": rep.rounds,
+                     "Kn": plan.Kn[0], "B": plan.B,
+                     "gamma": plan.gamma, "test_loss": round(loss, 4),
                      "test_acc": round(acc, 4)})
-        print(f"  C_max={cmax}: K0={K0} -> loss={loss:.3f} acc={acc:.3f}",
-              flush=True)
+        print(f"  C_max={cmax}: K0={rep.rounds} -> loss={loss:.3f} "
+              f"acc={acc:.3f}", flush=True)
     path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
                      ["C_max", "K0_opt", "K0_run", "Kn", "B", "gamma",
                       "test_loss", "test_acc"])

@@ -16,8 +16,7 @@ import time
 
 import numpy as np
 
-from repro.core import EdgeSystem, MLProblemConstants
-from repro.opt import ParamOptProblem, solve_param_opt
+from repro.api import EdgeSystem, MLProblemConstants, Scenario
 
 from .common import RESULTS, write_csv
 
@@ -40,14 +39,16 @@ def run(tag="tpu_autotune"):
             dim=DIM, n_groups=2, chips_per_group=256,
             s0=1024, sn=1024, link_bw=link * 8,  # rn is in bits/s
             flops_per_sample_step=FLOPS_PER_SAMPLE)
-        prob = ParamOptProblem(sys=sys_, consts=consts, T_max=3 * 24 * 3600.0,
-                               C_max=0.5, m="J")
-        r = solve_param_opt(prob)
-        rows.append({"link_GBps": link / 1e9, "K0": r.K0, "Kn": int(r.Kn[0]),
-                     "B": r.B, "gamma": r.gamma, "E_J": r.E, "T_s": r.T,
-                     "C": r.C, "feasible": r.feasible})
-        print(f"  link={link/1e9:7.1f} GB/s -> K0={r.K0} Kn={r.Kn[0]} "
-              f"B={r.B} T={r.T:.3g}s feasible={r.feasible}", flush=True)
+        scn = Scenario(system=sys_, consts=consts, T_max=3 * 24 * 3600.0,
+                       C_max=0.5)
+        p = scn.optimize()
+        rows.append({"link_GBps": link / 1e9, "K0": p.K0, "Kn": p.Kn[0],
+                     "B": p.B, "gamma": p.gamma, "E_J": p.predicted_E,
+                     "T_s": p.predicted_T, "C": p.predicted_C,
+                     "feasible": p.feasible})
+        print(f"  link={link/1e9:7.1f} GB/s -> K0={p.K0} Kn={p.Kn[0]} "
+              f"B={p.B} T={p.predicted_T:.3g}s feasible={p.feasible}",
+              flush=True)
     path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
                      ["link_GBps", "K0", "Kn", "B", "gamma", "E_J", "T_s",
                       "C", "feasible"])

@@ -1,16 +1,13 @@
 """The optimization framework as a standalone tool: solve the paper's
 Problems 2/9 for any (T_max, C_max, system) and compare against PM-SGD /
-FedAvg / PR-SGD parameterizations.
+FedAvg / PR-SGD parameterizations — all through the repro.api facade.
 
     PYTHONPATH=src python examples/optimize_parameters.py --cmax 0.25 --tmax 1e5
     PYTHONPATH=src python examples/optimize_parameters.py --tpu  # v5e fleet
 """
 import argparse
 
-from repro.core import EdgeSystem, MLProblemConstants
-from repro.models import mlp
-from repro.opt import (ParamOptProblem, fa_varmap, pm_varmap, pr_varmap,
-                       solve_param_opt)
+from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants, Scenario)
 
 
 def main():
@@ -29,7 +26,8 @@ def main():
         consts = MLProblemConstants(L=0.05, sigma=4.0, G=5.0, f_gap=3.0, N=2)
         args.cmax, args.tmax = 0.5, 3 * 24 * 3600.0
     else:
-        sys_ = EdgeSystem.paper_sec_vii(dim=mlp.PARAM_DIM)
+        from repro.api import MNISTTask
+        sys_ = EdgeSystem.paper_sec_vii(dim=MNISTTask.dim)
         consts = MLProblemConstants(L=0.084, sigma=33.18, G=33.63,
                                     f_gap=2.3, N=10)
 
@@ -37,30 +35,22 @@ def main():
     print(f"{'algorithm':14s} {'K0':>7s} {'Kn':>5s} {'B':>5s} "
           f"{'gamma':>9s} {'E':>11s} {'T':>10s} {'C':>7s}  feasible")
 
-    def show(name, prob):
-        r = solve_param_opt(prob)
-        print(f"{name:14s} {r.K0:7d} {int(r.Kn[0]):5d} {r.B:5d} "
-              f"{(r.gamma or 0):9.4g} {r.E:11.4g} {r.T:10.4g} {r.C:7.4g}  "
-              f"{r.feasible}")
+    def show(name, scenario):
+        p = scenario.optimize()
+        print(f"{name:14s} {p.K0:7d} {p.Kn[0]:5d} {p.B:5d} "
+              f"{p.gamma:9.4g} {p.predicted_E:11.4g} {p.predicted_T:10.4g} "
+              f"{p.predicted_C:7.4g}  {p.feasible}")
 
-    N = sys_.N
-    show("GenQSGD (opt)", ParamOptProblem(sys=sys_, consts=consts,
-                                          T_max=args.tmax, C_max=args.cmax,
-                                          m="J"))
-    show("Gen-C g=.01", ParamOptProblem(sys=sys_, consts=consts,
-                                        T_max=args.tmax, C_max=args.cmax,
-                                        m="C", gamma=0.01))
-    show("PM-SGD", ParamOptProblem(sys=sys_, consts=consts, T_max=args.tmax,
-                                   C_max=args.cmax, m="C", gamma=0.01,
-                                   vmap=pm_varmap(N)))
-    show("PR-SGD", ParamOptProblem(sys=sys_, consts=consts, T_max=args.tmax,
-                                   C_max=args.cmax, m="C", gamma=0.01,
-                                   vmap=pr_varmap(N)))
+    def scenario(family="genqsgd", step=None):
+        return Scenario(system=sys_, consts=consts, T_max=args.tmax,
+                        C_max=args.cmax, family=family, step=step)
+
+    show("GenQSGD (opt)", scenario())
+    show("Gen-C g=.01", scenario(step=ConstantRule(0.01)))
+    show("PM-SGD", scenario("pm", ConstantRule(0.01)))
+    show("PR-SGD", scenario("pr", ConstantRule(0.01)))
     if not args.tpu:
-        show("FedAvg", ParamOptProblem(sys=sys_, consts=consts,
-                                       T_max=args.tmax, C_max=args.cmax,
-                                       m="C", gamma=0.01,
-                                       vmap=fa_varmap(N, [6000.0] * N)))
+        show("FedAvg", scenario("fa", ConstantRule(0.01)))
 
 
 if __name__ == "__main__":

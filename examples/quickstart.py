@@ -1,66 +1,37 @@
-"""Quickstart: the paper end-to-end in ~a minute.
+"""Quickstart: the paper end-to-end in ~a minute, entirely through repro.api.
 
 1. Estimate the ML-problem constants (L, sigma, G) by pre-training probes.
 2. Optimize ALL GenQSGD parameters (K_0, K_n, B, gamma) with Algorithm 5.
-3. Run GenQSGD (Algorithm 1) with the optimized parameters on the MNIST-like
-   federated task and report test accuracy.
+3. Run GenQSGD (Algorithm 1) with *exactly* the optimized parameters on the
+   MNIST-like federated task and compare measured cost against predictions.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import ConstantRule, EdgeSystem, GenQSGD, GenQSGDConfig, \
-    MLProblemConstants
-from repro.data.federated import partition_iid, sample_minibatch
-from repro.data.synthetic import mnist_like
-from repro.models import mlp
-from repro.opt import ParamOptProblem, solve_param_opt
+from repro.api import EdgeSystem, MNISTTask, Scenario
 
 
 def main():
+    task = MNISTTask()
+
     print("== 1. data + pre-training constants ==")
-    X, y = mnist_like()
-    Xtr, ytr, Xte, yte = X[:50000], y[:50000], X[50000:], y[50000:]
-    consts_d = mlp.estimate_constants(X, y, jax.random.PRNGKey(0),
-                                      n_iters=120)
-    print(f"   L={consts_d['L']:.3g} sigma={consts_d['sigma']:.3g} "
-          f"G={consts_d['G']:.3g} f_gap={consts_d['f_gap']:.3g}")
-    consts = MLProblemConstants(L=consts_d["L"], sigma=consts_d["sigma"],
-                                G=consts_d["G"], f_gap=consts_d["f_gap"],
-                                N=10)
+    consts = task.estimate_constants(N=10, n_iters=120)
+    print(f"   L={consts.L:.3g} sigma={consts.sigma:.3g} "
+          f"G={consts.G:.3g} f_gap={consts.f_gap:.3g}")
 
     print("== 2. optimize (K, B, gamma) — Algorithm 5 ==")
-    sys_ = EdgeSystem.paper_sec_vii(dim=mlp.PARAM_DIM)
-    prob = ParamOptProblem(sys=sys_, consts=consts, T_max=1e5, C_max=0.25,
-                           m="J")
-    r = solve_param_opt(prob)
-    print(f"   K0={r.K0}  Kn={r.Kn[0]}  B={r.B}  gamma={r.gamma:.4g}")
-    print(f"   predicted energy {r.E:.4g} J, time {r.T:.4g} s, "
-          f"error bound {r.C:.4g}")
+    scenario = Scenario(system=EdgeSystem.paper_sec_vii(dim=task.dim),
+                        consts=consts, T_max=1e5, C_max=0.25)
+    plan = scenario.optimize()
+    print("   " + plan.describe())
 
     print("== 3. run GenQSGD with the optimized parameters ==")
-    Xw, yw = partition_iid(Xtr, ytr, 10)
-    data = (jnp.stack([jnp.asarray(a) for a in Xw]),
-            jnp.stack([jnp.asarray(a) for a in yw]))
-    K0 = min(r.K0, 400)  # cap for the quickstart
-    cfg = GenQSGDConfig(K0=K0, Kn=tuple(int(k) for k in r.Kn), B=r.B,
-                        step_rule=ConstantRule(float(r.gamma)),
-                        s0=sys_.s0, sn=list(sys_.sn))
-    alg = GenQSGD(mlp.loss, sample_minibatch, cfg)
-    p0 = mlp.init_params(jax.random.PRNGKey(1))
-    Xte_j, yte_j = jnp.asarray(Xte), jnp.asarray(yte)
-
-    def eval_fn(p):
-        return {"acc": mlp.accuracy(p, Xte_j, yte_j)}
-
-    pf, hist = alg.run(p0, data, jax.random.PRNGKey(2), eval_fn=eval_fn,
-                       eval_every=max(1, K0 // 8))
-    for h in hist:
-        print(f"   round {h['k0']:4d}  test acc {h['acc']:.3f}")
-    print(f"== done: final accuracy {hist[-1]['acc']:.3f} "
-          f"(K0 capped at {K0} of {r.K0}) ==")
+    report = scenario.run(plan, task=task, max_rounds=400,
+                          eval_every=max(1, min(plan.K0, 400) // 8))
+    for h in report.history:
+        print(f"   round {h['k0']:4d}  test acc {h['test_acc']:.3f}")
+    print(report.summary())
+    print(f"== done: final accuracy {report.final_metrics['test_acc']:.3f} "
+          f"({report.rounds} of {plan.K0} planned rounds) ==")
 
 
 if __name__ == "__main__":

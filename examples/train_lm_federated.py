@@ -2,6 +2,11 @@
 DISTRIBUTED GenQSGD runtime (the same code the multi-pod dry-run lowers) on
 a simulated 8-device mesh (fl=2 workers x fsdp=2 x tp=2).
 
+The run is parameterized through a repro.api :class:`Plan` — the same object
+``Scenario.optimize`` produces — so the FedConfig derives from one validated
+source of truth (a hand-built Plan here, since the demo picks its knobs from
+the CLI rather than from the optimizer).
+
     PYTHONPATH=src python examples/train_lm_federated.py --rounds 20
     PYTHONPATH=src python examples/train_lm_federated.py --rounds 300 --full
 
@@ -14,16 +19,13 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ConstantRule, GenQSGDTrainer, Plan, round_comm_bits
 from repro.configs.base import ArchConfig
-from repro.core import ConstantRule
 from repro.data.federated import round_batches
 from repro.data.synthetic import token_batches
-from repro.fed.runtime import FedConfig
 from repro.models import lm
-from repro.train.trainer import GenQSGDTrainer
 
 
 def small_cfg(full: bool) -> ArchConfig:
@@ -48,6 +50,8 @@ def main():
     ap.add_argument("--s", type=int, default=None,
                     help="quantization parameter s0=sn (default: 64, "
                          "clamped to the wire's cap)")
+    ap.add_argument("--bucket", type=int, default=None,
+                    help="per-bucket-norm quantization bucket size")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     s_q = args.s if args.s is not None else min(64, wire_max_s(args.wire) or 64)
@@ -57,16 +61,18 @@ def main():
     devs = np.array(jax.devices()).reshape(2, 2, 2)
     mesh = make_mesh(devs, ("fl", "fsdp", "tp"))
     fl = 2
-    fed = FedConfig(n_workers=fl, Kn=(args.k_local,) * fl, s0=s_q, sn=s_q,
-                    wire=args.wire)
-    trainer = GenQSGDTrainer(lm, cfg, fed, mesh,
-                             step_rule=ConstantRule(0.01),
+    plan = Plan.manual(K0=args.rounds, Kn=(args.k_local,) * fl, B=args.batch,
+                       step_rule=ConstantRule(0.01), s0=s_q, sn=s_q,
+                       q_dim=args.bucket)
+    fed = plan.to_fed_config(wire=args.wire)
+    trainer = GenQSGDTrainer(lm, cfg, fed, mesh, step_rule=plan.step_rule,
                              checkpoint_dir=args.ckpt)
     state = trainer.init(jax.random.PRNGKey(0))
     n_params = sum(int(np.prod(l.shape))
                    for l in jax.tree.leaves(state.params))
     print(f"model {cfg.name}: {n_params/1e6:.1f}M params | "
-          f"mesh fl=2 fsdp=2 tp=2 | wire={args.wire}")
+          f"mesh fl=2 fsdp=2 tp=2 | wire={args.wire} | "
+          f"{round_comm_bits(fed, n_params)/8e6:.1f} MB/round")
 
     stream = token_batches(seed=0, batch=args.batch, seq=args.seq,
                            vocab=cfg.vocab)

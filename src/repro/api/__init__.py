@@ -1,0 +1,63 @@
+"""repro.api — the one public entry point: Scenario → Plan → Run.
+
+The paper's contribution is a *closed loop*: optimize the algorithm
+parameters ``(K0, Kn, B, Γ)`` against the edge-system cost model
+(Sec. V), then run federated learning with exactly those parameters.
+This package is that loop as three objects:
+
+  :class:`Scenario`   what you have — an :class:`EdgeSystem` (cost model),
+                      :class:`MLProblemConstants`, budgets ``(T_max,
+                      C_max)``, a step-size rule, an algorithm family;
+  :class:`Plan`       what to run — the frozen optimizer output
+                      ``(K0, Kn, B, Γ, s0, sn)`` plus predicted
+                      energy/time/error, from which both runtime configs
+                      (`to_genqsgd_config`, `to_fed_config`) derive;
+  :class:`RunReport`  what happened — measured communication bits (through
+                      the same ``codec.wire_bits`` table the optimizer
+                      priced), cost-model energy/time at the executed round
+                      count, and task metrics, next to the predictions.
+
+    from repro.api import EdgeSystem, MNISTTask, Scenario
+
+    task = MNISTTask()
+    scenario = Scenario(system=EdgeSystem.paper_sec_vii(dim=task.dim),
+                        consts=task.estimate_constants(N=10),
+                        T_max=1e5, C_max=0.25)
+    plan = scenario.optimize()            # Algorithms 2-5
+    report = scenario.run(plan, task=task)  # Algorithm 1
+    print(plan.describe()); print(report.summary())
+
+Families (``genqsgd`` | ``pm`` | ``fa`` | ``pr``) and step rules live in
+small registries (:mod:`repro.api.registries`) so successor algorithm
+variants plug in without touching the facade.
+"""
+from ..core.convergence import MLProblemConstants
+from ..core.cost import EdgeSystem
+from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
+                               StepRule, make_rule)
+from ..opt.problems import Objective
+from .plan import Plan, RunReport
+from .registries import (FAMILIES, STEP_RULES, family_names, make_step_rule,
+                         make_varmap, register_family, register_step_rule)
+from .scenario import Scenario
+from .tasks import MNISTTask, QuadraticTask, SpmdTask
+
+__all__ = [
+    "Scenario", "Plan", "RunReport", "Objective",
+    "EdgeSystem", "MLProblemConstants",
+    "ConstantRule", "ExponentialRule", "DiminishingRule", "StepRule",
+    "make_rule", "make_step_rule", "make_varmap",
+    "STEP_RULES", "FAMILIES", "register_step_rule", "register_family",
+    "family_names",
+    "MNISTTask", "QuadraticTask", "SpmdTask",
+    "GenQSGDTrainer", "round_comm_bits",
+]
+
+
+def __getattr__(name):
+    # lazy: the trainer pulls the SPMD runtime stack, which optimizer-only
+    # consumers (e.g. benchmarks/tpu_autotune) never need
+    if name in ("GenQSGDTrainer", "round_comm_bits"):
+        from ..train import trainer
+        return getattr(trainer, name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

@@ -1,0 +1,221 @@
+"""Plan and RunReport: the two value objects of the optimize→train loop.
+
+A :class:`Plan` is the frozen output of ``Scenario.optimize`` — the single
+source of truth for the paper's decision variables ``(K0, Kn, B, Γ)`` plus
+the quantizer parameters ``(s0, sn, q_dim, wire)`` they were optimized
+against.  Both runtime configurations (the single-process reference
+:class:`~repro.core.genqsgd.GenQSGDConfig` and the SPMD
+:class:`~repro.fed.runtime.FedConfig`) derive from it, so the parameters can
+never disagree between the optimizer and the training run.
+
+A :class:`RunReport` closes the loop: it compares what a training run
+actually moved/cost (communication bits through the
+``repro.compress`` ``codec.wire_bits`` accounting, cost-model energy/time at
+the executed round count, wall-clock) against the Plan's predictions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional, Tuple
+
+from ..compress import RUNTIME_WIRES, make_codec, wire_max_s
+from ..core.genqsgd import GenQSGDConfig
+from ..core.step_rules import StepRule
+from ..opt.problems import Objective
+
+if TYPE_CHECKING:
+    from ..fed.runtime import FedConfig
+
+__all__ = ["Plan", "RunReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Frozen, validated parameterization of one GenQSGD training job.
+
+    Produced by ``Scenario.optimize`` (predictions filled in from the GIA
+    solution) or hand-built via :meth:`manual` for runs that skip the
+    optimizer but still want one source of truth for their configs.
+    """
+
+    K0: int                              # global iterations
+    Kn: Tuple[int, ...]                  # per-worker local iterations
+    B: int                               # mini-batch size
+    step_rule: StepRule                  # Γ (optimized gamma for m=J)
+    s0: Optional[int] = None             # server quantizer
+    sn: Tuple[Optional[int], ...] = ()   # per-worker quantizers (len N)
+    dim: int = 0                         # model dimension priced by M_s
+    q_dim: Optional[int] = None          # per-bucket-norm size (None = whole)
+    wire: str = "packed"                 # pricing wire format (EdgeSystem's)
+    objective: Objective = Objective.CONSTANT
+    family: str = "genqsgd"
+    # predictions at (K0, Kn, B) — NaN for manual plans
+    predicted_E: float = float("nan")    # energy (J), eq. (18)
+    predicted_T: float = float("nan")    # time (s), eq. (17)
+    predicted_C: float = float("nan")    # convergence error bound
+    feasible: bool = True
+    converged: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "Kn", tuple(int(k) for k in self.Kn))
+        # default: exact communication (s = infinity) for every worker
+        object.__setattr__(self, "sn", tuple(self.sn) if self.sn
+                           else (None,) * len(self.Kn))
+        object.__setattr__(self, "objective",
+                           Objective.coerce(self.objective, _warn=False))
+        if self.K0 < 1 or self.B < 1 or any(k < 1 for k in self.Kn):
+            raise ValueError(f"K0, Kn, B must be >= 1, got "
+                             f"K0={self.K0} Kn={self.Kn} B={self.B}")
+        if len(self.sn) != len(self.Kn):
+            raise ValueError(f"sn has {len(self.sn)} entries for "
+                             f"{len(self.Kn)} workers")
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def manual(cls, K0: int, Kn, B: int, step_rule: StepRule,
+               s0: Optional[int] = None, sn=None, dim: int = 0,
+               q_dim: Optional[int] = None, wire: str = "packed") -> "Plan":
+        """A Plan not produced by the optimizer (predictions are NaN)."""
+        Kn = tuple(int(k) for k in Kn)
+        if isinstance(sn, (int, type(None))):
+            sn = (sn,) * len(Kn)
+        try:  # custom registered rules default to the constant objective
+            obj = Objective.coerce(getattr(step_rule, "name", "C"),
+                                   _warn=False)
+        except ValueError:
+            obj = Objective.CONSTANT
+        return cls(K0=int(K0), Kn=Kn, B=int(B), step_rule=step_rule,
+                   s0=s0, sn=tuple(sn), dim=int(dim), q_dim=q_dim, wire=wire,
+                   objective=obj)
+
+    @property
+    def N(self) -> int:
+        return len(self.Kn)
+
+    @property
+    def gamma(self) -> float:
+        return float(self.step_rule.gamma)
+
+    @property
+    def K_max(self) -> int:
+        return int(max(self.Kn))
+
+    # -- bit accounting (the same codec table EdgeSystem.M_s prices) ----
+    def round_bits(self, dim: Optional[int] = None,
+                   wire: Optional[str] = None) -> float:
+        """Wire bits one global iteration moves: N worker uploads plus the
+        server multicast, priced by ``codec.wire_bits``."""
+        d = self.dim if dim is None else int(dim)
+        w = self.wire if wire is None else wire
+        up = sum(make_codec(s, wire=w, bucket=self.q_dim).wire_bits(d)
+                 for s in self.sn)
+        # mirror FedConfig.server_codec: an exact multicast (s0=None) is raw
+        # f32 regardless of the worker wire (the packing wire can't carry it)
+        down_w = "f32" if (self.s0 is None and w == "int4") else w
+        down = make_codec(self.s0, wire=down_w, bucket=self.q_dim).wire_bits(d)
+        return up + down
+
+    @property
+    def predicted_comm_bits(self) -> float:
+        """K0 * (sum_n M_{s_n} + M_{s_0}) — total bits the cost model
+        budgeted for the whole run."""
+        return self.K0 * self.round_bits()
+
+    # -- runtime configs (the tentpole: one source of truth) ------------
+    def to_genqsgd_config(self, max_K0: Optional[int] = None) -> GenQSGDConfig:
+        """The single-process reference runtime's config (Algorithm 1)."""
+        K0 = self.K0 if max_K0 is None else min(self.K0, int(max_K0))
+        return GenQSGDConfig(K0=K0, Kn=self.Kn, B=self.B,
+                             step_rule=self.step_rule, s0=self.s0,
+                             sn=list(self.sn), bucket=self.q_dim)
+
+    def to_fed_config(self, wire: str = "f32", microbatch: int = 1,
+                      aux_weight: float = 0.01) -> FedConfig:
+        """The SPMD runtime's config, cross-validated against the Plan.
+
+        ``wire`` is the aggregation *transport* (how the quantized levels
+        travel); the Plan's ``s0/sn/q_dim`` decide *what* is sent.  Pairs
+        the transport cannot carry — e.g. ``wire="int4"`` with s > 7 — are
+        rejected here, before any mesh work starts.
+        """
+        from ..fed.runtime import FedConfig  # lazy: SPMD runtime stack
+
+        if wire not in RUNTIME_WIRES:
+            raise ValueError(f"wire must be one of {RUNTIME_WIRES}, "
+                             f"got {wire!r}")
+        cap = wire_max_s(wire)
+        for role, s in [("s0", self.s0)] + [(f"sn[{i}]", s)
+                                            for i, s in enumerate(self.sn)]:
+            if s is not None and cap is not None and s > cap:
+                raise ValueError(
+                    f"plan {role}={s} cannot ride the {wire!r} transport "
+                    f"(carries s <= {cap}); re-optimize the Scenario with "
+                    f"quantizers the wire supports or pick a wider wire")
+        return FedConfig(n_workers=self.N, Kn=self.Kn, s0=self.s0,
+                         sn=self.sn, wire=wire, bucket=self.q_dim,
+                         microbatch=microbatch, aux_weight=aux_weight)
+
+    def describe(self) -> str:
+        sn = set(self.sn)
+        sn_txt = str(next(iter(sn))) if len(sn) == 1 else str(list(self.sn))
+        return (f"Plan[{self.family}/{self.objective.value}] "
+                f"K0={self.K0} Kn={list(self.Kn)} B={self.B} "
+                f"gamma={self.gamma:.4g} s0={self.s0} sn={sn_txt} | "
+                f"E={self.predicted_E:.4g} J, T={self.predicted_T:.4g} s, "
+                f"C={self.predicted_C:.4g} "
+                f"({'feasible' if self.feasible else 'INFEASIBLE'})")
+
+
+@dataclasses.dataclass(frozen=True)
+class RunReport:
+    """What a training run measured, next to what its Plan predicted.
+
+    ``comm_bits`` is measured through the same ``codec.wire_bits`` table the
+    optimizer priced (executed rounds x per-round message bits at the
+    *actual* model dimension); ``measured_E`` / ``measured_T`` evaluate the
+    closed-form cost models at the executed round count, while
+    ``wall_time_s`` is the real clock.
+    """
+
+    plan: Plan
+    backend: str                     # "reference" | "spmd"
+    rounds: int                      # global iterations actually executed
+    model_dim: int                   # flattened dimension of the live model
+    wall_time_s: float
+    comm_bits: float                 # measured total wire bits
+    measured_E: float                # cost-model energy over executed rounds
+    measured_T: float                # cost-model time over executed rounds
+    final_metrics: dict = dataclasses.field(default_factory=dict)
+    history: tuple = ()
+
+    @property
+    def predicted_comm_bits(self) -> float:
+        return self.plan.predicted_comm_bits
+
+    @property
+    def comm_bits_match(self) -> bool:
+        """Exact closure of the loop: did the run move exactly the bits the
+        optimizer budgeted?  True when the full K0 executed on a model of
+        the dimension the Scenario priced."""
+        return self.comm_bits == self.predicted_comm_bits
+
+    def summary(self) -> str:
+        p = self.plan
+        lines = [
+            f"RunReport[{self.backend}] {self.rounds}/{p.K0} rounds, "
+            f"model dim {self.model_dim} (planned {p.dim}), "
+            f"wall {self.wall_time_s:.1f}s",
+            f"  comm bits: measured {self.comm_bits:.6g} vs predicted "
+            f"{self.predicted_comm_bits:.6g} "
+            f"({'EXACT' if self.comm_bits_match else 'differs'})",
+            f"  energy:    modeled {self.measured_E:.4g} J vs predicted "
+            f"{p.predicted_E:.4g} J",
+            f"  time:      modeled {self.measured_T:.4g} s vs predicted "
+            f"{p.predicted_T:.4g} s",
+        ]
+        if self.final_metrics:
+            kv = " ".join(f"{k}={v:.4g}" if isinstance(v, float)
+                          else f"{k}={v}" for k, v in
+                          self.final_metrics.items())
+            lines.append(f"  metrics:   {kv}")
+        return "\n".join(lines)

@@ -1,0 +1,92 @@
+"""Registries behind the Scenario facade (mirroring the codec registry of
+:mod:`repro.compress`): step-size rules keyed by the objective letter, and
+algorithm families keyed by name.
+
+A *family* is one of the paper's algorithm parameterizations — GenQSGD with
+every variable free, or a baseline obtained by pinning/tying variables
+through a :class:`~repro.opt.problems.VarMap` (Sec. VII):
+
+  genqsgd  — K0, K_1..K_N, B all free (Problems 3/5/7/11)
+  pm       — PM-SGD: K_n ≡ 1
+  fa       — FedAvg: K_n = l * I_n / B (l a shared relaxed-integer variable)
+  pr       — PR-SGD: B ≡ 1
+
+New families (e.g. GQFedWAvg's weighted-aggregation variants) register a
+varmap factory here and immediately work with ``Scenario.optimize`` and the
+whole benchmark suite.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
+                               StepRule)
+from ..opt.problems import (Objective, VarMap, fa_varmap, identity_varmap,
+                            pm_varmap, pr_varmap)
+
+__all__ = [
+    "STEP_RULES", "FAMILIES", "register_step_rule", "register_family",
+    "make_step_rule", "make_varmap", "family_names",
+]
+
+# ---------------------------------------------------------------------------
+# step-size rules: objective letter -> rule constructor
+# ---------------------------------------------------------------------------
+STEP_RULES: Dict[str, Callable[..., StepRule]] = {}
+
+
+def register_step_rule(name: str, factory: Callable[..., StepRule]) -> None:
+    STEP_RULES[str(name)] = factory
+
+
+register_step_rule("C", ConstantRule)
+register_step_rule("E", ExponentialRule)
+register_step_rule("D", DiminishingRule)
+
+
+def make_step_rule(objective, gamma: float,
+                   rho: Optional[float] = None) -> StepRule:
+    """Construct the step rule matching an objective (J uses the constant
+    rule — Lemma 4 shows the jointly-optimal step size is constant)."""
+    m = Objective.coerce(objective, _warn=False)
+    name = "C" if m is Objective.JOINT else m.value
+    factory = STEP_RULES[name]
+    if name == "C":
+        return factory(gamma)
+    return factory(gamma, rho)
+
+
+# ---------------------------------------------------------------------------
+# algorithm families: name -> varmap factory
+# ---------------------------------------------------------------------------
+# factory(N, with_extra, samples_per_worker) -> VarMap
+FamilyFactory = Callable[[int, bool, float], VarMap]
+
+FAMILIES: Dict[str, FamilyFactory] = {}
+
+
+def register_family(name: str, factory: FamilyFactory) -> None:
+    FAMILIES[str(name)] = factory
+
+
+register_family("genqsgd",
+                lambda N, we, spw: identity_varmap(N, with_extra=we))
+register_family("pm", lambda N, we, spw: pm_varmap(N, with_extra=we))
+register_family("fa",
+                lambda N, we, spw: fa_varmap(N, [float(spw)] * N,
+                                             with_extra=we))
+register_family("pr", lambda N, we, spw: pr_varmap(N, with_extra=we))
+
+
+def family_names() -> tuple:
+    return tuple(FAMILIES)
+
+
+def make_varmap(family: str, N: int, with_extra: bool,
+                samples_per_worker: float) -> VarMap:
+    try:
+        factory = FAMILIES[family]
+    except KeyError:
+        raise ValueError(f"unknown family {family!r}; registered: "
+                         f"{sorted(FAMILIES)}") from None
+    return factory(N, with_extra, samples_per_worker)

@@ -1,0 +1,197 @@
+"""Scenario: the declarative front door of the optimization framework.
+
+One object bundles everything the paper's closed loop needs — the edge
+system (cost model), the ML-problem constants, the budgets ``(T_max,
+C_max)``, the step-size rule, and the algorithm family — and exposes the
+loop as two calls:
+
+    plan   = scenario.optimize()          # GIA/CGP -> frozen Plan
+    report = scenario.run(plan, task)     # train -> RunReport vs predictions
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Union
+
+import numpy as np
+
+from ..core.cost import EdgeSystem, energy_cost, time_cost
+from ..core.convergence import MLProblemConstants
+from ..core.genqsgd import GenQSGD
+from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
+                               StepRule)
+from ..opt.gia import solve_param_opt
+from ..opt.problems import Objective, ParamOptProblem, VarMap
+from .plan import Plan, RunReport
+from .registries import FAMILIES, make_varmap
+from .tasks import MNISTTask
+
+__all__ = ["Scenario"]
+
+_RULE_FOR = {Objective.CONSTANT: ConstantRule,
+             Objective.EXPONENTIAL: ExponentialRule,
+             Objective.DIMINISHING: DiminishingRule}
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A federated-edge-learning scenario: system + problem + budgets +
+    algorithm.  Frozen; derive variants with ``dataclasses.replace``."""
+
+    system: EdgeSystem
+    consts: MLProblemConstants
+    T_max: float                          # time budget (s), constraint (20)
+    C_max: float                          # convergence-error budget, (21)
+    family: str = "genqsgd"               # registries.FAMILIES key
+    step: Optional[StepRule] = None       # None -> jointly optimized (m=J)
+    samples_per_worker: float = 6000.0    # I_n (FedAvg's epoch tie)
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown family {self.family!r}; registered: "
+                             f"{sorted(FAMILIES)}")
+        if self.consts.N != self.system.N:
+            raise ValueError(
+                f"consts describe N={self.consts.N} workers but the system "
+                f"has N={self.system.N}")
+
+    # ------------------------------------------------------------------
+    @property
+    def objective(self) -> Objective:
+        """The convergence-error measure m implied by the step rule."""
+        if self.step is None:
+            return Objective.JOINT
+        return Objective.coerce(self.step.name, _warn=False)
+
+    def _resolve(self, m) -> Objective:
+        m = self.objective if m is None else Objective.coerce(m, _warn=False)
+        if m is Objective.JOINT:
+            if self.step is not None:
+                raise ValueError(
+                    f"m=J jointly optimizes the step size; this Scenario "
+                    f"pins step={self.step!r} — drop it or pick its m")
+        else:
+            want = _RULE_FOR[m]
+            if not isinstance(self.step, want):
+                raise ValueError(
+                    f"objective {m.name} needs step={want.__name__}, "
+                    f"got {type(self.step).__name__ if self.step else None}")
+        return m
+
+    def problem(self, m=None, vmap: Optional[VarMap] = None) -> ParamOptProblem:
+        """The underlying :class:`ParamOptProblem` (escape hatch for direct
+        ``evaluate``/``feasible`` queries and fixed-parameter baselines)."""
+        m = self._resolve(m)
+        if vmap is None:
+            vmap = make_varmap(self.family, self.system.N,
+                               m in (Objective.EXPONENTIAL, Objective.JOINT),
+                               self.samples_per_worker)
+        gamma = None if self.step is None else float(self.step.gamma)
+        rho = getattr(self.step, "rho", None)
+        return ParamOptProblem(sys=self.system, consts=self.consts,
+                               T_max=self.T_max, C_max=self.C_max, m=m,
+                               gamma=gamma, rho=rho, vmap=vmap)
+
+    # ------------------------------------------------------------------
+    def optimize(self, m=None, z0=None, tol: float = 1e-4,
+                 max_iter: int = 60, verbose: bool = False) -> Plan:
+        """Solve the scenario's parameter-optimization problem (Algorithms
+        2-5) and freeze the solution into a :class:`Plan`."""
+        m = self._resolve(m)
+        prob = self.problem(m)
+        r = solve_param_opt(prob, z0=z0, tol=tol, max_iter=max_iter,
+                            verbose=verbose)
+        if m is Objective.JOINT:
+            step = ConstantRule(float(r.gamma))
+        else:
+            step = self.step
+        sys = self.system
+        return Plan(K0=int(r.K0), Kn=tuple(int(k) for k in r.Kn), B=int(r.B),
+                    step_rule=step, s0=sys.s0, sn=tuple(sys.sn), dim=sys.dim,
+                    q_dim=sys.q_dim, wire=sys.wire, objective=m,
+                    family=self.family, predicted_E=r.E, predicted_T=r.T,
+                    predicted_C=r.C, feasible=bool(r.feasible),
+                    converged=bool(r.converged))
+
+    # ------------------------------------------------------------------
+    def run(self, plan: Plan, task=None, backend: str = "reference",
+            seed: int = 0, max_rounds: Optional[int] = None,
+            eval_every: int = 0, wire: str = "f32",
+            log_every: int = 0) -> RunReport:
+        """Execute training with exactly the Plan's parameters.
+
+        backend="reference" runs Algorithm 1 single-process on a reference
+        task (default: the Sec.-VII MNIST-like task); backend="spmd" runs
+        the distributed runtime on an :class:`~repro.api.tasks.SpmdTask`,
+        moving the Plan's quantized levels over the ``wire`` transport.
+        """
+        if backend == "reference":
+            return self._run_reference(plan, task, seed, max_rounds,
+                                       eval_every)
+        if backend == "spmd":
+            return self._run_spmd(plan, task, seed, max_rounds, wire,
+                                  log_every)
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"expected 'reference' or 'spmd'")
+
+    def _report(self, plan: Plan, backend: str, rounds: int, model_dim: int,
+                wall: float, final_metrics: dict, history,
+                wire: Optional[str] = None) -> RunReport:
+        # wire=None prices at the Plan's wire (the reference backend has no
+        # transport); the spmd path passes the transport it actually used
+        comm = rounds * plan.round_bits(dim=model_dim, wire=wire)
+        return RunReport(
+            plan=plan, backend=backend, rounds=rounds, model_dim=model_dim,
+            wall_time_s=wall, comm_bits=comm,
+            measured_E=energy_cost(self.system, rounds, np.asarray(plan.Kn),
+                                   plan.B),
+            measured_T=time_cost(self.system, rounds, np.asarray(plan.Kn),
+                                 plan.B),
+            final_metrics=dict(final_metrics), history=tuple(history))
+
+    def _run_reference(self, plan, task, seed, max_rounds, eval_every):
+        import jax
+
+        task = MNISTTask() if task is None else task
+        cfg = plan.to_genqsgd_config(max_K0=max_rounds)
+        alg = GenQSGD(task.loss, task.sample, cfg)
+        data = task.make_data(plan.N)
+        p0 = task.init_params(jax.random.PRNGKey(seed))
+        model_dim = sum(int(np.prod(l.shape)) if l.shape else 1
+                        for l in jax.tree.leaves(p0))
+        eval_fn = task.metrics if eval_every else None
+        t0 = time.time()
+        pf, hist = alg.run(p0, data, jax.random.PRNGKey(seed + 1),
+                           eval_fn=eval_fn,
+                           eval_every=eval_every or max(1, cfg.K0))
+        wall = time.time() - t0
+        final = task.metrics(pf) if hasattr(task, "metrics") else {}
+        return self._report(plan, "reference", cfg.K0, model_dim, wall,
+                            final, hist)
+
+    def _run_spmd(self, plan, task, seed, max_rounds, wire, log_every):
+        import jax
+
+        from ..train.trainer import GenQSGDTrainer
+
+        if task is None:
+            raise ValueError("backend='spmd' needs an SpmdTask (model api, "
+                             "arch config, mesh, batches)")
+        fed = plan.to_fed_config(wire=wire)
+        trainer = GenQSGDTrainer(task.api, task.arch, fed, task.mesh,
+                                 step_rule=plan.step_rule,
+                                 checkpoint_dir=task.checkpoint_dir)
+        state = trainer.init(jax.random.PRNGKey(seed))
+        model_dim = sum(int(np.prod(l.shape)) if l.shape else 1
+                        for l in jax.tree.leaves(state.params))
+        rounds = plan.K0 if max_rounds is None else min(plan.K0, max_rounds)
+        t0 = time.time()
+        state = trainer.run(state, task.batches, jax.random.PRNGKey(seed + 1),
+                            n_rounds=rounds,
+                            log_every=log_every or max(1, rounds // 10),
+                            eval_fn=task.eval_fn)
+        wall = time.time() - t0
+        final = dict(state.history[-1]) if state.history else {}
+        return self._report(plan, "spmd", rounds, model_dim, wall, final,
+                            state.history, wire=wire)

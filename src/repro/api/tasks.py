@@ -1,0 +1,144 @@
+"""Training tasks for ``Scenario.run``.
+
+A *reference task* bundles everything the single-process reference runtime
+(Algorithm 1) needs:
+
+  dim                     model dimension (what ``EdgeSystem.dim`` should be)
+  init_params(key)        fresh model pytree
+  loss(params, batch)     scalar training loss
+  sample(worker_data, key, B)   one mini-batch from one worker's shard
+  make_data(N)            per-worker data pytree with leading axis N
+  metrics(params)         evaluation dict (used for history + final report)
+
+Provided: :class:`MNISTTask` (the paper's Sec.-VII 784-128-10 MLP on the
+synthetic MNIST-like set) and :class:`QuadraticTask` (a tiny linear
+regression for tests/smoke runs).  :class:`SpmdTask` carries the extra
+pieces the distributed runtime needs (model api, arch config, mesh, batch
+iterator).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.convergence import MLProblemConstants
+from ..data.federated import partition_iid, sample_minibatch
+from ..models import mlp
+
+__all__ = ["MNISTTask", "QuadraticTask", "SpmdTask"]
+
+
+class MNISTTask:
+    """The Sec.-VII task: two-layer MLP on the 60k-sample MNIST-like set."""
+
+    dim = mlp.PARAM_DIM
+
+    def __init__(self, n_train: int = 50000, seed: int = 0,
+                 eval_samples: int = 2048):
+        self.n_train = n_train
+        self.seed = seed
+        self.eval_samples = eval_samples
+        self._data = None
+        self._full = None
+
+    # -- data ----------------------------------------------------------
+    def _load(self):
+        if self._data is None:
+            from ..data.synthetic import mnist_like
+            X, y = mnist_like(seed=self.seed)
+            n = self.n_train
+            self._full = (X, y)
+            self._data = (X[:n], y[:n], jnp.asarray(X[n:]), jnp.asarray(y[n:]))
+        return self._data
+
+    def make_data(self, N: int):
+        Xtr, ytr, _, _ = self._load()
+        Xw, yw = partition_iid(Xtr, ytr, N)
+        return (jnp.stack([jnp.asarray(a) for a in Xw]),
+                jnp.stack([jnp.asarray(a) for a in yw]))
+
+    # -- model ---------------------------------------------------------
+    def init_params(self, key):
+        return mlp.init_params(key)
+
+    loss = staticmethod(mlp.loss)
+    sample = staticmethod(sample_minibatch)
+
+    def metrics(self, params) -> dict:
+        _, _, Xte, yte = self._load()
+        k = self.eval_samples
+        return {"eval_loss": float(mlp.loss(params, (Xte[:k], yte[:k]))),
+                "test_acc": mlp.accuracy(params, Xte, yte)}
+
+    # -- pre-training constants (Sec. IV-A) ----------------------------
+    def estimate_constants(self, N: int, key=None,
+                           n_iters: int = 300) -> MLProblemConstants:
+        """Probe (L, sigma, G, f_gap) by pre-training (Sec. IV-A) on the
+        full dataset — the same probe set the benchmarks have always used."""
+        self._load()
+        X, y = self._full
+        key = jax.random.PRNGKey(0) if key is None else key
+        d = mlp.estimate_constants(np.asarray(X), np.asarray(y), key,
+                                   n_iters=n_iters)
+        return MLProblemConstants(L=d["L"], sigma=d["sigma"], G=d["G"],
+                                  f_gap=d["f_gap"], N=N)
+
+
+class QuadraticTask:
+    """Noisy linear regression: params {"w": (dim,)}, closed-form optimum.
+
+    Small enough that a full optimized K0 executes in seconds — the task the
+    end-to-end Plan→RunReport tests drive.
+    """
+
+    def __init__(self, dim: int = 8, per_worker: int = 64,
+                 noise: float = 0.01, seed: int = 0):
+        self.dim = dim
+        self.per_worker = per_worker
+        self.noise = noise
+        self.seed = seed
+        self.true_w = jax.random.normal(jax.random.PRNGKey(seed), (dim,))
+
+    def make_data(self, N: int):
+        key = jax.random.PRNGKey(self.seed)
+        X = jax.random.normal(jax.random.fold_in(key, 1),
+                              (N, self.per_worker, self.dim))
+        T = X @ self.true_w + self.noise * jax.random.normal(
+            jax.random.fold_in(key, 2), (N, self.per_worker))
+        return (X, T)
+
+    def init_params(self, key):
+        del key
+        return {"w": jnp.zeros(self.dim)}
+
+    @staticmethod
+    def loss(params, batch):
+        X, t = batch
+        return ((X @ params["w"] - t) ** 2).mean()
+
+    @staticmethod
+    def sample(worker_data, key, B):
+        X, t = worker_data
+        idx = jax.random.randint(key, (B,), 0, X.shape[0])
+        return X[idx], t[idx]
+
+    def metrics(self, params) -> dict:
+        return {"err": float(jnp.linalg.norm(params["w"] - self.true_w))}
+
+
+@dataclasses.dataclass
+class SpmdTask:
+    """What ``Scenario.run(backend="spmd")`` needs beyond the Plan: a model
+    api (``init_params``/``loss_train``), its arch config, the device mesh,
+    and an iterator of round batches shaped (fl, K_max, B_local, ...)."""
+
+    api: object
+    arch: object                 # repro.configs.base.ArchConfig
+    mesh: object                 # jax Mesh with (fl, fsdp, tp) axes
+    batches: Iterator
+    eval_fn: Optional[Callable] = None
+    checkpoint_dir: Optional[str] = None

@@ -33,6 +33,7 @@ from ..kernels import qsgd as _K
 __all__ = [
     "qsgd_levels", "encode_jnp", "decode_jnp", "encode_pallas",
     "decode_apply_pallas", "encode_tensor", "decode_tensor",
+    "encode_bucketed", "decode_bucketed", "to_buckets",
     "tensor_norm_pallas", "default_interpret", "level_dtype",
 ]
 
@@ -131,18 +132,52 @@ def tensor_norm_pallas(y: jax.Array, interpret: Optional[bool] = None):
 # ---------------------------------------------------------------------------
 # functional per-tensor entry points (traced-s capable; None = identity)
 # ---------------------------------------------------------------------------
-def encode_tensor(y: jax.Array, s, u: jax.Array, backend: str = "jnp"):
-    """-> (levels int8, norm f32 scalar); passthrough (y, 1.0) for s=None.
+def to_buckets(flat: jax.Array, bucket: int) -> jax.Array:
+    """Zero-pad a 1-D array to a whole number of buckets -> (n_buckets, bucket)."""
+    nb = -(-flat.shape[0] // bucket)
+    pad = nb * bucket - flat.shape[0]
+    return jnp.pad(flat, (0, pad)).reshape(nb, bucket)
 
-    The int8 container bounds ``s`` at 127 — exactly the runtime's wire
-    constraint; use a :class:`~repro.compress.codec.QSGDCodec` for wider
-    static quantizers.
+
+def encode_bucketed(y: jax.Array, s, u: jax.Array, bucket: int):
+    """Per-bucket-norm encode (QSGD bucketing): -> (levels f32 shaped like y,
+    norms (n_buckets,)).  The ONE bucketed implementation — QSGDCodec and the
+    runtime-facing ``encode_tensor`` both delegate here; ``s`` may be traced.
+    """
+    y2 = to_buckets(y.reshape(-1).astype(jnp.float32), bucket)
+    u2 = to_buckets(u.reshape(-1).astype(jnp.float32), bucket)
+    lvl2, norms = jax.vmap(lambda yy, uu: encode_jnp(yy, s, uu))(y2, u2)
+    return lvl2.reshape(-1)[:y.size].reshape(y.shape), norms
+
+
+def decode_bucketed(levels: jax.Array, norm: jax.Array, s,
+                    dtype=jnp.float32, bucket: int = 1) -> jax.Array:
+    l2 = to_buckets(levels.reshape(-1).astype(jnp.float32), bucket)
+    v2 = jax.vmap(lambda ll, nn: decode_jnp(ll, nn, s))(l2, norm.reshape(-1))
+    return (v2.reshape(-1)[:levels.size].reshape(levels.shape).astype(dtype))
+
+
+def encode_tensor(y: jax.Array, s, u: jax.Array, backend: str = "jnp",
+                  bucket: Optional[int] = None):
+    """-> (levels int8, norm); passthrough (y, 1.0) for s=None.
+
+    ``norm`` is an f32 scalar, or (n_buckets,) when ``bucket`` is set
+    (per-bucket-norm quantization — the same bucketing
+    :class:`~repro.compress.codec.QSGDCodec` implements and
+    ``EdgeSystem(q_dim=...)`` prices).  The int8 container bounds ``s`` at
+    127 — exactly the runtime's wire constraint; use a
+    :class:`~repro.compress.codec.QSGDCodec` for wider static quantizers.
     """
     if s is None:
         return y, jnp.float32(1.0)
     if isinstance(s, int) and s > 127:
         raise ValueError(f"encode_tensor's int8 container carries s <= 127, "
                          f"got {s}; use QSGDCodec for wider quantizers")
+    if bucket is not None:
+        if backend == "pallas":
+            raise ValueError("the Pallas backend computes whole-tensor norms")
+        lvl, norms = encode_bucketed(y, s, u, bucket)
+        return lvl.astype(jnp.int8), norms
     if backend == "pallas":
         return encode_pallas(y, int(s), u)
     lvl, norm = encode_jnp(y, s, u)
@@ -150,7 +185,9 @@ def encode_tensor(y: jax.Array, s, u: jax.Array, backend: str = "jnp"):
 
 
 def decode_tensor(levels: jax.Array, norm: jax.Array, s,
-                  dtype=jnp.float32) -> jax.Array:
+                  dtype=jnp.float32, bucket: Optional[int] = None) -> jax.Array:
     if s is None:
         return levels.astype(dtype)
+    if bucket is not None:
+        return decode_bucketed(levels, norm, s, dtype, bucket)
     return decode_jnp(levels, norm, s, dtype)

@@ -21,6 +21,7 @@ Instances:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional
 
@@ -157,33 +158,21 @@ class QSGDCodec(Codec):
         return B.level_dtype(self.s_levels)
 
     # -- encode / decode -------------------------------------------------
-    def _bucketed(self, flat: jax.Array):
-        nb = -(-flat.shape[0] // self.bucket)
-        pad = nb * self.bucket - flat.shape[0]
-        return jnp.pad(flat, (0, pad)).reshape(nb, self.bucket)
-
     def encode(self, y: jax.Array, u: jax.Array):
         """-> (levels shaped like y, norm) — norm is a scalar, or (n_buckets,)
         when ``bucket`` is set."""
         if self.backend == "pallas":
             return B.encode_pallas(y, self.s_levels, u, self.interpret)
         if self.bucket is not None:
-            y2 = self._bucketed(y.reshape(-1).astype(jnp.float32))
-            u2 = self._bucketed(u.reshape(-1).astype(jnp.float32))
-            lvl2, norms = jax.vmap(
-                lambda yy, uu: B.encode_jnp(yy, self.s_levels, uu))(y2, u2)
-            lvl = lvl2.reshape(-1)[:y.size].reshape(y.shape)
+            lvl, norms = B.encode_bucketed(y, self.s_levels, u, self.bucket)
             return lvl.astype(self.level_dtype), norms
         lvl, norm = B.encode_jnp(y, self.s_levels, u)
         return lvl.astype(self.level_dtype), norm
 
     def decode(self, levels: jax.Array, norm: jax.Array, dtype=jnp.float32):
         if self.bucket is not None and norm.ndim == 1:
-            l2 = self._bucketed(levels.reshape(-1).astype(jnp.float32))
-            v2 = jax.vmap(
-                lambda ll, nn: B.decode_jnp(ll, nn, self.s_levels))(l2, norm)
-            return v2.reshape(-1)[:levels.size].reshape(levels.shape) \
-                     .astype(dtype)
+            return B.decode_bucketed(levels, norm, self.s_levels, dtype,
+                                     self.bucket)
         return B.decode_jnp(levels, norm, self.s_levels, dtype)
 
     def decode_apply(self, x: jax.Array, levels: jax.Array, norm: jax.Array,
@@ -205,11 +194,27 @@ class QSGDCodec(Codec):
         return variance_bound(self.s_levels, eff)
 
 
-def make_codec(s: Optional[int], wire: str = "packed",
-               bucket: Optional[int] = None, backend: str = "jnp",
-               interpret: Optional[bool] = None) -> Codec:
-    """The one constructor: s=None -> IdentityCodec, else QSGDCodec."""
+@functools.lru_cache(maxsize=1024)
+def _make_codec_cached(s: Optional[int], wire: str, bucket: Optional[int],
+                       backend: str, interpret: Optional[bool]) -> Codec:
     if s is None:
         return IdentityCodec(wire=wire)
     return QSGDCodec(wire=wire, s_levels=int(s), bucket=bucket,
                      backend=backend, interpret=interpret)
+
+
+def make_codec(s: Optional[int], wire: str = "packed",
+               bucket: Optional[int] = None, backend: str = "jnp",
+               interpret: Optional[bool] = None) -> Codec:
+    """The one constructor: s=None -> IdentityCodec, else QSGDCodec.
+
+    Codecs are frozen/stateless, so instances are memoized — the cost layer
+    reconstructs them inside the GIA inner loop and must not pay object
+    churn there.
+    """
+    try:
+        hash((s, wire, bucket, backend, interpret))
+    except TypeError:  # unhashable argument: build fresh, uncached
+        return _make_codec_cached.__wrapped__(s, wire, bucket, backend,
+                                              interpret)
+    return _make_codec_cached(s, wire, bucket, backend, interpret)

@@ -18,6 +18,7 @@ The same closed forms serve two roles:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence
 
 import numpy as np
@@ -65,50 +66,54 @@ class EdgeSystem:
         return int(self.Fn.shape[0])
 
     # --- quantization-derived quantities (delegated to repro.compress so
-    # the optimizer provably prices the same bytes the runtime sends) ----
+    # the optimizer provably prices the same bytes the runtime sends).
+    # All derived quantities are memoized (functools.cached_property writes
+    # straight into __dict__, which frozen dataclasses permit): the GIA inner
+    # loop reads q_pairs / comm_time on every surrogate build, and rebuilding
+    # codec objects there is pure overhead.
     def codec(self, s: Optional[int]):
         return make_codec(s, wire=self.wire, bucket=self.q_dim)
 
-    @property
+    @functools.cached_property
     def M_s0(self) -> float:
         return self.codec(self.s0).wire_bits(self.dim)
 
-    @property
+    @functools.cached_property
     def M_sn(self) -> np.ndarray:
         return np.array([self.codec(s).wire_bits(self.dim) for s in self.sn])
 
-    @property
+    @functools.cached_property
     def q_s0(self) -> float:
         return self.codec(self.s0).variance_bound(self.dim)
 
-    @property
+    @functools.cached_property
     def q_sn(self) -> np.ndarray:
         return np.array([self.codec(s).variance_bound(self.dim)
                          for s in self.sn])
 
-    @property
+    @functools.cached_property
     def q_pairs(self) -> np.ndarray:
         """q_{s0,sn} per worker (Theorem 1)."""
         return np.array([q_pair(self.q_s0, q) for q in self.q_sn])
 
     # --- per-global-iteration cost pieces -------------------------------
-    @property
+    @functools.cached_property
     def comp_time_coeff(self) -> np.ndarray:
         """C_n / F_n — per-sample-per-local-iteration compute time."""
         return self.Cn / self.Fn
 
-    @property
+    @functools.cached_property
     def comm_time(self) -> float:
         """max_n M_{s_n}/r_n + M_{s_0}/r_0 + C_0/F_0 (the K/B-independent part)."""
         return float(np.max(self.M_sn / self.rn) + self.M_s0 / self.r0
                      + self.C0 / self.F0)
 
-    @property
+    @functools.cached_property
     def comp_energy_coeff(self) -> np.ndarray:
         """alpha_n C_n F_n^2 — per-sample-per-local-iteration compute energy."""
         return self.alphan * self.Cn * self.Fn**2
 
-    @property
+    @functools.cached_property
     def const_energy(self) -> float:
         """alpha_0 C_0 F_0^2 + sum_{n in N̄} p_n M_{s_n}/r_n."""
         return float(self.alpha0 * self.C0 * self.F0**2

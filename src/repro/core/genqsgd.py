@@ -64,6 +64,7 @@ class GenQSGDConfig:
     step_rule: StepRule          # Γ generator
     s0: Optional[int] = None     # server quantizer (None = s = ∞)
     sn: Optional[Sequence[Optional[int]]] = None  # per-worker quantizers
+    bucket: Optional[int] = None  # per-bucket-norm quantization (q_dim)
 
     @property
     def N(self) -> int:
@@ -140,7 +141,7 @@ class GenQSGD:
             d = (flatten_like(xw) - flat_hat) / gamma
             return codec.quantize_dequantize(d, wkey)
 
-        codecs = [make_codec(s) for s in cfg.worker_s()]
+        codecs = [make_codec(s, bucket=cfg.bucket) for s in cfg.worker_s()]
         if len(set(codecs)) == 1:
             deltas = jax.vmap(
                 lambda xw, wk: worker_delta(xw, wk, codecs[0]))(
@@ -152,7 +153,8 @@ class GenQSGD:
         delta_hat = deltas.mean(axis=0)
 
         # (3): server quantizes the averaged update and everyone applies it.
-        delta_q = make_codec(cfg.s0).quantize_dequantize(delta_hat, skey)
+        delta_q = make_codec(cfg.s0, bucket=cfg.bucket) \
+            .quantize_dequantize(delta_hat, skey)
         new_flat = flat_hat + gamma * delta_q
         x_new = unflatten_like(new_flat, x_hat)
         metrics = {

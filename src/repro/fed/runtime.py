@@ -6,7 +6,8 @@ One *round* = the body of Algorithm 1's global iteration:
      paper's "virtual" masked updates, eqs. (6)-(8)),
   3. encodes its normalized model delta (x_n - x̂)/γ per tensor with its
      codec (Assumption 1 holds per tensor, hence for the concatenation with
-     q = max_t q_t),
+     q = max_t q_t) — or per bucket of ``FedConfig.bucket`` coordinates
+     (QSGD bucketing, matching what ``EdgeSystem(q_dim=...)`` prices),
   4. aggregation: the server mean of quantized deltas (5), re-quantized with
      the server codec and applied by every node (3).
 
@@ -75,6 +76,8 @@ class FedConfig:
     sn: object = None                    # worker quantizer: int (homogeneous),
                                          # tuple of per-worker ints, or None
     wire: str = "f32"                    # one of compress.RUNTIME_WIRES
+    bucket: object = None                # per-bucket-norm quantization: bucket
+                                         # size (EdgeSystem's q_dim), or None
     aux_weight: float = 0.01
     microbatch: int = 1                  # grad-accumulation splits per local step
 
@@ -82,6 +85,8 @@ class FedConfig:
         if self.wire not in RUNTIME_WIRES:
             raise ValueError(f"wire must be one of {RUNTIME_WIRES}, "
                              f"got {self.wire!r}")
+        if self.bucket is not None and int(self.bucket) <= 0:
+            raise ValueError(f"bucket must be positive, got {self.bucket}")
         cap = wire_max_s(self.wire)
         for s in self.sn_tuple() + (self.s0,):
             if s is not None and s > cap:
@@ -115,14 +120,15 @@ class FedConfig:
 
     def codecs(self) -> tuple:
         """Per-worker codec views (cost accounting / introspection)."""
-        return tuple(make_codec(s, wire=self.wire) for s in self.sn_tuple())
+        return tuple(make_codec(s, wire=self.wire, bucket=self.bucket)
+                     for s in self.sn_tuple())
 
     def server_codec(self):
         """An exact server multicast (s0=None) is raw f32 regardless of the
         worker wire — the packing wire can't carry it, but the runtime never
         packs the server update anyway."""
         wire = self.wire if self.s0 is not None else "f32"
-        return make_codec(self.s0, wire=wire)
+        return make_codec(self.s0, wire=wire, bucket=self.bucket)
 
 
 # ---------------------------------------------------------------------------
@@ -235,52 +241,73 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
     sn_arr = (None if fed.sn_exact
               else jnp.asarray([s or 0 for s in fed.sn_tuple()], jnp.float32))
 
+    bucket = None if fed.bucket is None else int(fed.bucket)
+
     def worker_quantize(delta, key, s_w):
         leaves, treedef = jax.tree.flatten(delta)
         lvls, norms = [], []
         for i, leaf in enumerate(leaves):
             u = uniform_like(leaf, _seed_from(key, i))
             lvl, nrm = encode_tensor(leaf, None if sn_arr is None else s_w,
-                                     u)
+                                     u, bucket=bucket)
             lvls.append(lvl)
             norms.append(nrm)
         return (jax.tree.unflatten(treedef, lvls),
                 jax.tree.unflatten(treedef, norms))
 
     # -- aggregation ---------------------------------------------------------
-    def agg_f32(levels_fl, norms_fl):
-        """Paper-faithful: dequantize then mean over fl (f32 all-reduce)."""
-        deq = jax.tree.map(
+    def _decode_fl(levels_fl, norms_fl):
+        """Per-worker dequantize of (fl, ...) stacked leaves — plain GSPMD
+        ops on logical-global arrays (bucket boundaries index *global*
+        coordinates, so bucketed decode must not run on shard-local blocks)."""
+        ss = jnp.zeros(fed.n_workers) if sn_arr is None else sn_arr
+        return jax.tree.map(
             lambda l, n: jax.vmap(
                 lambda li, ni, si: decode_tensor(
-                    li, ni, None if sn_arr is None else si))(
-                l, n, jnp.zeros(fed.n_workers) if sn_arr is None else sn_arr),
+                    li, ni, None if sn_arr is None else si, bucket=bucket))(
+                l, n, ss),
             levels_fl, norms_fl)
-        return jax.tree.map(lambda d: d.mean(axis=0), deq)
+
+    def agg_f32(levels_fl, norms_fl):
+        """Paper-faithful: dequantize then mean over fl (f32 all-reduce)."""
+        return jax.tree.map(lambda d: d.mean(axis=0),
+                            _decode_fl(levels_fl, norms_fl))
 
     def _agg_rs_ag_local(levels_loc, norms_loc):
-        """Runs inside shard_map: dequantize locally, reduce-scatter the f32
-        mean over fl (each member owns a 1/fl shard), then all-gather —
-        ~2x fewer wire bytes than a ring all-reduce of the same payload."""
-        n = fed.n_workers
+        """Runs inside shard_map: dequantize locally (whole-tensor norms
+        only — see :func:`_decode_fl` for why bucketed decode can't run on
+        shard-local blocks), reduce-scatter the f32 mean over fl (each
+        member owns a 1/fl shard), then all-gather — ~2x fewer wire bytes
+        than a ring all-reduce of the same payload."""
         my_s = (None if sn_arr is None
                 else sn_arr[jax.lax.axis_index("fl")])
+        deq = jax.tree.map(
+            lambda lvl, nrm: decode_tensor(lvl, nrm[0], my_s),
+            levels_loc, norms_loc)
+        return _mean_rs_ag_local(deq)
 
-        def per_leaf(lvl, nrm):
-            d = decode_tensor(lvl[0], nrm[0], my_s) / n
+    def _mean_rs_ag_local(deq_loc):
+        """Runs inside shard_map: mean of per-worker f32 deltas over fl via
+        reduce-scatter + all-gather.  ``deq_loc`` leaves are the local
+        (1, ...) fl blocks of already-decoded deltas."""
+        n = fed.n_workers
+
+        def per_leaf(d):
+            d = d[0] / n
             if d.size % n:  # ragged leaf: fall back to psum
                 return jax.lax.psum(d, "fl")
             own = jax.lax.psum_scatter(d.reshape(n, -1), "fl",
                                        scatter_dimension=0, tiled=False)
             return jax.lax.all_gather(own, "fl").reshape(d.shape)
 
-        return jax.tree.map(per_leaf, levels_loc, norms_loc)
+        return jax.tree.map(per_leaf, deq_loc)
 
     def _agg_levels_local(levels_loc, norms_loc, pack_nibbles=False):
         """Runs inside shard_map: all-gather the level payload over fl,
-        dequantize and average locally.  With ``pack_nibbles`` two levels
-        travel per byte (half the int8 wire bytes); packing is lossless for
-        s <= 7, so the result stays bit-identical to the f32 transport."""
+        dequantize and average locally (whole-tensor norms only).  With
+        ``pack_nibbles`` two levels travel per byte (half the int8 wire
+        bytes); packing is lossless for s <= 7, so the result stays
+        bit-identical to the f32 transport."""
         def per_leaf(lvl, nrm):
             # lvl: (1, ...) local block; gather -> (fl, ...)
             payload = pack_int4(lvl[0]) if pack_nibbles else lvl[0]
@@ -302,14 +329,45 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
     def _agg_int4_local(levels_loc, norms_loc):
         return _agg_levels_local(levels_loc, norms_loc, pack_nibbles=True)
 
+    def _gather_levels_local(levels_loc, pack_nibbles=False):
+        """Runs inside shard_map: move ONLY the compact level payload over fl
+        (raw int8 or packed int4 on the wire) and return the gathered
+        (fl, ...) levels.  Used by the bucketed transports, whose dequantize
+        runs outside the shard_map (see :func:`_decode_fl`)."""
+        def per_leaf(lvl):
+            payload = pack_int4(lvl[0]) if pack_nibbles else lvl[0]
+            g = jax.lax.all_gather(payload, "fl")         # int8 on the wire
+            if pack_nibbles:
+                g = jax.vmap(lambda pi: unpack_int4(pi, lvl[0].size)
+                             .reshape(lvl[0].shape))(g)
+            return g
+        return jax.tree.map(per_leaf, levels_loc)
+
+    def _pspecs(x_hat_example):
+        return SH.param_specs(x_hat_example, mesh, fsdp_weights,
+                              moe_tp_only=moe_tp_only)
+
     def make_agg_sm(x_hat_example, body):
-        pspecs = SH.param_specs(x_hat_example, mesh, fsdp_weights,
-                               moe_tp_only=moe_tp_only)
+        pspecs = _pspecs(x_hat_example)
         lv_specs = SH.with_fl(pspecs)
         nm_specs = jax.tree.map(lambda _: P("fl"), pspecs,
                                 is_leaf=lambda x: isinstance(x, P))
         return shard_map(body, mesh=mesh,
                          in_specs=(lv_specs, nm_specs), out_specs=pspecs)
+
+    def make_gather_sm(x_hat_example, pack_nibbles):
+        pspecs = _pspecs(x_hat_example)
+        out_specs = jax.tree.map(lambda s: P(None, *s), pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        return shard_map(
+            functools.partial(_gather_levels_local,
+                              pack_nibbles=pack_nibbles),
+            mesh=mesh, in_specs=(SH.with_fl(pspecs),), out_specs=out_specs)
+
+    def make_mean_sm(x_hat_example):
+        pspecs = _pspecs(x_hat_example)
+        return shard_map(_mean_rs_ag_local, mesh=mesh,
+                         in_specs=(SH.with_fl(pspecs),), out_specs=pspecs)
 
     # -- the round ----------------------------------------------------------
     def genqsgd_round(x_hat, batch, key, gamma):
@@ -326,25 +384,33 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         levels_fl, norms_fl = jax.vmap(worker_quantize)(deltas, wkeys,
                                                         s_dummy)
 
-        if fed.wire == "int8":
-            delta_hat = make_agg_sm(x_hat, _agg_int8_local)(levels_fl,
-                                                            norms_fl)
-        elif fed.wire == "int4":
-            delta_hat = make_agg_sm(x_hat, _agg_int4_local)(levels_fl,
-                                                            norms_fl)
-        elif fed.wire == "rs_ag":
-            delta_hat = make_agg_sm(x_hat, _agg_rs_ag_local)(levels_fl,
-                                                             norms_fl)
-        else:
+        if fed.wire == "f32":
             delta_hat = agg_f32(levels_fl, norms_fl)
+        elif bucket is None:
+            body = {"int8": _agg_int8_local, "int4": _agg_int4_local,
+                    "rs_ag": _agg_rs_ag_local}[fed.wire]
+            delta_hat = make_agg_sm(x_hat, body)(levels_fl, norms_fl)
+        elif fed.wire in ("int8", "int4"):
+            # bucketed level wires: compact payload moves inside shard_map,
+            # dequantize outside on logical-global arrays (no further
+            # fl-axis traffic — the gathered levels are fl-replicated).
+            # Unlike the per-tensor paths, cross-wire agreement here is
+            # ulp-level, not bitwise: the decode sits in a different fusion
+            # context, so XLA's FMA choices can flip a few stochastic
+            # roundings upstream.
+            g = make_gather_sm(x_hat, fed.wire == "int4")(levels_fl)
+            delta_hat = jax.tree.map(lambda d: d.mean(axis=0),
+                                     _decode_fl(g, norms_fl))
+        else:  # bucketed rs_ag: decode per worker, then rs+ag the f32 mean
+            delta_hat = make_mean_sm(x_hat)(_decode_fl(levels_fl, norms_fl))
 
         # (3): server quantization of the averaged update, applied everywhere
         leaves, treedef = jax.tree.flatten(delta_hat)
         new_leaves = []
         for i, (leaf, xh) in enumerate(zip(leaves, jax.tree.leaves(x_hat))):
             u = uniform_like(leaf, _seed_from(skey, 1000 + i))
-            lvl, nrm = encode_tensor(leaf, fed.s0, u)
-            dq = decode_tensor(lvl, nrm, fed.s0)
+            lvl, nrm = encode_tensor(leaf, fed.s0, u, bucket=bucket)
+            dq = decode_tensor(lvl, nrm, fed.s0, bucket=bucket)
             new_leaves.append((xh.astype(jnp.float32)
                                + gamma * dq).astype(xh.dtype))
         x_new = jax.tree.unflatten(treedef, new_leaves)

@@ -2,6 +2,6 @@
 from .posy import Posy, const, var, monomial
 from .gp import GP, GPResult, solve_gp
 from .condense import amgm_monomial, ratio_to_posy
-from .problems import (ParamOptProblem, VarMap, identity_varmap, pm_varmap,
-                       fa_varmap, pr_varmap)
+from .problems import (Objective, ParamOptProblem, VarMap, identity_varmap,
+                       pm_varmap, fa_varmap, pr_varmap)
 from .gia import GIAResult, solve_param_opt

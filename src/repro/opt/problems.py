@@ -13,7 +13,9 @@ the same constructors through a ``VarMap`` that pins or ties variables:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import enum
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -23,8 +25,54 @@ from .condense import amgm_monomial, ratio_to_posy, taylor_logx, taylor_xlog1x
 from .gp import GP
 from .posy import Posy, const, var
 
-__all__ = ["ParamOptProblem", "VarMap", "identity_varmap", "pm_varmap",
-           "fa_varmap", "pr_varmap"]
+__all__ = ["Objective", "ParamOptProblem", "VarMap", "identity_varmap",
+           "pm_varmap", "fa_varmap", "pr_varmap"]
+
+
+class Objective(str, enum.Enum):
+    """The paper's convergence-error measure m — which Problem is solved.
+
+    A ``str`` subclass so member values compare equal to the historical
+    one-letter codes (``Objective.CONSTANT == "C"``); the rest of the
+    optimizer keeps matching on the letters.
+    """
+
+    CONSTANT = "C"        # Problem 3: fixed constant step size (eq. 10)
+    EXPONENTIAL = "E"     # Problem 5: exponential step-size rule (eq. 12)
+    DIMINISHING = "D"     # Problem 7: diminishing step-size rule (eq. 15)
+    JOINT = "J"           # Problem 11: jointly optimized (constant) step size
+
+    @classmethod
+    def coerce(cls, m: Union["Objective", str],
+               _warn: bool = True) -> "Objective":
+        """Accept an Objective or a legacy "C"|"E"|"D"|"J" string.
+
+        Bare strings are the deprecated spelling; they keep working but
+        warn once per call site.
+        """
+        if isinstance(m, cls):
+            return m
+        try:
+            out = cls(m)
+        except ValueError:
+            raise ValueError(
+                f"unknown objective {m!r}; expected one of "
+                f"{[o.value for o in cls]} or a repro.api.Objective") from None
+        if _warn:
+            # caller -> generated __init__ -> __post_init__ -> coerce
+            warnings.warn(
+                f"stringly-typed m={m!r} is deprecated; use "
+                f"repro.api.Objective.{out.name}", DeprecationWarning,
+                stacklevel=4)
+        return out
+
+    @property
+    def needs_rho(self) -> bool:
+        return self in (Objective.EXPONENTIAL, Objective.DIMINISHING)
+
+    @property
+    def needs_gamma(self) -> bool:
+        return self is not Objective.JOINT
 
 
 # ---------------------------------------------------------------------------
@@ -125,12 +173,13 @@ class ParamOptProblem:
     consts: MLProblemConstants
     T_max: float
     C_max: float
-    m: str                               # "C" | "E" | "D" | "J"
+    m: Union[Objective, str]             # Objective (or legacy "C"|"E"|"D"|"J")
     gamma: Optional[float] = None        # step size (m in C/E/D)
     rho: Optional[float] = None          # rho_E or rho_D
     vmap: Optional[VarMap] = None
 
     def __post_init__(self):
+        self.m = Objective.coerce(self.m)
         if self.vmap is None:
             self.vmap = identity_varmap(self.sys.N,
                                         with_extra=self.m in ("E", "J"))

@@ -60,6 +60,25 @@ _SCRIPT = textwrap.dedent("""
         assert np.isfinite(float(m["loss"])), wire
         outs4[wire] = np.asarray(jax.tree.leaves(x_new)[0])
     assert np.array_equal(outs4["f32"], outs4["int4"])
+    # per-bucket norms (FedConfig.bucket): the compact payload still rides
+    # the level transport; cross-wire agreement is ulp-level (the decode
+    # sits in a different fusion context), not bitwise.
+    outsb = {}
+    for wire in ("f32", "int8"):
+        fed = FedConfig(n_workers=FL, Kn=(1, 2), s0=64, sn=(16, 127),
+                        wire=wire, bucket=256)
+        rnd = make_round_fn(api, cfg, fed, mesh)
+        f = jax.jit(rnd, in_shardings=(pshard, bshard, None, None),
+                    out_shardings=(pshard, None))
+        x_new, m = f(pp, bb, jax.random.PRNGKey(1), jnp.float32(0.05))
+        assert np.isfinite(float(m["loss"])), ("bucket", wire)
+        txt = f.lower(pp, bb, jax.random.PRNGKey(1),
+                      jnp.float32(0.05)).compile().as_text()
+        outsb[wire] = (np.asarray(jax.tree.leaves(x_new)[0]), txt)
+    assert np.allclose(outsb["f32"][0], outsb["int8"][0], atol=1e-6, rtol=0)
+    assert len(re.findall(r"s8\\[[^\\]]*\\][^\\n]*all-gather",
+                          outsb["int8"][1])) > 0
+    assert not np.array_equal(outsb["f32"][0], outs["f32"][0])  # bucketing bites
     print("DISTRIBUTED_OK")
 """)
 

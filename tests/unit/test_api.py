@@ -1,0 +1,234 @@
+"""repro.api facade: Scenario -> Plan -> RunReport.
+
+Covers the ISSUE-2 acceptance bar: z_init feasibility and Plan round-tripping
+over every (objective m, family varmap) combination, config derivation with
+cross-validation, and the end-to-end closed loop whose measured comm-bits
+equal the Plan-predicted K0 * (sum_n M_{s_n} + M_{s_0}) exactly.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (ConstantRule, DiminishingRule, EdgeSystem,
+                       ExponentialRule, MLProblemConstants, Objective, Plan,
+                       QuadraticTask, Scenario, family_names, make_step_rule)
+from repro.opt import ParamOptProblem
+from repro.opt.gia import _extract
+
+CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=4)
+
+STEPS = {
+    Objective.CONSTANT: ConstantRule(0.01),
+    Objective.EXPONENTIAL: ExponentialRule(0.02, 0.9995),
+    Objective.DIMINISHING: DiminishingRule(0.02, 600.0),
+    Objective.JOINT: None,
+}
+
+# problem feasibility at the (T_max=1e5, C_max=0.25) operating point with
+# the Sec.-VII N=4 system: FedAvg's tied K_n = l*I_n/B cannot meet the
+# budgets (the paper's Sec.-VII claim), and PR-SGD's B=1 starves the
+# exponential rule.
+INFEASIBLE = {("fa", m) for m in Objective} | {("pr", Objective.EXPONENTIAL)}
+
+
+def _scenario(family, m, dim=1024, N=4):
+    sys_ = EdgeSystem.paper_sec_vii(dim=dim, N=N)
+    consts = dataclasses.replace(CONSTS, N=N)
+    return Scenario(system=sys_, consts=consts, T_max=1e5, C_max=0.25,
+                    family=family, step=STEPS[m])
+
+
+# ---------------------------------------------------------------------------
+# z_init feasibility + optimized-Plan round trip, full (m, family) grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", family_names())
+@pytest.mark.parametrize("m", list(Objective))
+def test_z_init_and_plan_feasibility_grid(family, m):
+    scn = _scenario(family, m)
+    prob = scn.problem()
+    z = prob.z_init()
+    assert z.shape == (prob.vmap.n,) and np.all(np.isfinite(z))
+    K0, Kn, B, extra = _extract(prob, z)
+    init_feasible = prob.feasible(
+        K0, Kn, B, extra if m is Objective.JOINT else None)
+    if (family, m) not in INFEASIBLE and m is not Objective.JOINT:
+        # Algorithms 2-4 line 1: z_init must deliver a feasible start
+        # wherever the original problem is feasible (m=J's grid search may
+        # miss and rely on the solver's phase-I recovery).
+        assert init_feasible
+
+    plan = scn.optimize()
+    # the GIAResult feasibility flag must agree with the true constraint
+    # check at the Plan's integer point — the core round-trip property
+    assert plan.feasible == prob.feasible(
+        plan.K0, np.asarray(plan.Kn), plan.B,
+        plan.gamma if m is Objective.JOINT else None)
+    if (family, m) in INFEASIBLE:
+        assert not plan.feasible
+    else:
+        assert plan.feasible
+        assert plan.predicted_C <= scn.C_max * (1 + 1e-6)
+        assert plan.predicted_T <= scn.T_max * (1 + 1e-6)
+    assert plan.objective is m and plan.family == family
+
+    # Plan -> GenQSGDConfig carries every parameter through unchanged
+    cfg = plan.to_genqsgd_config()
+    assert (cfg.K0, cfg.Kn, cfg.B) == (plan.K0, plan.Kn, plan.B)
+    assert cfg.s0 == plan.s0 and tuple(cfg.sn) == plan.sn
+    assert cfg.step_rule == plan.step_rule
+    if m is Objective.JOINT:
+        assert isinstance(plan.step_rule, ConstantRule)
+        assert plan.gamma <= 1.0 / CONSTS.L * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# cross-validation: inconsistent (s, wire) pairs are rejected
+# ---------------------------------------------------------------------------
+def test_plan_fed_config_rejects_inconsistent_wire():
+    plan = _scenario("genqsgd", Objective.CONSTANT).optimize(max_iter=5)
+    assert plan.s0 == 2**14            # Sec.-VII server quantizer
+    for wire in ("f32", "int8", "int4", "rs_ag"):
+        with pytest.raises(ValueError, match="cannot ride"):
+            plan.to_fed_config(wire=wire)
+    with pytest.raises(ValueError):
+        plan.to_fed_config(wire="carrier_pigeon")
+
+
+def test_plan_fed_config_roundtrip_small_s():
+    p = Plan.manual(K0=10, Kn=(1, 2), B=4, step_rule=ConstantRule(0.05),
+                    s0=64, sn=(16, 127), q_dim=256)
+    fed = p.to_fed_config(wire="int8")
+    assert fed.n_workers == p.N == 2
+    assert fed.Kn == p.Kn and fed.s0 == 64 and fed.sn_tuple() == (16, 127)
+    assert fed.bucket == 256
+    with pytest.raises(ValueError, match="cannot ride"):
+        p.to_fed_config(wire="int4")   # s=127 > int4's cap of 7
+    # mixed exact/quantized workers rejected at FedConfig validation
+    p2 = Plan.manual(K0=1, Kn=(1, 1), B=1, step_rule=ConstantRule(0.1),
+                     s0=7, sn=(7, None))
+    with pytest.raises(ValueError, match="mixed exact"):
+        p2.to_fed_config(wire="int8")
+
+
+def test_plan_round_bits_mirrors_runtime_pricing():
+    """An exact server multicast (s0=None) rides raw f32 on every transport
+    — round_bits must price it the way FedConfig.server_codec sends it."""
+    from repro.train.trainer import round_comm_bits
+    p = Plan.manual(K0=2, Kn=(1, 1), B=1, step_rule=ConstantRule(0.1),
+                    s0=None, sn=(7, 7), dim=128)
+    for wire in ("f32", "int8", "int4", "rs_ag"):
+        fed = p.to_fed_config(wire=wire)
+        assert p.round_bits(wire=wire) == round_comm_bits(fed, 128), wire
+
+
+def test_plan_defaults_and_custom_rule():
+    p = Plan(K0=1, Kn=(1, 2), B=1, step_rule=ConstantRule(0.1))
+    assert p.sn == (None, None)          # default: exact communication
+
+    @dataclasses.dataclass(frozen=True)
+    class WarmupRule:
+        gamma: float
+        name = "W"
+
+        def sequence(self, n):
+            return np.full(n, self.gamma)
+
+    p2 = Plan.manual(K0=1, Kn=(1,), B=1, step_rule=WarmupRule(0.1))
+    assert p2.objective is Objective.CONSTANT
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="sn has"):
+        Plan(K0=1, Kn=(1, 1), B=1, step_rule=ConstantRule(0.1), sn=(7,))
+    with pytest.raises(ValueError, match=">= 1"):
+        Plan.manual(K0=0, Kn=(1,), B=1, step_rule=ConstantRule(0.1))
+    p = Plan.manual(K0=3, Kn=(1, 2), B=2, step_rule=ConstantRule(0.1),
+                    s0=8, sn=4, dim=100)
+    assert p.sn == (4, 4)
+    assert np.isnan(p.predicted_E)
+    # bit accounting matches the codec table: 2 uploads at s=4 + multicast
+    from repro.compress import make_codec
+    per_round = 2 * make_codec(4).wire_bits(100) + make_codec(8).wire_bits(100)
+    assert p.round_bits() == per_round
+    assert p.predicted_comm_bits == 3 * per_round
+
+
+# ---------------------------------------------------------------------------
+# scenario validation + registries
+# ---------------------------------------------------------------------------
+def test_scenario_validation():
+    sys_ = EdgeSystem.paper_sec_vii(dim=64, N=4)
+    with pytest.raises(ValueError, match="unknown family"):
+        Scenario(system=sys_, consts=CONSTS, T_max=1e5, C_max=0.25,
+                 family="sgd")
+    with pytest.raises(ValueError, match="N=10"):
+        Scenario(system=sys_, consts=dataclasses.replace(CONSTS, N=10),
+                 T_max=1e5, C_max=0.25)
+    scn = Scenario(system=sys_, consts=CONSTS, T_max=1e5, C_max=0.25,
+                   step=ConstantRule(0.01))
+    with pytest.raises(ValueError, match="jointly optimizes"):
+        scn.optimize(m=Objective.JOINT)
+    with pytest.raises(ValueError, match="needs step"):
+        scn.optimize(m=Objective.EXPONENTIAL)
+    assert scn.objective is Objective.CONSTANT
+
+
+def test_step_rule_registry():
+    assert isinstance(make_step_rule("C", 0.01), ConstantRule)
+    assert isinstance(make_step_rule(Objective.EXPONENTIAL, 0.02, 0.9),
+                      ExponentialRule)
+    assert isinstance(make_step_rule("D", 0.02, 600.0), DiminishingRule)
+    assert isinstance(make_step_rule(Objective.JOINT, 0.05), ConstantRule)
+
+
+def test_stringly_m_is_deprecated_but_works():
+    sys_ = EdgeSystem.paper_sec_vii(dim=64, N=4)
+    with pytest.warns(DeprecationWarning, match="stringly-typed"):
+        prob = ParamOptProblem(sys=sys_, consts=CONSTS, T_max=1e5,
+                               C_max=0.25, m="C", gamma=0.01)
+    assert prob.m is Objective.CONSTANT
+    assert prob.m == "C"               # str-enum: old comparisons keep working
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ParamOptProblem(sys=sys_, consts=CONSTS, T_max=1e5, C_max=0.25,
+                        m=Objective.CONSTANT, gamma=0.01)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: optimize -> run closes the loop with exact bit accounting
+# ---------------------------------------------------------------------------
+def test_scenario_run_closes_loop_exactly():
+    task = QuadraticTask(dim=8)
+    sys_ = EdgeSystem.paper_sec_vii(dim=task.dim)
+    consts = dataclasses.replace(CONSTS, N=10)
+    scn = Scenario(system=sys_, consts=consts, T_max=1e5, C_max=0.25)
+    plan = scn.optimize()
+    assert plan.feasible
+    report = scn.run(plan, task=task)
+    assert report.backend == "reference" and report.rounds == plan.K0
+    # the acceptance criterion: measured comm-bits == K0*(sum M_sn + M_s0)
+    assert report.comm_bits == plan.K0 * (float(np.sum(sys_.M_sn))
+                                          + sys_.M_s0)
+    assert report.comm_bits == report.predicted_comm_bits
+    assert report.comm_bits_match
+    # cost-model measurements at full K0 coincide with the predictions
+    assert report.measured_E == pytest.approx(plan.predicted_E)
+    assert report.measured_T == pytest.approx(plan.predicted_T)
+    # and the optimized parameters actually learn the quadratic
+    assert report.final_metrics["err"] < 0.05
+    assert "EXACT" in report.summary()
+
+
+def test_scenario_run_capped_reports_partial_bits():
+    task = QuadraticTask(dim=8)
+    sys_ = EdgeSystem.paper_sec_vii(dim=task.dim)
+    consts = dataclasses.replace(CONSTS, N=10)
+    scn = Scenario(system=sys_, consts=consts, T_max=1e5, C_max=0.25)
+    plan = scn.optimize()
+    cap = max(1, plan.K0 // 7)
+    report = scn.run(plan, task=task, max_rounds=cap)
+    assert report.rounds == cap
+    assert report.comm_bits == cap * plan.round_bits()
+    assert not report.comm_bits_match

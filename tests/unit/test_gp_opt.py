@@ -5,7 +5,8 @@ import pytest
 from tests.compat import given, settings, st
 
 from repro.core import EdgeSystem, MLProblemConstants
-from repro.opt import (GP, ParamOptProblem, amgm_monomial, solve_gp,
+from repro.opt import (GP, Objective, ParamOptProblem, amgm_monomial,
+                       solve_gp,
                        solve_param_opt)
 from repro.opt.posy import Posy, const, var
 
@@ -58,9 +59,9 @@ def test_amgm_condensation_properties(n_terms, seed):
 
 
 @pytest.mark.parametrize("m,kw", [
-    ("C", dict(gamma=0.01)),
-    ("D", dict(gamma=0.02, rho=600.0)),
-    ("J", dict()),
+    (Objective.CONSTANT, dict(gamma=0.01)),
+    (Objective.DIMINISHING, dict(gamma=0.02, rho=600.0)),
+    (Objective.JOINT, dict()),
 ])
 def test_param_opt_feasible_and_active(m, kw):
     prob = ParamOptProblem(sys=_sys(), consts=CONSTS, T_max=1e5, C_max=0.25,
@@ -81,14 +82,14 @@ def test_param_opt_kkt_stationarity_continuous():
     es = []
     for cmax in (0.22, 0.3):
         prob = ParamOptProblem(sys=_sys(), consts=CONSTS, T_max=1e5,
-                               C_max=cmax, m="C", gamma=0.01)
+                               C_max=cmax, m=Objective.CONSTANT, gamma=0.01)
         es.append(solve_param_opt(prob).E)
     assert es[0] > es[1]
 
 
 def test_infeasible_detected():
     prob = ParamOptProblem(sys=_sys(), consts=CONSTS, T_max=10.0,
-                           C_max=1e-6, m="C", gamma=0.01)
+                           C_max=1e-6, m=Objective.CONSTANT, gamma=0.01)
     r = solve_param_opt(prob)
     assert not r.feasible
 
@@ -97,14 +98,14 @@ def test_param_opt_exponential_rule():
     """m=E (Problem 5 / Algorithm 3): X0 = rho^K0 sandwich handled via the
     projected-expansion GIA; result feasible and near the error budget."""
     prob = ParamOptProblem(sys=_sys(), consts=CONSTS, T_max=1e5, C_max=0.25,
-                           m="E", gamma=0.02, rho=0.9995)
+                           m=Objective.EXPONENTIAL, gamma=0.02, rho=0.9995)
     r = solve_param_opt(prob)
     assert r.feasible
     assert 0.15 <= r.C <= 0.25 * (1 + 1e-6)
     # near-optimality: within 25% of the constant-rule solution (they share
     # the gamma scale; Lemma 1 vs Lemma 2 differ only in a-coefficients)
     rc = solve_param_opt(ParamOptProblem(sys=_sys(), consts=CONSTS,
-                                         T_max=1e5, C_max=0.25, m="C",
+                                         T_max=1e5, C_max=0.25, m=Objective.CONSTANT,
                                          gamma=0.01))
     assert r.E <= rc.E * 1.35
 
