@@ -8,7 +8,6 @@ all expressed through the repro.api Scenario facade (algorithm names map to
 from __future__ import annotations
 
 import json
-import math
 import os
 import time
 from typing import Dict, Tuple
@@ -16,7 +15,8 @@ from typing import Dict, Tuple
 import numpy as np
 
 from repro.api import (EdgeSystem, MLProblemConstants, MNISTTask, Scenario,
-                       make_step_rule)
+                       make_step_rule, sweep_scenarios)
+from repro.opt.gia import min_feasible_K0
 
 RESULTS = os.environ.get("REPRO_RESULTS", "results")
 CONST_PATH = os.path.join(RESULTS, "paper_constants.json")
@@ -77,18 +77,27 @@ def plan_record(name: str, plan, dt: float) -> Dict:
             "feasible": bool(plan.feasible), "dt": dt}
 
 
-def _fixed_eval(prob, Kn_val: float, B: int, max_k0: int = 200_000) -> Dict:
-    """-fix baselines: parameters preset, K0 = smallest meeting C_max."""
+def sweep_records(scenarios, names, backend: str = "auto"):
+    """Optimize scenarios through the batched engine; benchmark row shape.
+
+    Returns (rows, SweepReport); ``dt`` is the whole sweep's wall clock
+    amortized per point (the points no longer solve one by one)."""
+    rep = sweep_scenarios(scenarios, names=names, backend=backend)
+    dt = rep.wall_time_s / max(1, len(rep))
+    rows = []
+    for row in rep:
+        r = dict(row)
+        r["Kn"] = int(row["Kn"][0])
+        r["dt"] = dt
+        rows.append(r)
+    return rows, rep
+
+
+def _fixed_eval(prob, Kn_val: float, B: int) -> Dict:
+    """-fix baselines: parameters preset, K0 = smallest meeting C_max
+    (monotone bisection via :func:`repro.opt.gia.min_feasible_K0`)."""
     Kn = np.full(10, max(1, int(round(Kn_val))), dtype=np.int64)
-    K0, ok = 1, False
-    while K0 <= max_k0:
-        ev = prob.evaluate(K0, Kn, B, None)
-        if ev["C"] <= prob.C_max:
-            ok = ev["T"] <= prob.T_max
-            break
-        if ev["T"] > prob.T_max:
-            break
-        K0 = int(math.ceil(K0 * 1.25))
+    K0, ok = min_feasible_K0(prob, Kn, B, ctol=0.0, ttol=0.0)
     ev = prob.evaluate(K0, Kn, B, None)
     return {"K0": K0, "Kn": int(Kn[0]), "B": B, "E": ev["E"], "T": ev["T"],
             "C": ev["C"], "feasible": bool(ok), "gamma": prob.gamma}

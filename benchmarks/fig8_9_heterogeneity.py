@@ -1,29 +1,38 @@
 """Figs. 8 & 9: energy cost versus worker heterogeneity — the computation
 ratio F^(1)/F^(2) (Fig. 8) and the quantization ratio s^(1)/s^(2) (Fig. 9),
-at C_max=0.25, T_max=1e5."""
+at C_max=0.25, T_max=1e5.
+
+Every point is an ``-opt`` solve, so the whole two-panel figure is one
+heterogeneous sweep: 7 (m, family) structure groups, each batching its 10
+heterogeneity settings through one GIA call path.
+"""
 from __future__ import annotations
 
 import time
 
-from .common import RESULTS, get_constants, paper_system, run_algorithm, \
-    write_csv
+from .common import (RESULTS, get_constants, make_scenario, paper_system,
+                     sweep_records, write_csv)
 
 RATIOS = (1.0, 2.0, 4.0, 8.0, 10.0)
 ALGOS = ("Gen-C", "Gen-E", "Gen-D", "Gen-O",
          "PM-C-opt", "FA-C-opt", "PR-C-opt")
 
 
-def run(tag="fig8_9"):
+def run(tag="fig8_9", backend="auto"):
     consts = get_constants()
-    rows = []
     t0 = time.time()
+    scenarios, names, meta = [], [], []
     for panel, knob in (("fig8_F", "F_ratio"), ("fig9_s", "s_ratio")):
         for ratio in RATIOS:
             sys_ = paper_system(**{knob: ratio})
             for name in ALGOS:
-                r = run_algorithm(name, sys_, consts, T_max=1e5, C_max=0.25)
-                rows.append({"panel": panel, "ratio": ratio, **r})
-        print(f"  {panel} done", flush=True)
+                scn, _ = make_scenario(name, sys_, consts,
+                                       T_max=1e5, C_max=0.25)
+                scenarios.append(scn)
+                names.append(name)
+                meta.append({"panel": panel, "ratio": ratio})
+    recs, _ = sweep_records(scenarios, names, backend=backend)
+    rows = [{**m, **r} for m, r in zip(meta, recs)]
     path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
                      ["panel", "ratio", "name", "K0", "Kn", "B", "E", "T",
                       "C", "feasible"])

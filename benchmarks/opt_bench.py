@@ -1,0 +1,97 @@
+"""Solver-engine throughput: batched (jnp) vs sequential (scalar NumPy) GIA.
+
+Measures the Fig.-5 grid — (budget, algo) points over Gen-C/E/D/O — solved
+two ways:
+
+  * ``sequential``: the historical loop, one scalar ``Scenario.optimize()``
+    per point (pure-NumPy interior point);
+  * ``batched``: one ``sweep_scenarios`` call — points group into one
+    batched GIA call path per objective, each group's GP instances solving
+    in single jitted+vmapped jnp calls, groups in parallel threads.
+
+The batched engine is timed twice: cold (includes XLA compile of each
+structure, paid once per process) and warm (the steady-state cost that
+matters for big sweeps).  Rows land in results/benchmarks/ so the speedup
+is tracked in the perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.opt_bench           # full Fig.5 grid
+    PYTHONPATH=src python -m benchmarks.opt_bench --smoke   # tiny CI subset
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.api import sweep_scenarios
+
+from .common import RESULTS, get_constants, make_scenario, paper_system, \
+    write_csv
+
+ALGOS = ("Gen-C", "Gen-E", "Gen-D", "Gen-O")
+C_GRID = (0.2, 0.25, 0.3, 0.4, 0.6)
+
+
+def _scenarios(sys_, consts, algos, c_grid):
+    scns, names = [], []
+    for cmax in c_grid:
+        for name in algos:
+            scn, _ = make_scenario(name, sys_, consts, T_max=1e5, C_max=cmax)
+            scns.append(scn), names.append(name)
+    return scns, names
+
+
+def run(tag="opt_bench", smoke=False):
+    consts = get_constants()
+    sys_ = paper_system()
+    algos = ("Gen-C", "Gen-O") if smoke else ALGOS
+    c_grid = C_GRID[:2] if smoke else C_GRID
+    if smoke:
+        tag = f"{tag}_smoke"       # don't clobber the full-grid artifact
+    scns, names = _scenarios(sys_, consts, algos, c_grid)
+    n = len(scns)
+
+    t0 = time.time()
+    seq_plans = [s.optimize() for s in scns]
+    t_seq = time.time() - t0
+
+    t0 = time.time()
+    rep_cold = sweep_scenarios(scns, names=names, backend="jnp")
+    t_cold = time.time() - t0
+    t0 = time.time()
+    rep = sweep_scenarios(scns, names=names, backend="jnp")
+    t_warm = time.time() - t0
+
+    # parity sanity on the fly — report, don't abort: cross-backend float
+    # divergence can legally move an integer by one on knife-edge points
+    # (the test suite owns the strict parity assertions)
+    mismatch = sum(
+        p.feasible != row["feasible"]
+        or abs(p.predicted_E - row["E"]) > 1e-3 * max(abs(p.predicted_E), 1)
+        for p, row in zip(seq_plans, rep.rows))
+    if mismatch:
+        print(f"  WARNING: {mismatch}/{n} points differ between sequential "
+              f"and batched beyond 0.1% — inspect before trusting timings")
+
+    rows = [{
+        "grid_points": n, "mode": mode, "wall_s": round(t, 4),
+        "solves_per_s": round(n / t, 3), "speedup_vs_seq": round(t_seq / t, 2),
+        "groups": rep.n_groups,
+    } for mode, t in [("sequential", t_seq), ("batched_cold", t_cold),
+                      ("batched_warm", t_warm)]]
+    path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
+                     ["grid_points", "mode", "wall_s", "solves_per_s",
+                      "speedup_vs_seq", "groups"])
+    for r in rows:
+        print(f"  {r['mode']:14s} {r['wall_s']:8.2f}s "
+              f"{r['solves_per_s']:8.3f} solves/s "
+              f"speedup {r['speedup_vs_seq']:5.2f}x")
+    return {"rows": len(rows), "csv": path,
+            "derived": rows[-1]["speedup_vs_seq"], "dt": t_seq + t_cold + t_warm}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="4-point subset for CI smoke runs")
+    args = ap.parse_args()
+    print(run(smoke=args.smoke))

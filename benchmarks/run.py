@@ -27,11 +27,12 @@ def main() -> None:
 
     from . import (fig3_convergence, fig4_error_control, fig5_tradeoff,
                    fig6_7_quantization, fig8_9_heterogeneity, kernel_bench,
-                   table_baselines, tpu_autotune)
+                   opt_bench, table_baselines, tpu_autotune)
 
     suite = [
         ("table_baselines", table_baselines.run),
         ("fig5_tradeoff", fig5_tradeoff.run),
+        ("opt_bench", opt_bench.run),
         ("fig6_7_quantization", fig6_7_quantization.run),
         ("fig8_9_heterogeneity", fig8_9_heterogeneity.run),
         ("tpu_autotune", tpu_autotune.run),

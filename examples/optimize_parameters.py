@@ -2,18 +2,30 @@
 Problems 2/9 for any (T_max, C_max, system) and compare against PM-SGD /
 FedAvg / PR-SGD parameterizations — all through the repro.api facade.
 
+Every comparison is one ``sweep_scenarios`` call: the scenarios group by
+(m, family) structure and each group solves through the batched jnp GP
+engine.  ``--pareto`` additionally sweeps the C_max budget axis and prints
+the non-dominated (E, T, C) frontier.
+
     PYTHONPATH=src python examples/optimize_parameters.py --cmax 0.25 --tmax 1e5
+    PYTHONPATH=src python examples/optimize_parameters.py --pareto
     PYTHONPATH=src python examples/optimize_parameters.py --tpu  # v5e fleet
 """
 import argparse
 
-from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants, Scenario)
+from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants, Scenario,
+                       sweep_scenarios)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cmax", type=float, default=0.25)
     ap.add_argument("--tmax", type=float, default=1e5)
+    ap.add_argument("--backend", default="auto",
+                    help="GP solver backend: auto | jnp | numpy")
+    ap.add_argument("--pareto", action="store_true",
+                    help="sweep the C_max axis too and print the Pareto "
+                         "front of (E, T, C)")
     ap.add_argument("--tpu", action="store_true",
                     help="use the TPU v5e fleet cost model instead of the "
                          "paper's Sec.-VII edge system")
@@ -31,26 +43,38 @@ def main():
         consts = MLProblemConstants(L=0.084, sigma=33.18, G=33.63,
                                     f_gap=2.3, N=10)
 
-    print(f"T_max={args.tmax:.3g}s  C_max={args.cmax}")
-    print(f"{'algorithm':14s} {'K0':>7s} {'Kn':>5s} {'B':>5s} "
-          f"{'gamma':>9s} {'E':>11s} {'T':>10s} {'C':>7s}  feasible")
-
-    def show(name, scenario):
-        p = scenario.optimize()
-        print(f"{name:14s} {p.K0:7d} {p.Kn[0]:5d} {p.B:5d} "
-              f"{p.gamma:9.4g} {p.predicted_E:11.4g} {p.predicted_T:10.4g} "
-              f"{p.predicted_C:7.4g}  {p.feasible}")
-
     def scenario(family="genqsgd", step=None):
         return Scenario(system=sys_, consts=consts, T_max=args.tmax,
                         C_max=args.cmax, family=family, step=step)
 
-    show("GenQSGD (opt)", scenario())
-    show("Gen-C g=.01", scenario(step=ConstantRule(0.01)))
-    show("PM-SGD", scenario("pm", ConstantRule(0.01)))
-    show("PR-SGD", scenario("pr", ConstantRule(0.01)))
+    table = [("GenQSGD (opt)", scenario()),
+             ("Gen-C g=.01", scenario(step=ConstantRule(0.01))),
+             ("PM-SGD", scenario("pm", ConstantRule(0.01))),
+             ("PR-SGD", scenario("pr", ConstantRule(0.01)))]
     if not args.tpu:
-        show("FedAvg", scenario("fa", ConstantRule(0.01)))
+        table.append(("FedAvg", scenario("fa", ConstantRule(0.01))))
+
+    rep = sweep_scenarios([s for _, s in table], names=[n for n, _ in table],
+                          backend=args.backend)
+    print(f"T_max={args.tmax:.3g}s  C_max={args.cmax}  "
+          f"[{rep.backend} backend, {rep.n_groups} structure groups, "
+          f"{rep.wall_time_s:.1f}s]")
+    print(f"{'algorithm':14s} {'K0':>7s} {'Kn':>5s} {'B':>5s} "
+          f"{'gamma':>9s} {'E':>11s} {'T':>10s} {'C':>7s}  feasible")
+    for row in rep:
+        print(f"{row['name']:14s} {row['K0']:7d} {row['Kn'][0]:5d} "
+              f"{row['B']:5d} {row['gamma']:9.4g} {row['E']:11.4g} "
+              f"{row['T']:10.4g} {row['C']:7.4g}  {row['feasible']}")
+
+    if args.pareto:
+        grid = [args.cmax * f for f in (0.8, 0.9, 1.0, 1.2, 1.6, 2.4)]
+        front = scenario().sweep(over={"cmax": grid},
+                                 backend=args.backend).pareto_front()
+        print(f"\nPareto front over C_max in {[round(c, 4) for c in grid]} "
+              f"(jointly optimized step size):")
+        for row in front:
+            print(f"  C_max={row['C_max']:<8.4g} E={row['E']:<12.4g} "
+                  f"T={row['T']:<12.4g} C={row['C']:.4g}")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,16 @@
 #!/usr/bin/env bash
 # One-step verify recipe: tier-1 test suite + a fast kernel-bench smoke run.
 #
-#   ./scripts/check.sh            # everything
+#   ./scripts/check.sh                             # everything
 #   SKIP_BENCH=1 ./scripts/check.sh
+#   PYTEST_ARGS='-m "not slow"' ./scripts/check.sh # fast (blocking-CI) subset
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+echo "== tier-1: pytest ${PYTEST_ARGS:-} =="
+eval python -m pytest -x -q ${PYTEST_ARGS:-}
 
 if [ -z "${SKIP_BENCH:-}" ]; then
   echo "== kernel_bench --smoke =="

@@ -40,10 +40,12 @@ from .plan import Plan, RunReport
 from .registries import (FAMILIES, STEP_RULES, family_names, make_step_rule,
                          make_varmap, register_family, register_step_rule)
 from .scenario import Scenario
+from .sweep import SweepReport, sweep_scenarios
 from .tasks import MNISTTask, QuadraticTask, SpmdTask
 
 __all__ = [
     "Scenario", "Plan", "RunReport", "Objective",
+    "SweepReport", "sweep_scenarios",
     "EdgeSystem", "MLProblemConstants",
     "ConstantRule", "ExponentialRule", "DiminishingRule", "StepRule",
     "make_rule", "make_step_rule", "make_varmap",

@@ -7,6 +7,12 @@ loop as two calls:
 
     plan   = scenario.optimize()          # GIA/CGP -> frozen Plan
     report = scenario.run(plan, task)     # train -> RunReport vs predictions
+
+plus the batched third call: ``scenario.sweep(over={...})`` expands a
+budget / rule grid, solves it through the batched GP engine (one jitted
+jnp call path per structure group), and returns a
+:class:`~repro.api.sweep.SweepReport` with tidy rows and Pareto-front
+extraction.
 """
 from __future__ import annotations
 
@@ -94,14 +100,8 @@ class Scenario:
                                gamma=gamma, rho=rho, vmap=vmap)
 
     # ------------------------------------------------------------------
-    def optimize(self, m=None, z0=None, tol: float = 1e-4,
-                 max_iter: int = 60, verbose: bool = False) -> Plan:
-        """Solve the scenario's parameter-optimization problem (Algorithms
-        2-5) and freeze the solution into a :class:`Plan`."""
-        m = self._resolve(m)
-        prob = self.problem(m)
-        r = solve_param_opt(prob, z0=z0, tol=tol, max_iter=max_iter,
-                            verbose=verbose)
+    def _plan_from_result(self, m: Objective, r) -> Plan:
+        """Freeze a :class:`~repro.opt.gia.GIAResult` into a Plan."""
         if m is Objective.JOINT:
             step = ConstantRule(float(r.gamma))
         else:
@@ -113,6 +113,28 @@ class Scenario:
                     family=self.family, predicted_E=r.E, predicted_T=r.T,
                     predicted_C=r.C, feasible=bool(r.feasible),
                     converged=bool(r.converged))
+
+    def optimize(self, m=None, z0=None, tol: float = 1e-4,
+                 max_iter: int = 60, verbose: bool = False) -> Plan:
+        """Solve the scenario's parameter-optimization problem (Algorithms
+        2-5) and freeze the solution into a :class:`Plan`."""
+        m = self._resolve(m)
+        prob = self.problem(m)
+        r = solve_param_opt(prob, z0=z0, tol=tol, max_iter=max_iter,
+                            verbose=verbose)
+        return self._plan_from_result(m, r)
+
+    def sweep(self, over, names=None, backend: str = "auto",
+              tol: float = 1e-4, max_iter: int = 60, parallel: bool = True):
+        """Expand ``over`` (field name -> iterable of values; ``rule`` /
+        ``cmax`` / ``tmax`` aliases accepted) into Scenario variants, solve
+        them all through the batched engine, and return a
+        :class:`~repro.api.sweep.SweepReport` (tidy rows, ``pareto_front()``,
+        ``to_csv``)."""
+        from .sweep import expand_grid, sweep_scenarios
+        scenarios = expand_grid(self, over)
+        return sweep_scenarios(scenarios, names=names, backend=backend,
+                               tol=tol, max_iter=max_iter, parallel=parallel)
 
     # ------------------------------------------------------------------
     def run(self, plan: Plan, task=None, backend: str = "reference",

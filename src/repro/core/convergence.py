@@ -17,7 +17,6 @@ Notation:
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import numpy as np
 
@@ -66,22 +65,24 @@ def c_arbitrary(K0, Kn, B, gammas, c, q_pairs) -> float:
     return float(t1 + t2 + t3 + t4)
 
 
-def c_constant(K0, Kn, B, gamma_c, c, q_pairs) -> float:
-    """C_C — eq. (11)."""
+def c_constant(K0, Kn, B, gamma_c, c, q_pairs):
+    """C_C — eq. (11).  Broadcasts over an ndarray ``K0`` (the feasibility
+    grid search evaluates whole K0 ladders at once); scalar in, float out."""
     c1, c2, c3, c4 = c
     Kn = np.asarray(Kn, dtype=np.float64)
     q_pairs = np.asarray(q_pairs, dtype=np.float64)
     sum_K = Kn.sum()
-    return float(
+    out = (
         c1 / (gamma_c * K0 * sum_K)
         + c2 * gamma_c**2 * Kn.max() ** 2
         + c3 * gamma_c / B
         + c4 * gamma_c * (q_pairs * Kn**2).sum() / sum_K
     )
+    return out if np.ndim(K0) else float(out)
 
 
-def c_exponential(K0, Kn, B, gamma_e, rho_e, c, q_pairs) -> float:
-    """C_E — eq. (13)."""
+def c_exponential(K0, Kn, B, gamma_e, rho_e, c, q_pairs):
+    """C_E — eq. (13).  Broadcasts over an ndarray ``K0``."""
     c1, c2, c3, c4 = c
     Kn = np.asarray(Kn, dtype=np.float64)
     q_pairs = np.asarray(q_pairs, dtype=np.float64)
@@ -90,16 +91,18 @@ def c_exponential(K0, Kn, B, gamma_e, rho_e, c, q_pairs) -> float:
     a3 = gamma_e / (1.0 + rho_e)
     r1 = rho_e**K0
     sum_K = Kn.sum()
-    return float(
+    out = (
         a1 * c1 / ((1.0 - r1) * sum_K)
         + a2 * c2 * (1.0 - rho_e ** (3 * K0)) / (1.0 - r1) * Kn.max() ** 2
         + a3 * (1.0 - rho_e ** (2 * K0)) / (1.0 - r1)
         * (c3 / B + c4 * (q_pairs * Kn**2).sum() / sum_K)
     )
+    return out if np.ndim(K0) else float(out)
 
 
-def c_diminishing(K0, Kn, B, gamma_d, rho_d, c, q_pairs) -> float:
-    """C_D — eq. (16) (upper bound used for optimization)."""
+def c_diminishing(K0, Kn, B, gamma_d, rho_d, c, q_pairs):
+    """C_D — eq. (16) (upper bound used for optimization).  Broadcasts over
+    an ndarray ``K0``."""
     c1, c2, c3, c4 = c
     Kn = np.asarray(Kn, dtype=np.float64)
     q_pairs = np.asarray(q_pairs, dtype=np.float64)
@@ -107,14 +110,15 @@ def c_diminishing(K0, Kn, B, gamma_d, rho_d, c, q_pairs) -> float:
     b2 = (rho_d**2 * gamma_d**2) / (rho_d + 1.0) ** 3 \
         + (rho_d**2 * gamma_d**2) / (2.0 * (rho_d + 1.0) ** 2)
     b3 = rho_d * gamma_d / (rho_d + 1.0) ** 2 + rho_d * gamma_d / (rho_d + 1.0)
-    logt = math.log((K0 + rho_d + 1.0) / (rho_d + 1.0))
+    logt = np.log((K0 + rho_d + 1.0) / (rho_d + 1.0))
     sum_K = Kn.sum()
-    return float(
+    out = (
         b1 * c1 / (logt * sum_K)
         + b2 * c2 * Kn.max() ** 2 / logt
         + b3 * c3 / (B * logt)
         + b3 * c4 * (q_pairs * Kn**2).sum() / (logt * sum_K)
     )
+    return out if np.ndim(K0) else float(out)
 
 
 def c_m(m: str, K0, Kn, B, rule, c, q_pairs) -> float:

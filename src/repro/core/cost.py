@@ -172,13 +172,15 @@ class EdgeSystem:
             dim=dim, q_dim=4096)
 
 
-def time_cost(sys: EdgeSystem, K0, Kn, B) -> float:
-    """T(K, B) — eq. (17)."""
+def time_cost(sys: EdgeSystem, K0, Kn, B):
+    """T(K, B) — eq. (17).  Broadcasts over an ndarray ``K0``."""
     Kn = np.asarray(Kn, dtype=np.float64)
-    return float(K0 * (B * np.max(sys.comp_time_coeff * Kn) + sys.comm_time))
+    out = K0 * (B * np.max(sys.comp_time_coeff * Kn) + sys.comm_time)
+    return out if np.ndim(K0) else float(out)
 
 
-def energy_cost(sys: EdgeSystem, K0, Kn, B) -> float:
-    """E(K, B) — eq. (18)."""
+def energy_cost(sys: EdgeSystem, K0, Kn, B):
+    """E(K, B) — eq. (18).  Broadcasts over an ndarray ``K0``."""
     Kn = np.asarray(Kn, dtype=np.float64)
-    return float(K0 * (B * np.sum(sys.comp_energy_coeff * Kn) + sys.const_energy))
+    out = K0 * (B * np.sum(sys.comp_energy_coeff * Kn) + sys.const_energy)
+    return out if np.ndim(K0) else float(out)

@@ -1,7 +1,18 @@
-"""The paper's optimization framework: GP solver + GIA/CGP (Algorithms 2-5)."""
+"""The paper's optimization framework: GP solver + GIA/CGP (Algorithms 2-5).
+
+The solver engine is batched and backend-pluggable: problems sharing one
+structure signature (same objective m, family varmap, worker count) pack into
+fixed-shape systems (:mod:`repro.opt.structure`) that either the NumPy
+reference interior point or the jitted+vmapped jnp backend
+(:mod:`repro.opt.gp_jax`) solve whole batches of at once —
+``solve_param_opt_batched`` is the lockstep GIA over such a batch.
+"""
 from .posy import Posy, const, var, monomial
-from .gp import GP, GPResult, solve_gp
+from .gp import (GP, GPResult, BatchedGPResult, GP_BACKENDS,
+                 register_gp_backend, solve_gp, solve_gp_batch)
 from .condense import amgm_monomial, ratio_to_posy
 from .problems import (Objective, ParamOptProblem, VarMap, identity_varmap,
                        pm_varmap, fa_varmap, pr_varmap)
-from .gia import GIAResult, solve_param_opt
+from .structure import GPStructure, PackedBatch, structure_signature
+from .gia import (GIAResult, min_feasible_K0, solve_param_opt,
+                  solve_param_opt_batched)

@@ -4,19 +4,28 @@
 :class:`~repro.opt.problems.ParamOptProblem` to a KKT point of the continuous
 relaxation and then constructs a nearly-optimal integer point (the paper
 relaxes K, B to reals and notes integer recovery is straightforward).
+
+``solve_param_opt_batched`` is the same algorithm in lockstep over a batch of
+instances sharing one structure signature (same objective m, family varmap,
+worker count — e.g. one Fig.-5 sweep line): every outer iteration refreshes
+all expansion-point coefficients and performs the whole batch's GP solves in
+one :func:`~repro.opt.gp.solve_gp_batch` call, with per-instance
+convergence / stall masks freezing finished instances.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .gp import GP, GPResult, solve_gp
-from .problems import ParamOptProblem
+from .gp import GPResult, solve_gp, solve_gp_batch
+from .problems import Objective, ParamOptProblem
+from .structure import GPStructure, structure_signature
 
-__all__ = ["GIAResult", "solve_param_opt"]
+__all__ = ["GIAResult", "solve_param_opt", "solve_param_opt_batched",
+           "min_feasible_K0"]
 
 
 @dataclasses.dataclass
@@ -76,9 +85,79 @@ def solve_param_opt(problem: ParamOptProblem,
         if step < tol:
             converged = True
             break
+    return _finalize(problem, z, history, converged)
 
-    K0c, Knc, Bc, extra = _extract(problem, z)
-    K0i, Kni, Bi, Ei = _round_integer(problem, z, extra)
+
+def solve_param_opt_batched(problems: Sequence[ParamOptProblem],
+                            z0s: Optional[Sequence[np.ndarray]] = None,
+                            tol: float = 1e-4, max_iter: int = 60,
+                            backend: str = "jnp",
+                            verbose: bool = False) -> List[GIAResult]:
+    """Lockstep-batched ``solve_param_opt`` over same-structure instances.
+
+    Per-instance semantics match the scalar loop exactly: each instance sees
+    the same sequence of expansion points, phase-I retries, and stall exits
+    it would see standalone (the ``backend="numpy"`` path is bit-identical
+    row-for-row); ``backend="jnp"`` performs each iteration's GP solves in
+    one jitted, vmapped interior-point call.
+    """
+    problems = list(problems)
+    if not problems:
+        return []
+    sig = structure_signature(problems[0])
+    for p in problems[1:]:
+        if structure_signature(p) != sig:
+            raise ValueError(
+                f"batched GIA needs one structure signature, got both {sig} "
+                f"and {structure_signature(p)}; group instances by "
+                f"(m, family, N) first")
+    B = len(problems)
+    if z0s is None:
+        zs = [p.z_init() for p in problems]
+    else:
+        zs = [np.asarray(z, dtype=np.float64).copy() for z in z0s]
+    structure = GPStructure(problems[0])
+    history: List[List[float]] = [[] for _ in range(B)]
+    converged = [False] * B
+    active = [True] * B
+    stall = [0] * B
+    for it in range(max_iter):
+        if not any(active):
+            break
+        pack = structure.pack_batch(problems, zs, active=active)
+        # projected expansion points (inactive rows keep their final z —
+        # their pack rows are stale placeholders the backends skip)
+        zs = [pack.z0[i] if active[i] else zs[i] for i in range(B)]
+        res = solve_gp_batch(pack, backend=backend)
+        for i in range(B):
+            if not active[i]:
+                continue
+            if not res.feasible[i]:
+                zs[i] = res.z[i]                # retry from min-slack point
+                stall[i] += 1
+                if stall[i] > 8:
+                    active[i] = False
+                continue
+            stall[i] = 0
+            step = float(np.max(np.abs(res.z[i] - zs[i])))
+            zs[i] = res.z[i]
+            history[i].append(float(res.obj[i]))
+            if verbose:
+                print(f"  GIA[{i}] iter {it}: E={res.obj[i]:.6g} "
+                      f"step={step:.3g}")
+            if step < tol:
+                converged[i] = True
+                active[i] = False
+    return [_finalize(p, np.asarray(zs[i], dtype=np.float64), history[i],
+                      converged[i])
+            for i, p in enumerate(problems)]
+
+
+def _finalize(problem: ParamOptProblem, z: np.ndarray,
+              history: List[float], converged: bool) -> GIAResult:
+    """Integer recovery + true-constraint evaluation at the continuous point."""
+    _, _, _, extra = _extract(problem, z)
+    K0i, Kni, Bi, _ = _round_integer(problem, z, extra)
     ev = problem.evaluate(K0i, Kni, Bi, extra)
     v = problem.vmap
     named = {name: float(np.exp(z[i])) for i, name in enumerate(v.names)}
@@ -86,8 +165,46 @@ def solve_param_opt(problem: ParamOptProblem,
         converged=converged,
         feasible=problem.feasible(K0i, Kni, Bi, extra),
         iterations=len(history), z=z, x=named,
-        K0=K0i, Kn=Kni, B=Bi, gamma=extra if problem.m == "J" else problem.gamma,
-        E=ev["E"], T=ev["T"], C=ev["C"], history=history)
+        K0=K0i, Kn=Kni, B=Bi,
+        gamma=extra if problem.m is Objective.JOINT else problem.gamma,
+        E=ev["E"], T=ev["T"], C=ev["C"], history=list(history))
+
+
+def min_feasible_K0(problem: ParamOptProblem, Kn, B,
+                    extra: Optional[float] = None, K0_lo: int = 1,
+                    ctol: float = 1e-9, ttol: float = 1e-9,
+                    max_doublings: int = 200):
+    """Smallest integer ``K0 >= K0_lo`` with ``C(K0) <= C_max*(1+ctol)``.
+
+    ``C_m`` is non-increasing and ``T`` non-decreasing in ``K0``, so the
+    search is exponential bracketing plus monotone bisection (~2 log2(K0*)
+    ``evaluate`` calls); a bracket point that already blows the time budget
+    while C is still unmet certifies infeasibility.  Returns ``(K0, ok)``
+    where ``ok`` additionally requires ``T(K0) <= T_max*(1+ttol)``.
+    """
+    C_cap = problem.C_max * (1 + ctol)
+    T_cap = problem.T_max * (1 + ttol)
+    ev = problem.evaluate(K0_lo, Kn, B, extra)
+    if ev["C"] <= C_cap:
+        return K0_lo, ev["T"] <= T_cap
+    lo, hi = K0_lo, K0_lo
+    for _ in range(max_doublings):
+        if ev["T"] > problem.T_max:
+            return hi, False            # time budget dies before C is met
+        lo, hi = hi, hi * 2
+        ev = problem.evaluate(hi, Kn, B, extra)
+        if ev["C"] <= C_cap:
+            break
+    else:
+        return hi, False
+    # invariant: C(lo) > C_cap >= C(hi); bisect to the smallest C-ok K0
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if problem.evaluate(mid, Kn, B, extra)["C"] <= C_cap:
+            hi = mid
+        else:
+            lo = mid
+    return hi, problem.evaluate(hi, Kn, B, extra)["T"] <= T_cap
 
 
 def _round_integer(problem: ParamOptProblem, z: np.ndarray,
@@ -97,9 +214,9 @@ def _round_integer(problem: ParamOptProblem, z: np.ndarray,
     Rounding happens in the *actual* variable space (so baselines with tied
     variables — e.g. FedAvg's K_n = l·I_n/B — keep their structure), then the
     paper variables are re-derived from the monomial map.  C_m is
-    non-increasing in K0 for every rule, so for each rounding we take the
-    smallest K0 restoring C <= C_max and keep the least-energy feasible
-    candidate.
+    non-increasing in K0 for every rule, so each rounding takes the smallest
+    K0 restoring C <= C_max (via :func:`min_feasible_K0` bisection) and the
+    least-energy feasible candidate wins.
     """
     v = problem.vmap
     int_idx = [i for i, nm in enumerate(v.names)
@@ -112,16 +229,8 @@ def _round_integer(problem: ParamOptProblem, z: np.ndarray,
         K0f, Knf, Bf, _ = _extract(problem, zc)
         Kni = np.maximum(1, np.ceil(Knf - 1e-9)).astype(np.int64)
         Bi = max(1, int(round(Bf)))
-        K0i = max(1, math.floor(K0f))
-        ok = False
-        for _ in range(200000):
-            ev = problem.evaluate(K0i, Kni, Bi, extra)
-            if ev["C"] <= problem.C_max * (1 + 1e-9):
-                ok = ev["T"] <= problem.T_max * (1 + 1e-9)
-                break
-            if ev["T"] > problem.T_max:
-                break
-            K0i += 1
+        K0i, ok = min_feasible_K0(problem, Kni, Bi, extra,
+                                  K0_lo=max(1, math.floor(K0f)))
         if not ok:
             continue
         ev = problem.evaluate(K0i, Kni, Bi, extra)

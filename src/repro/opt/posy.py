@@ -12,6 +12,8 @@ import numpy as np
 
 __all__ = ["Posy", "const", "var", "monomial"]
 
+_F64 = np.dtype(np.float64)
+
 
 @dataclasses.dataclass
 class Posy:
@@ -19,12 +21,18 @@ class Posy:
     A: np.ndarray  # (K, n) exponents
 
     def __post_init__(self):
-        self.c = np.atleast_1d(np.asarray(self.c, dtype=np.float64))
-        self.A = np.atleast_2d(np.asarray(self.A, dtype=np.float64))
-        assert self.c.ndim == 1 and self.A.ndim == 2
-        assert self.c.shape[0] == self.A.shape[0], (self.c.shape, self.A.shape)
-        if np.any(self.c <= 0):
-            raise ValueError(f"posynomial coefficients must be > 0, got {self.c}")
+        # fast path: the algebra operators below hand in well-formed float64
+        # arrays by construction (this constructor is the hot spot of every
+        # surrogate refresh in the GIA loop)
+        c, A = self.c, self.A
+        if not (type(c) is np.ndarray and c.dtype == _F64 and c.ndim == 1):
+            self.c = c = np.atleast_1d(np.asarray(c, dtype=np.float64))
+        if not (type(A) is np.ndarray and A.dtype == _F64 and A.ndim == 2):
+            self.A = A = np.atleast_2d(np.asarray(A, dtype=np.float64))
+        assert c.ndim == 1 and A.ndim == 2
+        assert c.shape[0] == A.shape[0], (c.shape, A.shape)
+        if c.min(initial=np.inf) <= 0:
+            raise ValueError(f"posynomial coefficients must be > 0, got {c}")
 
     # ------------------------------------------------------------------
     @property

@@ -14,8 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -158,6 +159,14 @@ def pr_varmap(N: int, with_extra: bool = False) -> VarMap:
                   lower=lower, upper=upper)
 
 
+def _log_posy_batch(p: Posy, Z: np.ndarray) -> np.ndarray:
+    """log p(exp(z)) for a (G, n) batch of log-points — the vectorized
+    counterpart of :meth:`Posy.logvalue`."""
+    t = np.log(p.c)[None, :] + Z @ p.A.T          # (G, K)
+    m = t.max(axis=1, keepdims=True)
+    return (m + np.log(np.exp(t - m).sum(axis=1, keepdims=True)))[:, 0]
+
+
 # ---------------------------------------------------------------------------
 # Problem family
 # ---------------------------------------------------------------------------
@@ -181,11 +190,12 @@ class ParamOptProblem:
     def __post_init__(self):
         self.m = Objective.coerce(self.m)
         if self.vmap is None:
-            self.vmap = identity_varmap(self.sys.N,
-                                        with_extra=self.m in ("E", "J"))
-        if self.m in ("C", "E", "D") and self.gamma is None:
+            self.vmap = identity_varmap(
+                self.sys.N,
+                with_extra=self.m in (Objective.EXPONENTIAL, Objective.JOINT))
+        if self.m is not Objective.JOINT and self.gamma is None:
             raise ValueError(f"m={self.m} requires a fixed gamma")
-        if self.m in ("E", "D") and self.rho is None:
+        if self.m.needs_rho and self.rho is None:
             raise ValueError(f"m={self.m} requires rho")
 
     # -- shared pieces ------------------------------------------------------
@@ -233,62 +243,97 @@ class ParamOptProblem:
         return out
 
     # -- convergence-error constraint per m ----------------------------------
-    def _conv_constraint(self, z_prev: np.ndarray) -> List[Posy]:
+    @functools.cached_property
+    def _conv_static(self) -> Dict[str, Posy]:
+        """The expansion-point-independent pieces of the convergence block.
+
+        A GIA iteration's coefficient refresh then only condenses the
+        cached denominators at the new point (AM-GM / Taylor scalars) and
+        performs a handful of monomial divisions — no posynomial-algebra
+        rebuild in the hot loop.
+        """
         c1, c2, c3, c4 = self.consts.c
         v = self.vmap
         Cmax = self.C_max
         sumK = self._sum_Kn()
         sumQ = self._sum_q_Kn2()
-        M = amgm_monomial(sumK, z_prev)  # condensed sum_n K_n
+        st = {"sumK": sumK}
 
-        if self.m == "C":                                   # (26)
+        if self.m is Objective.CONSTANT:                    # (26)
             g = self.gamma
-            con = (c1 / (Cmax * g)) / (v.K0 * M) \
-                + (c2 * g**2 / Cmax) * (v.T2 ** 2) \
-                + (c3 * g / Cmax) / v.B \
-                + ((c4 * g / Cmax) * sumQ) / M
-            return [con]
-
-        if self.m == "J":                                   # (40)
+            st["overM_head"] = (c1 / (Cmax * g)) / v.K0
+            st["mid"] = (c2 * g**2 / Cmax) * (v.T2 ** 2) \
+                + (c3 * g / Cmax) / v.B
+            st["overM_tail"] = (c4 * g / Cmax) * sumQ
+        elif self.m is Objective.JOINT:                     # (40)
             gam = v.extra
-            con = (c1 / Cmax) / (gam * v.K0 * M) \
-                + (c2 / Cmax) * (gam ** 2) * (v.T2 ** 2) \
-                + (c3 / Cmax) * gam / v.B \
-                + (c4 / Cmax) * (gam * sumQ) / M
+            st["overM_head"] = (c1 / Cmax) / (gam * v.K0)
+            st["mid"] = (c2 / Cmax) * (gam ** 2) * (v.T2 ** 2) \
+                + (c3 / Cmax) * gam / v.B
+            st["overM_tail"] = (c4 / Cmax) * (gam * sumQ)
             # (39): gamma <= 1/L  (lower bound comes from the box)
-            return [con, float(self.consts.L) * gam]
-
-        if self.m == "D":                                   # (35)
+            st["gamma_cap"] = float(self.consts.L) * gam
+        elif self.m is Objective.DIMINISHING:               # (35)
             g, rho = self.gamma, self.rho
             b1 = 1.0 / (rho * g)
-            b2 = rho**2 * g**2 / (rho + 1.0)**3 + rho**2 * g**2 / (2 * (rho + 1.0)**2)
+            b2 = rho**2 * g**2 / (rho + 1.0)**3 \
+                + rho**2 * g**2 / (2 * (rho + 1.0)**2)
             b3 = rho * g / (rho + 1.0)**2 + rho * g / (rho + 1.0)
+            st["overM_head"] = const(b1 * c1, v.n)
+            st["mid"] = b2 * c2 * (v.T2 ** 2) + (b3 * c3) / v.B
+            st["overM_tail"] = b3 * c4 * sumQ
+        elif self.m is Objective.EXPONENTIAL:               # (31)-(33)
+            g, rho = self.gamma, self.rho
+            a1 = (1.0 - rho) / g
+            a2 = g**2 / (1.0 + rho + rho**2)
+            a3 = g / (1.0 + rho)
+            X0 = v.extra
+            st["num"] = const(a1 * c1, v.n) \
+                + (a2 * c2) * (v.T2 ** 2) * sumK \
+                + (a3 * c3) * (sumK / v.B) \
+                + Cmax * (X0 * sumK) \
+                + a3 * c4 * sumQ
+            st["den"] = Cmax * sumK \
+                + (a2 * c2) * (v.T2 ** 2) * (X0 ** 3) * sumK \
+                + (a3 * c3) * ((X0 ** 2) * sumK / v.B) \
+                + (a3 * c4) * (X0 ** 2) * sumQ
+            lam = float(np.log(1.0 / rho))
+            st["lam"] = lam
+            st["lam_X0K0"] = lam * (X0 * v.K0)
+            st["lam_K0"] = lam * v.K0
+            # (30): X0 < 1 (strict; use 1 - eps)
+            st["x0_cap"] = X0 * (1.0 / (1.0 - 1e-9))
+        else:
+            raise ValueError(self.m)
+        return st
+
+    def _conv_constraint(self, z_prev: np.ndarray) -> List[Posy]:
+        v = self.vmap
+        Cmax = self.C_max
+        st = self._conv_static
+        if self.m is not Objective.EXPONENTIAL:
+            M = amgm_monomial(st["sumK"], z_prev)  # condensed sum_n K_n
+
+        if self.m in (Objective.CONSTANT, Objective.JOINT):  # (26) / (40)
+            con = st["overM_head"] / M + st["mid"] + st["overM_tail"] / M
+            return [con] if self.m is Objective.CONSTANT \
+                else [con, st["gamma_cap"]]
+
+        if self.m is Objective.DIMINISHING:                 # (35)
+            rho = self.rho
             K0_prev = float(np.exp(z_prev @ v.K0.A[0]) * v.K0.c[0])
             # RHS phi(K0) = K0 log((K0+rho+1)/(rho+1)) is convex; Taylor lower
             # bound a*K0 - b tightens the constraint (inner approximation).
             a = float(np.log((K0_prev + rho + 1.0) / (rho + 1.0))
                       + K0_prev / (K0_prev + rho + 1.0))
             b = float(K0_prev**2 / (K0_prev + rho + 1.0))
-            lhs = (b1 * c1) / M + b2 * c2 * (v.T2 ** 2) + (b3 * c3) / v.B \
-                + (b3 * c4 * sumQ) / M + b * Cmax
+            lhs = st["overM_head"] / M + st["mid"] \
+                + st["overM_tail"] / M + b * Cmax
             return [lhs / ((Cmax * a) * v.K0)]
 
-        if self.m == "E":                                   # (31)-(33)
-            g, rho = self.gamma, self.rho
-            a1 = (1.0 - rho) / g
-            a2 = g**2 / (1.0 + rho + rho**2)
-            a3 = g / (1.0 + rho)
+        if self.m is Objective.EXPONENTIAL:                 # (31)-(33)
             X0 = v.extra
-            num = const(a1 * c1, v.n) \
-                + (a2 * c2) * (v.T2 ** 2) * sumK \
-                + (a3 * c3) * (sumK / v.B) \
-                + Cmax * (X0 * sumK) \
-                + a3 * c4 * sumQ
-            den = Cmax * sumK \
-                + (a2 * c2) * (v.T2 ** 2) * (X0 ** 3) * sumK \
-                + (a3 * c3) * ((X0 ** 2) * sumK / v.B) \
-                + (a3 * c4) * (X0 ** 2) * sumQ
-            cons = [ratio_to_posy(num, den, z_prev)]
+            cons = [ratio_to_posy(st["num"], st["den"], z_prev)]
             # (28)/(29) sandwich X0 = rho^{K0}.  The Taylor surrogates (32),
             # (33) are *active* at a consistent expansion point, so we relax
             # each by a small margin delta to keep a strict interior for the
@@ -298,34 +343,61 @@ class ParamOptProblem:
             delta = np.exp(-3e-3)
             # (28) -> (32):  X0 log(1/X0) <= X0 K0 log(1/rho)
             X0_prev = float(np.exp(z_prev @ X0.A[0]) * X0.c[0])
-            lam = float(np.log(1.0 / rho))
+            lam = st["lam"]
             a_t, b_t = taylor_xlog1x(X0_prev, v.n, -1)
             # (a_t X0 + b_t) <= X0 K0 lam  ==>  move negative a_t if needed
             if a_t >= 0:
                 lhs32 = a_t * X0 + const(b_t, v.n)
-                den32 = lam * (X0 * v.K0)
+                den32 = st["lam_X0K0"]
             else:
                 lhs32 = const(b_t, v.n)
-                den32 = lam * (X0 * v.K0) + (-a_t) * X0
+                den32 = st["lam_X0K0"] + (-a_t) * X0
             cons.append(ratio_to_posy(lhs32, den32, z_prev) * delta)
             # (29) -> (33):  K0 log(1/rho) <= log(1/X0); use the affine upper
             # bound log(X0) <= aX*X0 + bX  ==>  K0 lam + aX X0 + bX <= 0
             aX, bX = taylor_logx(X0_prev)
             rhs = -bX  # = 1 + log(1/X0_prev) > 0 since X0_prev < 1
             assert rhs > 0
-            cons.append(((lam * v.K0 + aX * X0) / rhs) * delta)
-            # (30): X0 < 1 (strict; use 1 - eps)
-            cons.append(X0 * (1.0 / (1.0 - 1e-9)))
+            cons.append(((st["lam_K0"] + aX * X0) / rhs) * delta)
+            cons.append(st["x0_cap"])                       # (30): X0 < 1
             return cons
 
         raise ValueError(self.m)
+
+    # -- structure / coefficient split ----------------------------------------
+    # The GP sequence of one problem shares a fixed *skeleton*: the objective
+    # and the common constraints (22)-(24) + box bounds never depend on the
+    # expansion point.  Only the convergence-error block (the condensed /
+    # Taylor surrogates) is refreshed per GIA iteration, which is what the
+    # batched engine (repro.opt.structure + repro.opt.gp backends) exploits.
+    @functools.cached_property
+    def skeleton(self) -> Tuple[Posy, Tuple[Posy, ...]]:
+        """(objective, common constraints) — the z-independent GP parts."""
+        return self._objective(), tuple(self._common_constraints())
+
+    @functools.cached_property
+    def packed_skeleton(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The common constraints concatenated to flat ``(log c, A)`` arrays
+        — computed once per problem, reused by every batched-solver pack."""
+        _, common = self.skeleton
+        logc = np.concatenate([np.log(c.c) for c in common])
+        A = np.concatenate([c.A for c in common], axis=0)
+        return logc, A
+
+    def conv_block(self, z_prev: np.ndarray) -> List[Posy]:
+        """The expansion-point-dependent convergence-error constraints.
+
+        ``z_prev`` must already be a consistent expansion point (see
+        :meth:`project_expansion`).
+        """
+        return self._conv_constraint(z_prev)
 
     # -- public API -----------------------------------------------------------
     def build(self, z_prev: np.ndarray) -> GP:
         """The iteration-t approximate GP (Problems 4 / 6 / 8 / 12)."""
         z_prev = self.project_expansion(z_prev)
-        cons = self._common_constraints() + self._conv_constraint(z_prev)
-        return GP(self._objective(), cons)
+        obj, common = self.skeleton
+        return GP(obj, list(common) + self.conv_block(z_prev))
 
     def project_expansion(self, z: np.ndarray) -> np.ndarray:
         """Make the expansion point consistent before building surrogates.
@@ -334,7 +406,7 @@ class ParamOptProblem:
         surrogates built at an inconsistent point have (near-)empty interiors,
         so we re-impose the equality exactly at every expansion.
         """
-        if self.m != "E":
+        if self.m is not Objective.EXPONENTIAL:
             return z
         z = z.copy()
         v = self.vmap
@@ -343,55 +415,103 @@ class ParamOptProblem:
         z[i_x0] = K0 * np.log(self.rho)
         return z
 
+    # the K0 search ladder of z_init: the 1.5x growth sequence the historical
+    # per-point loop walked, precomputed (64 rungs reach ~1.1e11 rounds)
+    _K0_LADDER = None
+
+    @classmethod
+    def _k0_ladder(cls) -> np.ndarray:
+        if cls._K0_LADDER is None:
+            ks = [1]
+            while len(ks) < 64:
+                ks.append(int(np.ceil(ks[-1] * 1.5)))
+            cls._K0_LADDER = np.asarray(ks, dtype=np.float64)
+        return cls._K0_LADDER
+
+    def _grid_CTE(self, ks: np.ndarray, Kn: np.ndarray, B: np.ndarray,
+                  gam_arr: Optional[np.ndarray]):
+        """C/T/E surfaces over (grid point, K0 ladder) — evaluated with the
+        very same :mod:`repro.core` closed forms :meth:`evaluate` uses
+        (they broadcast over the ladder axis), so the feasibility search
+        can never drift from the true cost model."""
+        from ..core import convergence as conv
+        from ..core.cost import energy_cost, time_cost
+        c = self.consts.c
+        qp = self.sys.q_pairs
+        G, L = Kn.shape[0], ks.shape[0]
+        C = np.empty((G, L))
+        T = np.empty((G, L))
+        E = np.empty((G, L))
+        for g in range(G):
+            if self.m is Objective.EXPONENTIAL:
+                C[g] = conv.c_exponential(ks, Kn[g], B[g], self.gamma,
+                                          self.rho, c, qp)
+            elif self.m is Objective.DIMINISHING:
+                C[g] = conv.c_diminishing(ks, Kn[g], B[g], self.gamma,
+                                          self.rho, c, qp)
+            else:   # CONSTANT, or JOINT at the grid's trial gamma
+                gam = (gam_arr[g] if self.m is Objective.JOINT
+                       else self.gamma)
+                C[g] = conv.c_constant(ks, Kn[g], B[g], gam, c, qp)
+            T[g] = time_cost(self.sys, ks, Kn[g], B[g])
+            E[g] = energy_cost(self.sys, ks, Kn[g], B[g])
+        return C, T, E
+
     def z_init(self) -> np.ndarray:
         """Find a *feasible* starting point of the original problem
         (Algorithms 2-5, line 1: "choose any feasible solution").
 
         Searches a small grid over the integer-ish actual variables and picks
         the smallest K0 restoring C <= C_max (C_m is non-increasing in K0).
+        The whole (grid x K0-ladder) search evaluates the closed-form
+        C/T/E surfaces as one broadcast NumPy computation; selection
+        semantics (ladder walk, first C-feasible rung, first-wins energy
+        ties) match the historical per-point loop.
         """
         v = self.vmap
         names = v.names
         z = np.zeros(v.n)
-        best = None
-        gamma_grid = ([None] if self.m != "J"
+        gamma_grid = ([None] if self.m is not Objective.JOINT
                       else [0.5 / self.consts.L, 0.1 / self.consts.L,
                             0.01 / self.consts.L, 1.0 / self.consts.L])
-        for gam in gamma_grid:
-            for Bv in (1, 2, 4, 8, 16, 32, 64, 128):
-                for Kv in (1, 2, 3, 4, 6, 8, 12, 16, 24, 32):
-                    zc = z.copy()
-                    for i, nm in enumerate(names):
-                        if nm == "K0":
-                            zc[i] = 0.0
-                        elif nm.startswith("K") or nm == "l":
-                            zc[i] = np.log(float(Kv))
-                        elif nm == "B":
-                            zc[i] = np.log(float(Bv))
-                        elif nm == "extra" and self.m == "J":
-                            zc[i] = np.log(gam)
-                    Kn = np.array([float(np.exp(k.logvalue(zc))) for k in v.Kn])
-                    B = float(np.exp(v.B.logvalue(zc)))
-                    # smallest K0 with C <= C_max (monotone), bounded by T
-                    K0, ok = 1, False
-                    for _ in range(64):
-                        ev = self.evaluate(K0, Kn, B, gam)
-                        if ev["C"] <= self.C_max * (1 - 1e-3):
-                            ok = ev["T"] <= self.T_max * (1 - 1e-3)
-                            break
-                        if ev["T"] > self.T_max:
-                            break
-                        K0 = int(np.ceil(K0 * 1.5))
-                    if not ok:
-                        continue
-                    ev = self.evaluate(K0, Kn, B, gam)
-                    if best is None or ev["E"] < best[0]:
-                        best = (ev["E"], K0, Kv, Bv, gam)
-        if best is not None:
-            _, K0, Kv, Bv, gam = best
+        B_grid = (1, 2, 4, 8, 16, 32, 64, 128)
+        K_grid = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
+        combos = [(gam, Bv, Kv) for gam in gamma_grid for Bv in B_grid
+                  for Kv in K_grid]
+        G = len(combos)
+        ZC = np.zeros((G, v.n))
+        for i, nm in enumerate(names):
+            if nm.startswith("K") and nm != "K0" or nm == "l":
+                ZC[:, i] = np.log([float(Kv) for _, _, Kv in combos])
+            elif nm == "B":
+                ZC[:, i] = np.log([float(Bv) for _, Bv, _ in combos])
+            elif nm == "extra" and self.m is Objective.JOINT:
+                ZC[:, i] = np.log([gam for gam, _, _ in combos])
+        # paper variables at every grid point via the monomial map
+        Kn = np.stack([np.exp(_log_posy_batch(k, ZC)) for k in v.Kn], axis=1)
+        B = np.exp(_log_posy_batch(v.B, ZC))                       # (G,)
+        gam_arr = (np.array([g for g, _, _ in combos])
+                   if self.m is Objective.JOINT else None)
+        ks = self._k0_ladder()                                     # (L,)
+        C, T, E = self._grid_CTE(ks, Kn, B, gam_arr)               # (G, L)
+        L = ks.shape[0]
+        c_ok = C <= self.C_max * (1 - 1e-3)                        # (G, L)
+        t_viol = T > self.T_max
+        first_c = np.where(c_ok.any(axis=1), c_ok.argmax(axis=1), L)
+        first_t = np.where(t_viol.any(axis=1), t_viol.argmax(axis=1), L)
+        # the ladder walk stops at whichever comes first; C wins ties (the
+        # loop checked C before the time break at each rung)
+        hit = (first_c < L) & (first_c <= first_t)
+        idx = np.where(hit, np.minimum(first_c, L - 1), 0)
+        ok = hit & (T[np.arange(G), idx] <= self.T_max * (1 - 1e-3))
+        if ok.any():
+            E_hit = np.where(ok, E[np.arange(G), idx], np.inf)
+            g_best = int(E_hit.argmin())               # first-wins ties
+            gam, Bv, Kv = combos[g_best]
+            K0 = int(self._k0_ladder()[first_c[g_best]])
         else:  # no feasible grid point; fall back to a benign interior guess
             K0, Kv, Bv, gam = 64, 4, 4, (0.1 / self.consts.L
-                                         if self.m == "J" else None)
+                                         if self.m is Objective.JOINT else None)
         for i, nm in enumerate(names):
             if nm == "K0":
                 z[i] = np.log(float(K0))
@@ -399,7 +519,7 @@ class ParamOptProblem:
                 z[i] = np.log(float(Kv))
             elif nm == "B":
                 z[i] = np.log(float(Bv))
-            elif nm == "extra" and self.m == "J":
+            elif nm == "extra" and self.m is Objective.JOINT:
                 z[i] = np.log(gam)
         Kn = np.array([float(np.exp(k.logvalue(z))) for k in v.Kn])
         ct = self.sys.comp_time_coeff
@@ -416,13 +536,13 @@ class ParamOptProblem:
         from ..core.cost import energy_cost, time_cost
         c = self.consts.c
         qp = self.sys.q_pairs
-        if self.m == "C":
+        if self.m is Objective.CONSTANT:
             C = conv.c_constant(K0, Kn, B, self.gamma, c, qp)
-        elif self.m == "E":
+        elif self.m is Objective.EXPONENTIAL:
             C = conv.c_exponential(K0, Kn, B, self.gamma, self.rho, c, qp)
-        elif self.m == "D":
+        elif self.m is Objective.DIMINISHING:
             C = conv.c_diminishing(K0, Kn, B, self.gamma, self.rho, c, qp)
-        elif self.m == "J":
+        elif self.m is Objective.JOINT:
             assert extra is not None
             C = conv.c_constant(K0, Kn, B, extra, c, qp)
         return {
@@ -435,6 +555,6 @@ class ParamOptProblem:
         ev = self.evaluate(K0, np.asarray(Kn, dtype=np.float64), B, extra)
         ok = (ev["T"] <= self.T_max * (1 + rtol)
               and ev["C"] <= self.C_max * (1 + rtol))
-        if self.m == "J" and extra is not None:
+        if self.m is Objective.JOINT and extra is not None:
             ok = ok and extra <= 1.0 / self.consts.L * (1 + rtol)
         return ok

@@ -1,0 +1,266 @@
+"""Batched solver engine: padded-structure packing, NumPy-vs-jnp backend
+parity, lockstep-batched GIA vs the scalar loop, bisection integer
+recovery, and the Scenario sweep / Pareto API.
+
+The fast subset runs in tier-1; the full (m, family) grid parity sweep is
+marked slow (it compiles one jnp program per structure signature).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (ConstantRule, DiminishingRule, EdgeSystem,
+                       ExponentialRule, MLProblemConstants, Objective,
+                       Scenario, SweepReport, family_names, sweep_scenarios)
+from repro.opt import (GPStructure, ParamOptProblem, min_feasible_K0,
+                       solve_gp, solve_gp_batch, solve_param_opt,
+                       solve_param_opt_batched, structure_signature)
+from repro.opt.gp import _Batched
+
+CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=4)
+
+STEPS = {
+    Objective.CONSTANT: ConstantRule(0.01),
+    Objective.EXPONENTIAL: ExponentialRule(0.02, 0.9995),
+    Objective.DIMINISHING: DiminishingRule(0.02, 600.0),
+    Objective.JOINT: None,
+}
+
+
+def _scenario(family, m, C_max=0.25, T_max=1e5):
+    sys_ = EdgeSystem.paper_sec_vii(dim=1024, N=4)
+    return Scenario(system=sys_, consts=CONSTS, T_max=T_max, C_max=C_max,
+                    family=family, step=STEPS[m])
+
+
+def _problems(family, m, budgets=(0.22, 0.25, 0.3)):
+    return [_scenario(family, m, C_max=c).problem() for c in budgets]
+
+
+# ---------------------------------------------------------------------------
+# structure packing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m", list(Objective))
+def test_packed_system_matches_unpadded(m):
+    """Padding terms contribute exactly zero: per-constraint log-values of
+    the packed arrays equal the unpadded reference for every instance."""
+    probs = _problems("genqsgd", m)
+    zs = [p.z_init() for p in probs]
+    st = GPStructure(probs[0])
+    pack = st.pack_batch(probs, zs)
+    assert pack.batch == len(probs)
+    for i, gp in enumerate(pack.gps):
+        ref = _Batched(gp)
+        z = pack.z0[i]
+        t = pack.con_logc[i] + pack.con_A[i] @ z
+        mx = np.full(pack.m_cons, -np.inf)
+        np.maximum.at(mx, pack.seg, t)
+        s = np.zeros(pack.m_cons)
+        np.add.at(s, pack.seg, np.exp(t - mx[pack.seg]))
+        g_packed = mx + np.log(s)
+        assert np.allclose(g_packed, ref.g(z), rtol=1e-12, atol=1e-12)
+
+
+def test_structure_signature_grouping():
+    pc = _scenario("genqsgd", Objective.CONSTANT).problem()
+    pc2 = _scenario("genqsgd", Objective.CONSTANT, C_max=0.4).problem()
+    pe = _scenario("genqsgd", Objective.EXPONENTIAL).problem()
+    pm = _scenario("pm", Objective.CONSTANT).problem()
+    assert structure_signature(pc) == structure_signature(pc2)
+    assert structure_signature(pc) != structure_signature(pe)
+    assert structure_signature(pc) != structure_signature(pm)
+    with pytest.raises(ValueError, match="structure"):
+        GPStructure(pc).pack_batch([pe], [pe.z_init()])
+    with pytest.raises(ValueError, match="signature"):
+        solve_param_opt_batched([pc, pe], backend="numpy")
+
+
+# ---------------------------------------------------------------------------
+# backend parity: one batched GP solve
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m", [Objective.CONSTANT, Objective.JOINT])
+def test_gp_backends_agree_fast(m):
+    probs = _problems("genqsgd", m)
+    st = GPStructure(probs[0])
+    pack = st.pack_batch(probs, [p.z_init() for p in probs])
+    rn = solve_gp_batch(pack, backend="numpy")
+    rj = solve_gp_batch(pack, backend="jnp")
+    assert np.array_equal(rn.feasible, rj.feasible)
+    assert np.allclose(rn.z, rj.z, atol=1e-6)
+    assert np.allclose(rn.obj, rj.obj, rtol=1e-8)
+
+
+def test_gp_batch_numpy_rows_equal_scalar_solver():
+    probs = _problems("genqsgd", Objective.CONSTANT)
+    st = GPStructure(probs[0])
+    pack = st.pack_batch(probs, [p.z_init() for p in probs])
+    rb = solve_gp_batch(pack, backend="numpy")
+    for i, gp in enumerate(pack.gps):
+        r = solve_gp(gp, pack.z0[i])
+        assert np.array_equal(r.z, rb.z[i])
+        assert r.obj == rb.obj[i] and r.feasible == rb.feasible[i]
+
+
+def test_unknown_backend_rejected():
+    probs = _problems("genqsgd", Objective.CONSTANT)
+    st = GPStructure(probs[0])
+    pack = st.pack_batch(probs, [p.z_init() for p in probs])
+    with pytest.raises(ValueError, match="unknown GP backend"):
+        solve_gp_batch(pack, backend="cvxpy")
+
+
+# ---------------------------------------------------------------------------
+# batched GIA vs the scalar loop
+# ---------------------------------------------------------------------------
+def test_batched_numpy_gia_identical_to_sequential():
+    """backend="numpy" lockstep is the scalar loop row-for-row (bitwise)."""
+    for m in (Objective.CONSTANT, Objective.DIMINISHING):
+        seq = [solve_param_opt(p) for p in _problems("genqsgd", m)]
+        bat = solve_param_opt_batched(_problems("genqsgd", m),
+                                      backend="numpy")
+        for r, b in zip(seq, bat):
+            assert np.array_equal(r.z, b.z)
+            assert (r.K0, r.B, r.feasible, r.converged, r.iterations) == \
+                (b.K0, b.B, b.feasible, b.converged, b.iterations)
+            assert np.array_equal(r.Kn, b.Kn)
+            assert r.E == b.E and r.history == b.history
+
+
+@pytest.mark.parametrize("family,m", [
+    ("genqsgd", Objective.CONSTANT),
+    ("genqsgd", Objective.JOINT),
+    ("pm", Objective.DIMINISHING),
+])
+def test_batched_jnp_gia_matches_scalar_fast(family, m):
+    seq = [solve_param_opt(p) for p in _problems(family, m)]
+    bat = solve_param_opt_batched(_problems(family, m), backend="jnp")
+    for r, b in zip(seq, bat):
+        assert r.feasible == b.feasible
+        assert np.allclose(r.z, b.z, atol=1e-5)
+        assert (r.K0, r.B) == (b.K0, b.B)
+        assert np.array_equal(r.Kn, b.Kn)
+        assert b.E == pytest.approx(r.E, rel=1e-9)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", family_names())
+@pytest.mark.parametrize("m", list(Objective))
+def test_batched_jnp_gia_matches_scalar_full_grid(family, m):
+    """Property over the full (m, family) grid: the jnp engine lands on the
+    scalar NumPy reference's solution — same feasibility verdict, same
+    integer recovery, matching continuous point and costs — including the
+    infeasible (fa, *) / (pr, E) combinations."""
+    probs = _problems(family, m, budgets=(0.25, 0.3))
+    seq = [solve_param_opt(p) for p in _problems(family, m,
+                                                 budgets=(0.25, 0.3))]
+    bat = solve_param_opt_batched(probs, backend="jnp")
+    for r, b in zip(seq, bat):
+        assert r.feasible == b.feasible
+        assert np.allclose(r.z, b.z, atol=1e-4)
+        if r.feasible:
+            assert (r.K0, r.B) == (b.K0, b.B)
+            assert np.array_equal(r.Kn, b.Kn)
+            assert b.E == pytest.approx(r.E, rel=1e-6)
+            assert b.C == pytest.approx(r.C, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# integer recovery bisection
+# ---------------------------------------------------------------------------
+def test_min_feasible_K0_matches_linear_scan():
+    prob = _scenario("genqsgd", Objective.CONSTANT).problem()
+    Kn = np.array([2, 2, 3, 3], dtype=np.int64)
+    for B in (1, 4, 16):
+        K0, ok = min_feasible_K0(prob, Kn, B)
+        # brute force the same definition
+        k, ok_ref = 1, False
+        while k < 10**7:
+            ev = prob.evaluate(k, Kn, B, None)
+            if ev["C"] <= prob.C_max * (1 + 1e-9):
+                ok_ref = ev["T"] <= prob.T_max * (1 + 1e-9)
+                break
+            if ev["T"] > prob.T_max:
+                break
+            k += 1
+        assert ok == ok_ref
+        if ok:
+            assert K0 == k
+
+
+def test_min_feasible_K0_infeasible_budget():
+    prob = _scenario("genqsgd", Objective.CONSTANT, C_max=1e-9,
+                     T_max=10.0).problem()
+    _, ok = min_feasible_K0(prob, np.array([1, 1, 1, 1]), 1)
+    assert not ok
+
+
+# ---------------------------------------------------------------------------
+# Scenario.sweep / SweepReport
+# ---------------------------------------------------------------------------
+def test_scenario_sweep_matches_pointwise_optimize():
+    scn = _scenario("genqsgd", Objective.CONSTANT)
+    grid = [0.22, 0.3]
+    rep = scn.sweep(over={"cmax": grid}, backend="jnp")
+    assert len(rep) == 2 and rep.backend == "jnp" and rep.n_groups == 1
+    for c, row, plan in zip(grid, rep.rows, rep.plans):
+        ref = dataclasses.replace(scn, C_max=c).optimize()
+        assert row["C_max"] == c and row["feasible"] and plan.feasible
+        assert (plan.K0, plan.Kn, plan.B) == (ref.K0, ref.Kn, ref.B)
+        assert plan.predicted_E == pytest.approx(ref.predicted_E, rel=1e-9)
+    # tighter budget costs more energy (Fig. 5a monotonicity)
+    assert rep.rows[0]["E"] > rep.rows[1]["E"]
+
+
+def test_sweep_heterogeneous_groups_and_names():
+    scns = [_scenario("genqsgd", Objective.CONSTANT),
+            _scenario("genqsgd", Objective.JOINT),
+            _scenario("genqsgd", Objective.CONSTANT, C_max=0.3)]
+    rep = sweep_scenarios(scns, names=["a", "b", "c"], backend="numpy",
+                          parallel=False)
+    assert [r["name"] for r in rep] == ["a", "b", "c"]
+    assert rep.n_groups == 2         # C-budget pair batches, J solos
+    assert [r["m"] for r in rep] == ["C", "J", "C"]
+
+
+def test_sweep_over_validation():
+    scn = _scenario("genqsgd", Objective.CONSTANT)
+    with pytest.raises(ValueError, match="cannot sweep over"):
+        scn.sweep(over={"warp_factor": [9]})
+    with pytest.raises(ValueError, match="duplicate"):
+        scn.sweep(over={"cmax": [0.2], "C_max": [0.3]})
+
+
+def _report_from(points):
+    rows = tuple({"name": f"p{i}", "E": e, "T": t, "C": c, "feasible": f}
+                 for i, (e, t, c, f) in enumerate(points))
+    return SweepReport(rows=rows, plans=(None,) * len(rows),
+                       backend="numpy", n_groups=1, wall_time_s=0.0)
+
+
+def test_pareto_front_dominance():
+    rep = _report_from([
+        (1.0, 1.0, 1.0, True),     # kept
+        (2.0, 2.0, 2.0, True),     # dominated by p0
+        (0.5, 3.0, 1.0, True),     # kept: better E, worse T
+        (1.0, 1.0, 1.0, True),     # tie with p0: both survive
+        (0.1, 0.1, 0.1, False),    # infeasible: filtered by default
+    ])
+    front = rep.pareto_front()
+    assert [r["name"] for r in front] == ["p0", "p2", "p3"]
+    assert [r["name"] for r in rep.pareto_front(feasible_only=False)] == \
+        ["p4"]
+    row, _ = rep.best()
+    assert row["name"] == "p2"
+    with pytest.raises(ValueError, match="no feasible"):
+        _report_from([(1, 1, 1, False)]).best()
+
+
+def test_sweep_report_csv(tmp_path):
+    rep = _report_from([(1.0, 2.0, 3.0, True)])
+    rep = dataclasses.replace(
+        rep, rows=({**rep.rows[0], "Kn": (1, 2, 3)},))
+    path = rep.to_csv(str(tmp_path / "s.csv"))
+    lines = open(path).read().splitlines()
+    assert lines[0].split(",")[:2] == ["name", "E"]
+    assert "1|2|3" in lines[1]
