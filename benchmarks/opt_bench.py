@@ -1,34 +1,58 @@
-"""Solver-engine throughput: batched (jnp) vs sequential (scalar NumPy) GIA.
+"""Solver-engine throughput: fused / batched (jnp) vs sequential GIA.
 
-Measures the Fig.-5 grid — (budget, algo) points over Gen-C/E/D/O — solved
-two ways:
+Two workloads, three engines:
 
-  * ``sequential``: the historical loop, one scalar ``Scenario.optimize()``
-    per point (pure-NumPy interior point);
-  * ``batched``: one ``sweep_scenarios`` call — points group into one
-    batched GIA call path per objective, each group's GP instances solving
-    in single jitted+vmapped jnp calls, groups in parallel threads.
+  * ``fig5`` — the 20-point Fig.-5 grid ((budget, algo) over Gen-C/E/D/O),
+    solved sequentially (one scalar ``Scenario.optimize()`` per point, pure
+    NumPy), through the per-iteration jitted backend (``jnp``: one vmapped
+    GP solve per GIA iteration, host-side surrogate refresh), and through
+    the fused device-resident backend (``jnp-fused``: the whole GIA —
+    refresh included — is one ``lax.while_loop`` program per structure
+    signature, zero host syncs per outer iteration);
+  * ``sweep1024`` — a 1024-point ``Scenario.sweep`` (32 C_max x 32
+    constant-rule gammas, one structure signature), the north-star
+    sweep-scale workload: one compile, one device call, asserted via the
+    fused engine's trace counter.
 
-The batched engine is timed twice: cold (includes XLA compile of each
-structure, paid once per process) and warm (the steady-state cost that
-matters for big sweeps).  Rows land in results/benchmarks/ so the speedup
-is tracked in the perf trajectory.
+Device backends are timed cold (includes XLA compile, paid once per
+structure signature per process — the JAX persistent compilation cache is
+enabled below, so later processes skip it) and warm (steady state).  Rows
+land in results/benchmarks/ as before, and the perf trajectory is written
+to ``BENCH_opt.json`` at the repo root (schema: grid size, backend, warm
+solves/sec, compile time).
 
-    PYTHONPATH=src python -m benchmarks.opt_bench           # full Fig.5 grid
+    PYTHONPATH=src python -m benchmarks.opt_bench           # full run
     PYTHONPATH=src python -m benchmarks.opt_bench --smoke   # tiny CI subset
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
-from repro.api import sweep_scenarios
+import numpy as np
 
 from .common import RESULTS, get_constants, make_scenario, paper_system, \
     write_csv
 
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_opt.json")
 ALGOS = ("Gen-C", "Gen-E", "Gen-D", "Gen-O")
 C_GRID = (0.2, 0.25, 0.3, 0.4, 0.6)
+
+
+def _enable_compilation_cache():
+    """Persistent XLA compilation cache: one compile per structure signature
+    per *machine*, not per process (cold numbers below still report the
+    first in-process call, which may be served from this cache)."""
+    import jax
+
+    path = os.environ.get("JAX_COMPILATION_CACHE_DIR",
+                          os.path.join(RESULTS, "xla_cache"))
+    os.makedirs(path, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    return path
 
 
 def _scenarios(sys_, consts, algos, c_grid):
@@ -40,13 +64,9 @@ def _scenarios(sys_, consts, algos, c_grid):
     return scns, names
 
 
-def run(tag="opt_bench", smoke=False):
-    consts = get_constants()
-    sys_ = paper_system()
-    algos = ("Gen-C", "Gen-O") if smoke else ALGOS
-    c_grid = C_GRID[:2] if smoke else C_GRID
-    if smoke:
-        tag = f"{tag}_smoke"       # don't clobber the full-grid artifact
+def _fig5(sys_, consts, algos, c_grid):
+    from repro.api import sweep_scenarios
+
     scns, names = _scenarios(sys_, consts, algos, c_grid)
     n = len(scns)
 
@@ -54,44 +74,134 @@ def run(tag="opt_bench", smoke=False):
     seq_plans = [s.optimize() for s in scns]
     t_seq = time.time() - t0
 
-    t0 = time.time()
-    rep_cold = sweep_scenarios(scns, names=names, backend="jnp")
-    t_cold = time.time() - t0
-    t0 = time.time()
-    rep = sweep_scenarios(scns, names=names, backend="jnp")
-    t_warm = time.time() - t0
+    modes = [("sequential", t_seq, 0.0, None)]
+    for backend in ("jnp", "jnp-fused"):
+        t0 = time.time()
+        sweep_scenarios(scns, names=names, backend=backend)
+        t_cold = time.time() - t0
+        t0 = time.time()
+        rep = sweep_scenarios(scns, names=names, backend=backend)
+        t_warm = time.time() - t0
+        modes.append((backend, t_warm, max(0.0, t_cold - t_warm), rep))
 
     # parity sanity on the fly — report, don't abort: cross-backend float
     # divergence can legally move an integer by one on knife-edge points
     # (the test suite owns the strict parity assertions)
+    rep = modes[-1][3]
     mismatch = sum(
         p.feasible != row["feasible"]
         or abs(p.predicted_E - row["E"]) > 1e-3 * max(abs(p.predicted_E), 1)
         for p, row in zip(seq_plans, rep.rows))
     if mismatch:
         print(f"  WARNING: {mismatch}/{n} points differ between sequential "
-              f"and batched beyond 0.1% — inspect before trusting timings")
+              f"and fused beyond 0.1% — inspect before trusting timings")
 
-    rows = [{
-        "grid_points": n, "mode": mode, "wall_s": round(t, 4),
-        "solves_per_s": round(n / t, 3), "speedup_vs_seq": round(t_seq / t, 2),
-        "groups": rep.n_groups,
-    } for mode, t in [("sequential", t_seq), ("batched_cold", t_cold),
-                      ("batched_warm", t_warm)]]
+    rows = []
+    for mode, t_warm, compile_s, _ in modes:
+        rows.append({
+            "grid_points": n, "mode": mode, "wall_s": round(t_warm, 4),
+            "solves_per_s": round(n / t_warm, 3),
+            "speedup_vs_seq": round(t_seq / t_warm, 2),
+            "compile_s": round(compile_s, 2),
+        })
+        print(f"  {mode:14s} {t_warm:8.2f}s {n / t_warm:8.3f} solves/s "
+              f"speedup {t_seq / t_warm:5.2f}x (compile {compile_s:.1f}s)")
+    return rows
+
+
+def _sweep1024(sys_, consts, n_cmax, n_gamma):
+    """One-signature sweep at 1e3+-point scale: C_max x constant-rule gamma.
+
+    Sequential rate is measured on an evenly-spaced subsample (a full scalar
+    pass would take minutes and adds no information — the per-point cost is
+    flat across the grid).
+    """
+    import dataclasses
+
+    from repro.api import ConstantRule
+    from repro.api.sweep import sweep_scenarios
+    from repro.opt import RefreshPlan
+    from repro.opt import gia_jax
+
+    base, _ = make_scenario("Gen-C", sys_, consts, T_max=1e5, C_max=0.25)
+    scns = [dataclasses.replace(base, C_max=float(c),
+                                step=ConstantRule(float(g)))
+            for c in np.linspace(0.2, 0.6, n_cmax)
+            for g in np.geomspace(0.004, 0.02, n_gamma)]
+    n = len(scns)
+    key = RefreshPlan.build([scns[0].problem()]).signature_key
+    base = gia_jax.trace_count(key)
+
+    t0 = time.time()
+    sweep_scenarios(scns, backend="jnp-fused", parallel=False)
+    t_cold = time.time() - t0
+    traces_cold = gia_jax.trace_count(key) - base
+    t0 = time.time()
+    rep = sweep_scenarios(scns, backend="jnp-fused", parallel=False)
+    t_warm = time.time() - t0
+    compiles = gia_jax.trace_count(key) - base
+
+    sub = scns[:: max(1, n // 16)]
+    t0 = time.time()
+    for s in sub:
+        s.optimize()
+    seq_per_pt = (time.time() - t0) / len(sub)
+
+    feasible = sum(r["feasible"] for r in rep.rows)
+    out = {
+        "points": n, "signatures": rep.n_groups,
+        "compiles": int(compiles), "cold_s": round(t_cold, 2),
+        "warm_s": round(t_warm, 2),
+        "warm_solves_per_s": round(n / t_warm, 2),
+        "sequential_s_per_point": round(seq_per_pt, 4),
+        "sequential_points_sampled": len(sub),
+        "speedup_vs_seq": round(seq_per_pt * n / t_warm, 2),
+        "feasible_points": int(feasible),
+    }
+    print(f"  sweep{n}: warm {t_warm:.2f}s ({n / t_warm:.1f} solves/s), "
+          f"{out['speedup_vs_seq']}x vs sequential "
+          f"({seq_per_pt * 1e3:.0f} ms/pt on {len(sub)}-pt subsample), "
+          f"{compiles} compile(s) across both passes "
+          f"({traces_cold} cold)")
+    return out
+
+
+def run(tag="opt_bench", smoke=False):
+    cache_dir = _enable_compilation_cache()
+    consts = get_constants()
+    sys_ = paper_system()
+    algos = ("Gen-C", "Gen-O") if smoke else ALGOS
+    c_grid = C_GRID[:2] if smoke else C_GRID
+    if smoke:
+        tag = f"{tag}_smoke"       # don't clobber the full-grid artifact
+    t_all = time.time()
+    rows = _fig5(sys_, consts, algos, c_grid)
+    sweep = _sweep1024(sys_, consts, *( (8, 8) if smoke else (32, 32) ))
     path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", rows,
                      ["grid_points", "mode", "wall_s", "solves_per_s",
-                      "speedup_vs_seq", "groups"])
-    for r in rows:
-        print(f"  {r['mode']:14s} {r['wall_s']:8.2f}s "
-              f"{r['solves_per_s']:8.3f} solves/s "
-              f"speedup {r['speedup_vs_seq']:5.2f}x")
-    return {"rows": len(rows), "csv": path,
-            "derived": rows[-1]["speedup_vs_seq"], "dt": t_seq + t_cold + t_warm}
+                      "speedup_vs_seq", "compile_s"])
+
+    bench = {
+        "schema": 2,
+        "smoke": bool(smoke),
+        "fig5_grid": {"grid_points": rows[0]["grid_points"],
+                      "backends": rows},
+        "sweep": sweep,
+        "compilation_cache_dir": cache_dir,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    fused = rows[-1]
+    return {"rows": len(rows), "csv": path, "json": BENCH_JSON,
+            "derived": f"{fused['speedup_vs_seq']}x_fig5_"
+                       f"{sweep['speedup_vs_seq']}x_sweep",
+            "dt": time.time() - t_all}
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="4-point subset for CI smoke runs")
+                    help="4-point grid + 64-point sweep for CI smoke runs")
     args = ap.parse_args()
     print(run(smoke=args.smoke))

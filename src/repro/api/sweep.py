@@ -13,9 +13,10 @@ makes that a first-class operation:
 
 Scenarios are grouped by optimizer structure signature ``(m, family, N)``;
 each group solves through one batched GIA call path
-(:func:`repro.opt.solve_param_opt_batched` — the jitted, vmapped jnp
-interior point by default), and independent groups can solve concurrently
-(the GIL is released inside compiled solves).
+(:func:`repro.opt.solve_param_opt_batched` — by default the *fused*
+device-resident loop of :mod:`repro.opt.gia_jax`, one compiled program and
+one device call per group, surrogate refresh included), and independent
+groups can solve concurrently (the GIL is released inside compiled solves).
 """
 from __future__ import annotations
 
@@ -133,7 +134,7 @@ def _resolve_backend(backend: str) -> str:
         return backend
     try:
         import jax  # noqa: F401
-        return "jnp"
+        return "jnp-fused"
     except Exception:
         return "numpy"
 
@@ -144,11 +145,15 @@ def sweep_scenarios(scenarios: Sequence, names: Optional[Sequence[str]] = None,
     """Optimize many scenarios through the batched solver engine.
 
     Scenarios are grouped by structure signature; each group is one
-    :func:`~repro.opt.gia.solve_param_opt_batched` call (``backend="jnp"``
-    solves a group's GP instances in single jitted+vmapped calls), and
-    groups run concurrently on a small thread pool when ``parallel``.
-    Heterogeneous scenario lists (mixed families / step rules / systems)
-    are fine — that's what the grouping is for.
+    :func:`~repro.opt.gia.solve_param_opt_batched` call — with the default
+    ``backend="jnp-fused"`` the group's whole GIA (surrogate refresh +
+    interior point + convergence masks) is one jitted device program,
+    compiled once per signature, so a 1024-point single-signature grid is
+    one compile + one device call (``backend="jnp"`` keeps the per-iteration
+    jitted GP solves with a host-side refresh; ``"numpy"`` is the scalar
+    reference) — and groups run concurrently on a small thread pool when
+    ``parallel``.  Heterogeneous scenario lists (mixed families / step
+    rules / systems) are fine — that's what the grouping is for.
     """
     scenarios = list(scenarios)
     if names is not None:

@@ -6,6 +6,12 @@ fixed-shape systems (:mod:`repro.opt.structure`) that either the NumPy
 reference interior point or the jitted+vmapped jnp backend
 (:mod:`repro.opt.gp_jax`) solve whole batches of at once —
 ``solve_param_opt_batched`` is the lockstep GIA over such a batch.
+``backend="jnp-fused"`` goes all the way: the surrogate coefficient refresh
+itself runs on device (:mod:`repro.opt.refresh` traces a static per-signature
+refresh plan from the skeleton) and the entire GIA — condensation, phase-I/
+Newton interior point, convergence/stall masks — is one jitted
+``lax.while_loop`` per structure signature (:mod:`repro.opt.gia_jax`), with
+zero host syncs per outer iteration.
 """
 from .posy import Posy, const, var, monomial
 from .gp import (GP, GPResult, BatchedGPResult, GP_BACKENDS,
@@ -14,5 +20,6 @@ from .condense import amgm_monomial, ratio_to_posy
 from .problems import (Objective, ParamOptProblem, VarMap, identity_varmap,
                        pm_varmap, fa_varmap, pr_varmap)
 from .structure import GPStructure, PackedBatch, structure_signature
-from .gia import (GIAResult, min_feasible_K0, solve_param_opt,
-                  solve_param_opt_batched)
+from .refresh import RefreshPlan
+from .gia import (GIAResult, min_feasible_K0, min_feasible_K0_joint,
+                  solve_param_opt, solve_param_opt_batched)

@@ -18,12 +18,23 @@ def amgm_monomial(p: Posy, z_prev: np.ndarray) -> Posy:
     """AM-GM condensation: posynomial p(x) >= prod_k (u_k(x)/beta_k)^beta_k,
     with beta_k = u_k(x_prev)/p(x_prev); the RHS is a monomial touching p at
     x_prev (value + gradient).  Used to under-approximate *denominators*.
+
+    The weights are a max-shifted softmax over the term logs, so extreme
+    expansion points can neither overflow a term value nor divide by a
+    zero sum; terms whose weight underflows to exactly 0.0 are masked out
+    of the log-coefficient (``0 * log 0`` must contribute 0, not -inf) and
+    contribute exactly 0.0 to the exponent row.  The jnp mirror of this
+    arithmetic lives in :mod:`repro.opt.refresh` — keep the two in lockstep
+    (the fused-refresh parity suite asserts agreement to 1 ulp).
     """
-    u = p.terms(z_prev)
-    beta = u / u.sum()
+    t = np.log(p.c) + p.A @ z_prev
+    mx = t.max()
+    e = np.exp(t - mx)
+    beta = e / e.sum()
     # monomial coeff = prod (c_k/beta_k)^beta_k, exponents = sum beta_k A_k
-    keep = beta > 1e-300
-    logc = float(np.sum(beta[keep] * (np.log(p.c[keep]) - np.log(beta[keep]))))
+    keep = beta > 0.0
+    logc = float(np.sum(np.where(
+        keep, beta * (np.log(p.c) - np.log(np.where(keep, beta, 1.0))), 0.0)))
     A = (beta[:, None] * p.A).sum(axis=0, keepdims=True)
     return Posy(np.array([np.exp(logc)]), A)
 
@@ -38,7 +49,7 @@ def ratio_to_posy(num: Posy, den: Posy, z_prev: np.ndarray) -> Posy:
     return num / amgm_monomial(den, z_prev)
 
 
-def taylor_xlog1x(x_prev: float, n: int, idx: int):
+def taylor_xlog1x(x_prev: float):
     """Affine upper bound of phi(x) = x*log(1/x) (concave) at x_prev:
         phi(x) <= (log(1/x_prev) - 1) * x + x_prev.
     Returns (a, b) with phi(x) <= a*x + b; ``a`` may be negative (x_prev > 1/e)

@@ -251,6 +251,8 @@ def solve_gp_batch(pack, backend: str = "numpy") -> BatchedGPResult:
     ``backend="numpy"`` loops the reference scalar solver; ``backend="jnp"``
     dispatches the whole batch to one jitted+vmapped interior point
     (:mod:`repro.opt.gp_jax`), compiled once per padded structure shape.
+    (The GIA-level ``backend="jnp-fused"`` never reaches this function — it
+    fuses the whole outer loop in :mod:`repro.opt.gia_jax`.)
     """
     if backend == "jnp" and backend not in GP_BACKENDS:
         from . import gp_jax  # noqa: F401  (registers itself on import)

@@ -344,7 +344,7 @@ class ParamOptProblem:
             # (28) -> (32):  X0 log(1/X0) <= X0 K0 log(1/rho)
             X0_prev = float(np.exp(z_prev @ X0.A[0]) * X0.c[0])
             lam = st["lam"]
-            a_t, b_t = taylor_xlog1x(X0_prev, v.n, -1)
+            a_t, b_t = taylor_xlog1x(X0_prev)
             # (a_t X0 + b_t) <= X0 K0 lam  ==>  move negative a_t if needed
             if a_t >= 0:
                 lhs32 = a_t * X0 + const(b_t, v.n)

@@ -1,0 +1,282 @@
+"""Device-side CGP condensation: the GIA coefficient refresh as tensor updates.
+
+Since PR 3 the inner GP solve is one jitted, vmapped interior point, but every
+GIA outer iteration still round-tripped to the host to rebuild surrogate
+coefficients in Python (``condense.amgm_monomial`` / Taylor bounds →
+``problems.conv_block`` → re-pack).  This module closes that gap: a
+:class:`RefreshPlan` is traced **once per structure signature** from a
+problem's skeleton — which coefficient slots of the packed ``(log c, A,
+segment-id)`` tensors depend on the expansion point z, and how — and
+:func:`make_refresh` emits the matching jnp update, so the whole refresh is a
+handful of vectorized ops inside the fused solver loop
+(:mod:`repro.opt.gia_jax`) with zero host syncs.
+
+The device arithmetic mirrors the NumPy surrogate constructors operation for
+operation (same products, same reciprocals, same max-shifted softmax weights
+in the AM-GM condensation), so the refreshed coefficients agree with
+``conv_block`` to ulp level in log-space — asserted across the full
+(m, family, step-rule) grid by the parity suite.
+
+Plan layout per objective m (term counts are z-independent, so every slot is
+static; only the m=E surrogate (32) flips between 2 and 1 live terms, which
+the plan handles with one padded slot):
+
+  C:  [ head/M | mid | tail/M ]                       M = AM-GM(sum_n K_n)
+  J:  [ head/M | mid | tail/M ] [ gamma_cap ]
+  D:  [ (head/M | mid | tail/M | b·C_max) / (C_max·a·K0) ]   a,b Taylor(K0)
+  E:  [ num/M_den ] [ (32) 2-slot branch ] [ (33) ] [ x0_cap ]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from .problems import Objective, ParamOptProblem
+from .structure import PAD_LOGC, structure_signature
+
+__all__ = ["RefreshPlan", "make_refresh", "make_project"]
+
+#: the (32)/(33) interior margin of problems._conv_constraint, bit-identical
+_DELTA = float(np.exp(-3e-3))
+
+
+def _row(posys) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack 1-term posynomials into ((B,) coeffs, (B, n) exponent rows)."""
+    return (np.stack([p.c[0] for p in posys]),
+            np.stack([p.A[0] for p in posys]))
+
+
+def _terms(posys) -> Tuple[np.ndarray, np.ndarray]:
+    """Stack same-shape posynomials into ((B, K) coeffs, (B, K, n))."""
+    return np.stack([p.c for p in posys]), np.stack([p.A for p in posys])
+
+
+@dataclasses.dataclass
+class RefreshPlan:
+    """One structure signature's fused-solver inputs.
+
+    Static layout (``caps``, ``seg``, objective kind) keys the compiled
+    program; the per-instance tensors (objective, packed skeleton, and the
+    m-specific surrogate coefficients in ``arrays``) are its runtime
+    arguments.  Built once per batch — the GIA loop never re-packs.
+    """
+
+    m: Objective
+    n: int                      # number of optimization variables
+    m_cons: int                 # constraint count incl. conv block
+    caps: Tuple[int, ...]       # per-conv-constraint term capacities
+    seg: np.ndarray             # (T,) int32 constraint id per packed term
+    i_x0: int                   # index of the X0 variable (m=E), else -1
+    obj_logc: np.ndarray        # (B, K_obj)
+    obj_A: np.ndarray           # (B, K_obj, n)
+    skel_logc: np.ndarray       # (B, T_common) z-independent constraints
+    skel_A: np.ndarray          # (B, T_common, n)
+    arrays: Dict[str, np.ndarray]   # m-specific refresh coefficients
+
+    @property
+    def batch(self) -> int:
+        return self.obj_logc.shape[0]
+
+    @property
+    def signature_key(self) -> tuple:
+        """Hashable static layout — one compiled fused program per value."""
+        return (self.m.value, self.n, self.m_cons, self.caps,
+                self.seg.tobytes(), self.i_x0)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, problems: Sequence[ParamOptProblem]) -> "RefreshPlan":
+        problems = list(problems)
+        sig = structure_signature(problems[0])
+        for p in problems[1:]:
+            if structure_signature(p) != sig:
+                raise ValueError(
+                    f"refresh plan needs one structure signature, got both "
+                    f"{sig} and {structure_signature(p)}")
+        p0 = problems[0]
+        m, v = p0.m, p0.vmap
+        sts = [p._conv_static for p in problems]
+        st0 = sts[0]
+
+        objs = [p.skeleton[0] for p in problems]
+        obj_c, obj_A = _terms(objs)
+        skels = [p.packed_skeleton for p in problems]
+        skel_logc = np.stack([s[0] for s in skels])
+        skel_A = np.stack([s[1] for s in skels])
+        common_sizes = [c.n_terms for c in p0.skeleton[1]]
+
+        a: Dict[str, np.ndarray] = {}
+        if m is Objective.EXPONENTIAL:
+            a["num_c"], a["num_A"] = _terms([st["num"] for st in sts])
+            den_c, a["den_A"] = _terms([st["den"] for st in sts])
+            a["den_logc"] = np.log(den_c)
+            a["lamX0K0_c"], a["lamX0K0_A"] = _row(
+                [st["lam_X0K0"] for st in sts])
+            a["lamX0K0_logc"] = np.log(a["lamX0K0_c"])
+            a["lamK0_c"], a["lamK0_A"] = _row([st["lam_K0"] for st in sts])
+            x0cap_c, a["x0cap_A"] = _terms([st["x0_cap"] for st in sts])
+            a["x0cap_logc"] = np.log(x0cap_c)
+            a["X0_c"], a["X0_A"] = _row([p.vmap.extra for p in problems])
+            a["K0_c"], a["K0_A"] = _row([p.vmap.K0 for p in problems])
+            a["K0_logc"] = np.log(a["K0_c"])
+            a["log_rho"] = np.log(np.array([p.rho for p in problems],
+                                           dtype=np.float64))
+            caps = (st0["num"].n_terms, 2, 2, 1)
+            i_x0 = v.names.index("extra")
+        else:
+            sumK_c, a["sumK_A"] = _terms([st["sumK"] for st in sts])
+            a["sumK_logc"] = np.log(sumK_c)
+            a["head_c"], a["head_A"] = _terms(
+                [st["overM_head"] for st in sts])
+            mid_c, a["mid_A"] = _terms([st["mid"] for st in sts])
+            a["mid_c"], a["mid_logc"] = mid_c, np.log(mid_c)
+            a["tail_c"], a["tail_A"] = _terms(
+                [st["overM_tail"] for st in sts])
+            base = (st0["overM_head"].n_terms + st0["mid"].n_terms
+                    + st0["overM_tail"].n_terms)
+            if m is Objective.JOINT:
+                gcap_c, a["gcap_A"] = _terms([st["gamma_cap"] for st in sts])
+                a["gcap_logc"] = np.log(gcap_c)
+                caps = (base, 1)
+            elif m is Objective.DIMINISHING:
+                a["rho"] = np.array([p.rho for p in problems],
+                                    dtype=np.float64)
+                a["Cmax"] = np.array([p.C_max for p in problems],
+                                     dtype=np.float64)
+                a["K0_c"], a["K0_A"] = _row([p.vmap.K0 for p in problems])
+                caps = (base + 1,)
+            else:
+                caps = (base,)
+            i_x0 = -1
+
+        sizes = np.asarray(common_sizes + list(caps), dtype=np.int64)
+        seg = np.repeat(np.arange(sizes.size, dtype=np.int32), sizes)
+        return cls(m=m, n=v.n, m_cons=int(sizes.size), caps=caps, seg=seg,
+                   i_x0=i_x0, obj_logc=np.log(obj_c), obj_A=obj_A,
+                   skel_logc=skel_logc, skel_A=skel_A, arrays=a)
+
+
+# ---------------------------------------------------------------------------
+# the jnp refresh — mirrors condense.py / problems._conv_constraint exactly
+# ---------------------------------------------------------------------------
+def _amgm_jnp(logc, A, z):
+    """jnp mirror of :func:`repro.opt.condense.amgm_monomial` (same shifted
+    softmax, same 0·log0 masking) on precomputed term logs."""
+    import jax.numpy as jnp
+
+    t = logc + A @ z
+    mx = jnp.max(t)
+    e = jnp.exp(t - mx)
+    beta = e / jnp.sum(e)
+    keep = beta > 0.0
+    logc_m = jnp.sum(jnp.where(
+        keep, beta * (logc - jnp.log(jnp.where(keep, beta, 1.0))), 0.0))
+    A_m = jnp.sum(beta[:, None] * A, axis=0)
+    return logc_m, A_m
+
+
+def make_refresh(m: Objective, n: int, caps: Tuple[int, ...]):
+    """The per-instance coefficient refresh ``(z, arrays) -> (logc, A)`` for
+    one conv block, as pure jnp (vmapped/jitted by the fused solver).
+
+    Output shapes are ``(sum(caps),)`` / ``(sum(caps), n)`` — the conv
+    segment of the packed constraint tensors; unused slots carry
+    :data:`~repro.opt.structure.PAD_LOGC`.
+    """
+    import jax.numpy as jnp
+
+    if m in (Objective.CONSTANT, Objective.JOINT):
+
+        def refresh(z, a):
+            logc_m, A_m = _amgm_jnp(a["sumK_logc"], a["sumK_A"], z)
+            inv = 1.0 / jnp.exp(logc_m)
+            logc = jnp.concatenate([jnp.log(a["head_c"] * inv),
+                                    a["mid_logc"],
+                                    jnp.log(a["tail_c"] * inv)])
+            A = jnp.concatenate([a["head_A"] - A_m, a["mid_A"],
+                                 a["tail_A"] - A_m])
+            if m is Objective.JOINT:
+                logc = jnp.concatenate([logc, a["gcap_logc"]])
+                A = jnp.concatenate([A, a["gcap_A"]])
+            return logc, A
+
+        return refresh
+
+    if m is Objective.DIMINISHING:
+
+        def refresh(z, a):
+            logc_m, A_m = _amgm_jnp(a["sumK_logc"], a["sumK_A"], z)
+            rho, cmax = a["rho"], a["Cmax"]
+            k0 = jnp.exp(z @ a["K0_A"]) * a["K0_c"]
+            # Taylor lower bound of phi(K0) = K0 log((K0+rho+1)/(rho+1))
+            at = (jnp.log((k0 + rho + 1.0) / (rho + 1.0))
+                  + k0 / (k0 + rho + 1.0))
+            bt = k0 ** 2 / (k0 + rho + 1.0)
+            inv = 1.0 / jnp.exp(logc_m)
+            lhs_c = jnp.concatenate([a["head_c"] * inv, a["mid_c"],
+                                     a["tail_c"] * inv, (bt * cmax)[None]])
+            lhs_A = jnp.concatenate([a["head_A"] - A_m, a["mid_A"],
+                                     a["tail_A"] - A_m, jnp.zeros((1, n))])
+            den_c = a["K0_c"] * (cmax * at)
+            return (jnp.log(lhs_c * (1.0 / den_c)),
+                    lhs_A - a["K0_A"][None, :])
+
+        return refresh
+
+    if m is Objective.EXPONENTIAL:
+
+        def refresh(z, a):
+            # (31): num / AM-GM(den)
+            logc_md, A_md = _amgm_jnp(a["den_logc"], a["den_A"], z)
+            c1_logc = jnp.log(a["num_c"] * (1.0 / jnp.exp(logc_md)))
+            c1_A = a["num_A"] - A_md
+            x0 = jnp.exp(z @ a["X0_A"]) * a["X0_c"]
+            # (32): X0 log(1/X0) <= X0 K0 log(1/rho), Taylor at X0_prev;
+            # a negative slope moves across the inequality (2-term branch
+            # collapses to 1 live term + one padded slot)
+            at = jnp.log(1.0 / x0) - 1.0
+            bt = x0
+            pos_logc = jnp.log(jnp.stack([a["X0_c"] * at, bt])
+                               * (1.0 / a["lamX0K0_c"]) * _DELTA)
+            pos_A = (jnp.stack([a["X0_A"], jnp.zeros(n)])
+                     - a["lamX0K0_A"][None, :])
+            d32_logc = jnp.stack([a["lamX0K0_logc"],
+                                  jnp.log(a["X0_c"] * (-at))])
+            d32_A = jnp.stack([a["lamX0K0_A"], a["X0_A"]])
+            logc_m32, A_m32 = _amgm_jnp(d32_logc, d32_A, z)
+            neg_logc = jnp.stack(
+                [jnp.log(bt * (1.0 / jnp.exp(logc_m32)) * _DELTA),
+                 jnp.full((), PAD_LOGC)])
+            neg_A = jnp.stack([-A_m32, jnp.zeros(n)])
+            c2_logc = jnp.where(at >= 0, pos_logc, neg_logc)
+            c2_A = jnp.where(at >= 0, pos_A, neg_A)
+            # (33): K0 log(1/rho) + aX X0 <= -bX, affine bound of log X0
+            ax = 1.0 / x0
+            rhs = -(jnp.log(x0) - 1.0)
+            c3_logc = jnp.log(jnp.stack([a["lamK0_c"], a["X0_c"] * ax])
+                              * (1.0 / rhs) * _DELTA)
+            c3_A = jnp.stack([a["lamK0_A"], a["X0_A"]])
+            return (jnp.concatenate([c1_logc, c2_logc, c3_logc,
+                                     a["x0cap_logc"]]),
+                    jnp.concatenate([c1_A, c2_A, c3_A, a["x0cap_A"]]))
+
+        return refresh
+
+    raise ValueError(m)
+
+
+def make_project(m: Objective, i_x0: int):
+    """jnp mirror of :meth:`ParamOptProblem.project_expansion` — re-imposes
+    X0 = rho^{K0} exactly before every m=E refresh; identity otherwise."""
+    import jax.numpy as jnp
+
+    if m is not Objective.EXPONENTIAL:
+        return lambda z, a: z
+
+    def project(z, a):
+        k0 = jnp.exp(a["K0_logc"] + a["K0_A"] @ z)
+        return z.at[i_x0].set(k0 * a["log_rho"])
+
+    return project

@@ -14,8 +14,9 @@ from repro.api import (ConstantRule, DiminishingRule, EdgeSystem,
                        ExponentialRule, MLProblemConstants, Objective,
                        Scenario, SweepReport, family_names, sweep_scenarios)
 from repro.opt import (GPStructure, ParamOptProblem, min_feasible_K0,
-                       solve_gp, solve_gp_batch, solve_param_opt,
-                       solve_param_opt_batched, structure_signature)
+                       min_feasible_K0_joint, solve_gp, solve_gp_batch,
+                       solve_param_opt, solve_param_opt_batched,
+                       structure_signature)
 from repro.opt.gp import _Batched
 
 CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=4)
@@ -91,6 +92,71 @@ def test_gp_backends_agree_fast(m):
     assert np.allclose(rn.obj, rj.obj, rtol=1e-8)
 
 
+# ---------------------------------------------------------------------------
+# fused device-resident GIA (backend="jnp-fused")
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family,m", [
+    ("genqsgd", Objective.CONSTANT),
+    ("genqsgd", Objective.EXPONENTIAL),
+    ("pm", Objective.DIMINISHING),
+    ("genqsgd", Objective.JOINT),
+])
+def test_fused_gia_matches_numpy_fast(family, m):
+    """The fused single-while-loop engine lands on the NumPy reference:
+    same feasibility, same GIA iteration counts and history length, same
+    integer recovery, continuous point to 1e-5."""
+    rn = solve_param_opt_batched(_problems(family, m), backend="numpy")
+    rf = solve_param_opt_batched(_problems(family, m), backend="jnp-fused")
+    for a, b in zip(rn, rf):
+        assert a.feasible == b.feasible
+        assert a.iterations == b.iterations
+        assert np.allclose(a.z, b.z, atol=1e-5)
+        if a.feasible:
+            assert (a.K0, a.B) == (b.K0, b.B)
+            assert np.array_equal(a.Kn, b.Kn)
+            assert b.E == pytest.approx(a.E, rel=1e-9)
+        assert b.history == pytest.approx(a.history, rel=1e-9)
+
+
+def test_fused_one_compile_per_signature():
+    """Re-solving a same-signature batch reuses the compiled fused program —
+    the whole GIA (refresh included) stays on device with zero host round
+    trips per outer iteration, so the trace counter must not move."""
+    from repro.opt import gia_jax
+    from repro.opt.refresh import RefreshPlan
+
+    probs = _problems("genqsgd", Objective.CONSTANT)
+    key = RefreshPlan.build(probs).signature_key
+    solve_param_opt_batched(probs, backend="jnp-fused")
+    n1 = gia_jax.trace_count(key)
+    assert n1 >= 1
+    solve_param_opt_batched(
+        _problems("genqsgd", Objective.CONSTANT, budgets=(0.21, 0.26, 0.31)),
+        backend="jnp-fused")
+    assert gia_jax.trace_count(key) == n1
+
+
+def test_fused_stalled_instance_regression():
+    """A hopeless instance inside a fused batch (budgets no point can meet;
+    its GIA stalls out through phase-I retries) must neither crash the
+    device-side refresh nor stretch the healthy instances' lockstep: the
+    healthy row's iterations, history, and solution match its solo solve."""
+    healthy = _scenario("genqsgd", Objective.CONSTANT, C_max=0.25).problem()
+    hopeless = _scenario("genqsgd", Objective.CONSTANT, C_max=1e-9,
+                         T_max=10.0).problem()
+    solo = solve_param_opt_batched([healthy], backend="jnp-fused")[0]
+    bad, good = solve_param_opt_batched([hopeless, healthy],
+                                        backend="jnp-fused")
+    assert not bad.feasible and not bad.converged
+    assert good.feasible == solo.feasible
+    assert good.iterations == solo.iterations
+    # rows are independent up to XLA's batch-shape-dependent vectorization
+    assert good.history == pytest.approx(solo.history, rel=1e-12)
+    assert np.allclose(good.z, solo.z, atol=1e-9)
+    assert (good.K0, good.B) == (solo.K0, solo.B)
+    assert np.array_equal(good.Kn, solo.Kn)
+
+
 def test_gp_batch_numpy_rows_equal_scalar_solver():
     probs = _problems("genqsgd", Objective.CONSTANT)
     st = GPStructure(probs[0])
@@ -144,17 +210,18 @@ def test_batched_jnp_gia_matches_scalar_fast(family, m):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "jnp-fused"])
 @pytest.mark.parametrize("family", family_names())
 @pytest.mark.parametrize("m", list(Objective))
-def test_batched_jnp_gia_matches_scalar_full_grid(family, m):
-    """Property over the full (m, family) grid: the jnp engine lands on the
-    scalar NumPy reference's solution — same feasibility verdict, same
+def test_batched_jnp_gia_matches_scalar_full_grid(backend, family, m):
+    """Property over the full (m, family) grid: both device engines land on
+    the scalar NumPy reference's solution — same feasibility verdict, same
     integer recovery, matching continuous point and costs — including the
     infeasible (fa, *) / (pr, E) combinations."""
     probs = _problems(family, m, budgets=(0.25, 0.3))
     seq = [solve_param_opt(p) for p in _problems(family, m,
                                                  budgets=(0.25, 0.3))]
-    bat = solve_param_opt_batched(probs, backend="jnp")
+    bat = solve_param_opt_batched(probs, backend=backend)
     for r, b in zip(seq, bat):
         assert r.feasible == b.feasible
         assert np.allclose(r.z, b.z, atol=1e-4)
@@ -163,6 +230,8 @@ def test_batched_jnp_gia_matches_scalar_full_grid(family, m):
             assert np.array_equal(r.Kn, b.Kn)
             assert b.E == pytest.approx(r.E, rel=1e-6)
             assert b.C == pytest.approx(r.C, rel=1e-6)
+            if r.gamma is not None:
+                assert b.gamma == pytest.approx(r.gamma, rel=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +262,36 @@ def test_min_feasible_K0_infeasible_budget():
                      T_max=10.0).problem()
     _, ok = min_feasible_K0(prob, np.array([1, 1, 1, 1]), 1)
     assert not ok
+
+
+def test_min_feasible_K0_joint_beats_any_fixed_gamma():
+    """The closed-form gamma-optimized recovery: for fixed (Kn, B) it finds
+    a (K0, gamma) meeting the error budget with K0 no larger than the best
+    K0 any gamma on a fine grid achieves (E is increasing in K0 and
+    gamma-independent, so smaller K0 == better joint integer point)."""
+    prob = _scenario("genqsgd", Objective.JOINT).problem()
+    cap = 1.0 / CONSTS.L
+    for Kn_v, B in ((2, 2), (4, 1), (3, 4)):
+        Kn = np.full(4, Kn_v, dtype=np.int64)
+        K0, g, ok = min_feasible_K0_joint(prob, Kn, B)
+        assert ok and 0 < g <= cap * (1 + 1e-12)
+        assert prob.evaluate(K0, Kn, B, g)["C"] <= prob.C_max * (1 + 1e-9)
+        best_grid = None
+        for gg in np.exp(np.linspace(np.log(1e-4 * cap), np.log(cap), 160)):
+            k, okk = min_feasible_K0(prob, Kn, B, extra=float(gg))
+            if okk:
+                best_grid = k if best_grid is None else min(best_grid, k)
+        assert best_grid is not None and K0 <= best_grid
+
+
+def test_joint_restart_keeps_gen_o_at_or_below_gen_c():
+    """Lemma 4 / Table-claim guard: with the Gen-C-seeded restart and the
+    gamma-optimizing integer recovery, the jointly-optimized objective never
+    lands above the fixed-constant-rule solution at the same budgets."""
+    rc = _scenario("genqsgd", Objective.CONSTANT).optimize()
+    ro = _scenario("genqsgd", Objective.JOINT).optimize()
+    assert ro.feasible and rc.feasible
+    assert ro.predicted_E <= rc.predicted_E * (1 + 1e-3)
 
 
 # ---------------------------------------------------------------------------

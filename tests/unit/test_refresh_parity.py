@@ -1,0 +1,136 @@
+"""Device-refresh parity: the jnp surrogate condensation of
+``repro.opt.refresh`` must match ``condense.py``'s NumPy constructors (via
+``ParamOptProblem.conv_block``) at the ulp level in log-space, across the
+full (m, family, step-rule) grid.
+
+The AM-GM / Taylor arithmetic is mirrored operation for operation, so the
+C / D / J refreshes agree to <= 1 ulp (empirically bitwise on CPU).  The
+m=E refresh routes two z-dependent scalars through ``exp``/``log`` twice,
+where XLA's transcendental kernels may legally differ from libm by an ulp
+each — those slots are allowed <= 4 ulp.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (ConstantRule, DiminishingRule, EdgeSystem,
+                       ExponentialRule, MLProblemConstants, Objective,
+                       Scenario, family_names)
+from repro.opt.condense import amgm_monomial, taylor_xlog1x
+from repro.opt.posy import Posy
+from repro.opt.refresh import RefreshPlan, make_refresh
+from repro.opt.structure import PAD_LOGC
+
+CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=4)
+
+STEPS = {
+    Objective.CONSTANT: ConstantRule(0.01),
+    Objective.EXPONENTIAL: ExponentialRule(0.02, 0.9995),
+    Objective.DIMINISHING: DiminishingRule(0.02, 600.0),
+    Objective.JOINT: None,
+}
+
+#: ulp budget per objective (log-space); see module docstring
+ULP_BUDGET = {m: (4.0 if m is Objective.EXPONENTIAL else 1.0)
+              for m in Objective}
+
+
+def _problems(family, m, budgets=(0.22, 0.25, 0.3)):
+    sys_ = EdgeSystem.paper_sec_vii(dim=1024, N=4)
+    return [Scenario(system=sys_, consts=CONSTS, T_max=1e5, C_max=c,
+                     family=family, step=STEPS[m]).problem()
+            for c in budgets]
+
+
+def _ulps(got, ref):
+    denom = np.spacing(np.maximum(np.abs(got), np.abs(ref)))
+    return np.abs(got - ref) / denom
+
+
+def _device_refresh(probs, zs):
+    import jax
+    from jax.experimental import enable_x64
+
+    plan = RefreshPlan.build(probs)
+    refresh = make_refresh(plan.m, plan.n, plan.caps)
+    with enable_x64():
+        logc, A = jax.jit(jax.vmap(refresh, in_axes=(0, 0)))(
+            np.stack(zs), plan.arrays)
+        return plan, np.asarray(logc), np.asarray(A)
+
+
+@pytest.mark.parametrize("family", family_names())
+@pytest.mark.parametrize("m", list(Objective))
+def test_device_refresh_matches_condense(family, m):
+    """Full-grid parity of the fused coefficient refresh: per-constraint
+    packed (log c, A) from the device equal conv_block's surrogates to the
+    ulp budget, padding slots carry exactly PAD_LOGC, and exponent rows
+    agree to float64 resolution."""
+    probs = _problems(family, m)
+    # expansion points along a GIA trajectory, not just z_init: the scalar
+    # loop supplies realistic later-iteration points
+    zs = []
+    for p in probs:
+        z = p.project_expansion(p.z_init())
+        zs.append(z)
+    plan, logc_d, A_d = _device_refresh(probs, zs)
+    budget = ULP_BUDGET[m]
+    for i, p in enumerate(probs):
+        conv = p.conv_block(zs[i])
+        assert len(conv) == len(plan.caps)
+        off = 0
+        for cap, c in zip(plan.caps, conv):
+            k = c.n_terms
+            assert k <= cap
+            got_logc = logc_d[i, off:off + k]
+            got_A = A_d[i, off:off + k]
+            ref_logc = np.log(c.c)
+            assert np.all(_ulps(got_logc, ref_logc) <= budget), (
+                m, family, _ulps(got_logc, ref_logc).max())
+            assert np.abs(got_A - c.A).max(initial=0.0) <= 4e-15
+            # padding slots contribute exactly 0.0 to every log-sum-exp
+            assert np.all(logc_d[i, off + k:off + cap] == PAD_LOGC)
+            off += cap
+
+
+def test_device_refresh_tracks_scalar_gia_trajectory():
+    """Parity holds at later expansion points too — replay two scalar GIA
+    steps and compare the refresh at each visited point."""
+    from repro.opt.gp import solve_gp
+
+    p = _problems("genqsgd", Objective.CONSTANT, budgets=(0.25,))[0]
+    z = p.project_expansion(p.z_init())
+    for _ in range(2):
+        plan, logc_d, _ = _device_refresh([p], [z])
+        ref = np.concatenate([np.log(c.c) for c in p.conv_block(z)])
+        got = np.concatenate([logc_d[0, o:o + c.n_terms] for o, c in zip(
+            np.cumsum((0,) + plan.caps[:-1]), p.conv_block(z))])
+        assert np.all(_ulps(got, ref) <= 1.0)
+        res = solve_gp(p.build(z), z)
+        z = p.project_expansion(res.z)
+
+
+# ---------------------------------------------------------------------------
+# condense.py hardening (satellite): stable AM-GM weights, taylor signature
+# ---------------------------------------------------------------------------
+def test_amgm_monomial_extreme_z_no_inf():
+    """Zero-weight terms must not inject -inf/nan into the condensed
+    monomial: at extreme expansion points some term weights underflow to
+    exactly 0.0 (and the term values themselves would overflow a naive
+    u/u.sum())."""
+    p = Posy(np.array([1.0, 2.0, 3.0]),
+             np.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0]]))
+    for z in (np.array([800.0, -800.0]), np.array([-800.0, 800.0]),
+              np.array([710.0, 710.0])):
+        mono = amgm_monomial(p, z)
+        assert np.isfinite(np.log(mono.c[0]))
+        assert np.all(np.isfinite(mono.A))
+        # property (ii): equality at the expansion point (log-space)
+        assert mono.logvalue(z) == pytest.approx(p.logvalue(z), abs=1e-9)
+
+
+def test_taylor_xlog1x_signature_and_bound():
+    a, b = taylor_xlog1x(0.5)
+    xs = np.linspace(1e-6, 0.999999, 64)
+    phi = xs * np.log(1.0 / xs)
+    assert np.all(phi <= a * xs + b + 1e-12)
+    assert 0.5 * np.log(1.0 / 0.5) == pytest.approx(a * 0.5 + b)
