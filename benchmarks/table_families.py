@@ -1,0 +1,144 @@
+"""Cross-family benchmark: GenQSGD vs GQFedWAvg on the Fig.-5 grid.
+
+Expands the Fig.-5 (C_max, step-rule) grid over both shipped algorithm
+families (:mod:`repro.families`) and solves everything through the fused
+device-resident backend (``jnp-fused``: one compiled program per
+(m, family) structure signature, surrogate refresh included).  Reports per
+family the feasible count, the energy/time Pareto front, and the
+minimum-energy plan per budget — the cross-family trade-off the GQFedWAvg
+generalization exposes (momentum tightens the drift term's budget share;
+the rotated codec pays pow2-padded messages + a seed word for
+input-independent quantization error).
+
+Writes ``BENCH_families.json`` at the repo root (schema mirroring
+``BENCH_opt.json``: grid size, warm solves/sec, per-family Pareto rows) and
+a tidy CSV under ``results/benchmarks/``.
+
+    PYTHONPATH=src python -m benchmarks.table_families           # full grid
+    PYTHONPATH=src python -m benchmarks.table_families --smoke   # CI subset
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+from .common import RESULTS, get_constants, make_scenario, paper_system, \
+    write_csv
+from .opt_bench import _enable_compilation_cache
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_FAMILIES_JSON",
+                            "BENCH_families.json")
+FAMILY_GRID = ("genqsgd", "gqfedwavg")
+ALGOS = ("Gen-C", "Gen-E", "Gen-D", "Gen-O")
+C_GRID = (0.2, 0.25, 0.3, 0.4, 0.6)
+
+
+def _scenarios(sys_, consts, algos, c_grid):
+    scns, names = [], []
+    for family in FAMILY_GRID:
+        for cmax in c_grid:
+            for algo in algos:
+                scn, _ = make_scenario(algo, sys_, consts, T_max=1e5,
+                                       C_max=cmax)
+                scns.append(dataclasses.replace(scn, family=family))
+                names.append(f"{family}/{algo}")
+    return scns, names
+
+
+def _family_summary(rows):
+    feas = [r for r in rows if r["feasible"]]
+    front = sorted(({"name": r["name"], "C_max": r["C_max"], "m": r["m"],
+                     "E": r["E"], "T": r["T"], "C": r["C"]}
+                    for r in feas), key=lambda r: r["E"])
+    # non-dominated in (E, T) among feasible points
+    pareto, best_T = [], float("inf")
+    for r in front:
+        if r["T"] < best_T:
+            pareto.append(r)
+            best_T = r["T"]
+    min_e = {}
+    for r in feas:
+        c = r["C_max"]
+        if c not in min_e or r["E"] < min_e[c]["E"]:
+            min_e[c] = {"E": r["E"], "T": r["T"], "m": r["m"]}
+    return {"points": len(rows), "feasible": len(feas),
+            "pareto_ET": pareto, "min_E_per_budget": min_e}
+
+
+def run(tag="table_families", smoke=False):
+    from repro.api import sweep_scenarios
+
+    cache_dir = _enable_compilation_cache()
+    consts = get_constants()
+    sys_ = paper_system()
+    algos = ("Gen-C", "Gen-O") if smoke else ALGOS
+    c_grid = C_GRID[:2] if smoke else C_GRID
+    if smoke:
+        tag = f"{tag}_smoke"
+    scns, names = _scenarios(sys_, consts, algos, c_grid)
+    n = len(scns)
+
+    t0 = time.time()
+    sweep_scenarios(scns, names=names, backend="jnp-fused")
+    t_cold = time.time() - t0
+    t0 = time.time()
+    rep = sweep_scenarios(scns, names=names, backend="jnp-fused")
+    t_warm = time.time() - t0
+
+    by_family = {f: [r for r in rep.rows if r["family"] == f]
+                 for f in FAMILY_GRID}
+    families = {f: _family_summary(rows) for f, rows in by_family.items()}
+
+    print(f"  {n} points ({len(FAMILY_GRID)} families x {len(algos)} algos "
+          f"x {len(c_grid)} budgets), {rep.n_groups} structure groups, "
+          f"warm {t_warm:.2f}s ({n / t_warm:.2f} solves/s)")
+    for f in FAMILY_GRID:
+        s = families[f]
+        print(f"  {f:10s} feasible {s['feasible']}/{s['points']}, "
+              f"Pareto(E,T): " + " ".join(
+                  f"[{p['m']}@{p['C_max']}: E={p['E']:.4g} T={p['T']:.4g}]"
+                  for p in s["pareto_ET"][:4]))
+    ratios = {}
+    for c in c_grid:
+        eg = families["genqsgd"]["min_E_per_budget"].get(c)
+        ew = families["gqfedwavg"]["min_E_per_budget"].get(c)
+        if eg and ew:
+            ratios[str(c)] = round(ew["E"] / eg["E"], 4)
+            print(f"  C_max={c}: min-E gqfedwavg/genqsgd = {ratios[str(c)]}")
+
+    csv_rows = [{**r, "Kn": "|".join(str(k) for k in r["Kn"])}
+                for r in rep.rows]
+    path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", csv_rows,
+                     ["name", "family", "m", "C_max", "K0", "Kn", "B",
+                      "gamma", "E", "T", "C", "feasible", "iterations"])
+    bench = {
+        "schema": 1,
+        "smoke": bool(smoke),
+        "grid": {"points": n, "families": list(FAMILY_GRID),
+                 "algos": list(algos), "c_grid": list(c_grid)},
+        "backend": {"name": "jnp-fused", "structure_groups": rep.n_groups,
+                    "cold_s": round(t_cold, 2), "warm_s": round(t_warm, 2),
+                    "warm_solves_per_s": round(n / t_warm, 3)},
+        "families": families,
+        "min_E_ratio_gqfedwavg_over_genqsgd": ratios,
+        "compilation_cache_dir": cache_dir,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    return {"rows": n, "csv": path, "json": BENCH_JSON,
+            "derived": "_".join(f"{f}:{families[f]['feasible']}/"
+                                f"{families[f]['points']}"
+                                for f in FAMILY_GRID),
+            "dt": round(t_cold + t_warm, 2)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="8-point grid for CI smoke runs")
+    args = ap.parse_args()
+    print(run(smoke=args.smoke))

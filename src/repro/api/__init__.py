@@ -27,14 +27,19 @@ This package is that loop as three objects:
     report = scenario.run(plan, task=task)  # Algorithm 1
     print(plan.describe()); print(report.summary())
 
-Families (``genqsgd`` | ``pm`` | ``fa`` | ``pr``) and step rules live in
-small registries (:mod:`repro.api.registries`) so successor algorithm
-variants plug in without touching the facade.
+Algorithm families (``genqsgd`` | ``pm`` | ``fa`` | ``pr`` |
+``gqfedwavg``) are full :class:`~repro.families.AlgorithmFamily` objects
+(:mod:`repro.families`): a family owns its decision-variable map, its
+convergence-block reweighting, its runtime aggregation / local-update
+hooks, and its codec preconditioner — so successor algorithm variants plug
+in without touching the facade.  Step rules live in the small registry in
+:mod:`repro.api.registries`.
 """
 from ..core.convergence import MLProblemConstants
 from ..core.cost import EdgeSystem
 from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
                                StepRule, make_rule)
+from ..families import AlgorithmFamily, GQFedWAvgFamily, get_family
 from ..opt.problems import Objective
 from .plan import Plan, RunReport
 from .registries import (FAMILIES, STEP_RULES, family_names, make_step_rule,
@@ -50,7 +55,7 @@ __all__ = [
     "ConstantRule", "ExponentialRule", "DiminishingRule", "StepRule",
     "make_rule", "make_step_rule", "make_varmap",
     "STEP_RULES", "FAMILIES", "register_step_rule", "register_family",
-    "family_names",
+    "family_names", "AlgorithmFamily", "GQFedWAvgFamily", "get_family",
     "MNISTTask", "QuadraticTask", "SpmdTask",
     "GenQSGDTrainer", "round_comm_bits",
 ]

@@ -49,6 +49,12 @@ class Plan:
     wire: str = "packed"                 # pricing wire format (EdgeSystem's)
     objective: Objective = Objective.CONSTANT
     family: str = "genqsgd"
+    # family runtime hooks (repro.families), frozen into the Plan so both
+    # runtime configs derive the same aggregation/local-update/codec rules
+    codec_kind: str = "qsgd"             # make_codec preconditioner kind
+    agg_weights: Optional[Tuple[float, ...]] = None  # w_n (None = mean)
+    momentum: float = 0.0                # local-update momentum beta
+    normalize: bool = False              # normalized local updates
     # predictions at (K0, Kn, B) — NaN for manual plans
     predicted_E: float = float("nan")    # energy (J), eq. (18)
     predicted_T: float = float("nan")    # time (s), eq. (17)
@@ -69,12 +75,25 @@ class Plan:
         if len(self.sn) != len(self.Kn):
             raise ValueError(f"sn has {len(self.sn)} entries for "
                              f"{len(self.Kn)} workers")
+        if self.agg_weights is not None:
+            from ..families import check_agg_weights
+            object.__setattr__(self, "agg_weights",
+                               check_agg_weights(self.agg_weights,
+                                                 len(self.Kn)))
+        if self.codec_kind == "rotated" and self.q_dim is not None:
+            raise ValueError(
+                "rotation preconditioning and per-bucket norms are mutually "
+                "exclusive (the rotation already isotropizes the message); "
+                "a rotated Plan must carry q_dim=None")
 
     # ------------------------------------------------------------------
     @classmethod
     def manual(cls, K0: int, Kn, B: int, step_rule: StepRule,
                s0: Optional[int] = None, sn=None, dim: int = 0,
-               q_dim: Optional[int] = None, wire: str = "packed") -> "Plan":
+               q_dim: Optional[int] = None, wire: str = "packed",
+               family: str = "genqsgd", codec_kind: str = "qsgd",
+               agg_weights=None, momentum: float = 0.0,
+               normalize: bool = False) -> "Plan":
         """A Plan not produced by the optimizer (predictions are NaN)."""
         Kn = tuple(int(k) for k in Kn)
         if isinstance(sn, (int, type(None))):
@@ -86,7 +105,9 @@ class Plan:
             obj = Objective.CONSTANT
         return cls(K0=int(K0), Kn=Kn, B=int(B), step_rule=step_rule,
                    s0=s0, sn=tuple(sn), dim=int(dim), q_dim=q_dim, wire=wire,
-                   objective=obj)
+                   objective=obj, family=family, codec_kind=codec_kind,
+                   agg_weights=agg_weights, momentum=momentum,
+                   normalize=normalize)
 
     @property
     def N(self) -> int:
@@ -107,12 +128,22 @@ class Plan:
         server multicast, priced by ``codec.wire_bits``."""
         d = self.dim if dim is None else int(dim)
         w = self.wire if wire is None else wire
-        up = sum(make_codec(s, wire=w, bucket=self.q_dim).wire_bits(d)
+        # an explicit wire naming a runtime aggregation transport prices
+        # what the SPMD runtime actually moves: per-tensor QSGD levels —
+        # rotation is a whole-model-vector preconditioner the sharded
+        # transports cannot carry (see to_fed_config).  Everything else
+        # (wire=None, or a pure pricing format like "packed") uses the
+        # Plan's own codec kind, whether passed explicitly or defaulted.
+        transport = wire is not None and w in RUNTIME_WIRES
+        kind = "qsgd" if transport else self.codec_kind
+        up = sum(make_codec(s, wire=w, bucket=self.q_dim,
+                            kind=kind).wire_bits(d)
                  for s in self.sn)
         # mirror FedConfig.server_codec: an exact multicast (s0=None) is raw
         # f32 regardless of the worker wire (the packing wire can't carry it)
         down_w = "f32" if (self.s0 is None and w == "int4") else w
-        down = make_codec(self.s0, wire=down_w, bucket=self.q_dim).wire_bits(d)
+        down = make_codec(self.s0, wire=down_w, bucket=self.q_dim,
+                          kind=kind).wire_bits(d)
         return up + down
 
     @property
@@ -123,11 +154,17 @@ class Plan:
 
     # -- runtime configs (the tentpole: one source of truth) ------------
     def to_genqsgd_config(self, max_K0: Optional[int] = None) -> GenQSGDConfig:
-        """The single-process reference runtime's config (Algorithm 1)."""
+        """The single-process reference runtime's config (Algorithm 1, plus
+        the Plan's family hooks: aggregation weights, momentum/normalized
+        local updates, codec preconditioner)."""
         K0 = self.K0 if max_K0 is None else min(self.K0, int(max_K0))
         return GenQSGDConfig(K0=K0, Kn=self.Kn, B=self.B,
                              step_rule=self.step_rule, s0=self.s0,
-                             sn=list(self.sn), bucket=self.q_dim)
+                             sn=list(self.sn), bucket=self.q_dim,
+                             agg_weights=self.agg_weights,
+                             momentum=self.momentum,
+                             normalize=self.normalize,
+                             codec_kind=self.codec_kind)
 
     def to_fed_config(self, wire: str = "f32", microbatch: int = 1,
                       aux_weight: float = 0.01) -> FedConfig:
@@ -137,6 +174,14 @@ class Plan:
         travel); the Plan's ``s0/sn/q_dim`` decide *what* is sent.  Pairs
         the transport cannot carry — e.g. ``wire="int4"`` with s > 7 — are
         rejected here, before any mesh work starts.
+
+        The family's aggregation weights and momentum/normalized local
+        updates carry through; the rotation preconditioner does **not** —
+        it acts on the whole flattened model vector, while the sharded
+        runtime quantizes per tensor, so SPMD transports always move plain
+        QSGD levels (the reference backend runs the rotated codec; the
+        RunReport's measured comm-bits are priced at the transport actually
+        used either way).
         """
         from ..fed.runtime import FedConfig  # lazy: SPMD runtime stack
 
@@ -153,7 +198,9 @@ class Plan:
                     f"quantizers the wire supports or pick a wider wire")
         return FedConfig(n_workers=self.N, Kn=self.Kn, s0=self.s0,
                          sn=self.sn, wire=wire, bucket=self.q_dim,
-                         microbatch=microbatch, aux_weight=aux_weight)
+                         microbatch=microbatch, aux_weight=aux_weight,
+                         agg_weights=self.agg_weights,
+                         momentum=self.momentum, normalize=self.normalize)
 
     def describe(self) -> str:
         sn = set(self.sn)

@@ -1,28 +1,36 @@
-"""Registries behind the Scenario facade (mirroring the codec registry of
-:mod:`repro.compress`): step-size rules keyed by the objective letter, and
-algorithm families keyed by name.
+"""Registries behind the Scenario facade: step-size rules keyed by the
+objective letter, and a back-compat view of the algorithm-family registry.
 
-A *family* is one of the paper's algorithm parameterizations — GenQSGD with
-every variable free, or a baseline obtained by pinning/tying variables
-through a :class:`~repro.opt.problems.VarMap` (Sec. VII):
+Algorithm families now live in :mod:`repro.families` — an
+:class:`~repro.families.AlgorithmFamily` owns the varmap *and* the
+convergence/runtime/codec hooks the pipeline used to hardcode for GenQSGD:
 
-  genqsgd  — K0, K_1..K_N, B all free (Problems 3/5/7/11)
-  pm       — PM-SGD: K_n ≡ 1
-  fa       — FedAvg: K_n = l * I_n / B (l a shared relaxed-integer variable)
-  pr       — PR-SGD: B ≡ 1
+  genqsgd    — K0, K_1..K_N, B all free (Problems 3/5/7/11)
+  pm         — PM-SGD: K_n ≡ 1
+  fa         — FedAvg: K_n = l * I_n / B (l a shared relaxed-integer var)
+  pr         — PR-SGD: B ≡ 1
+  gqfedwavg  — GQFedWAvg: weighted aggregation, normalized momentum local
+               updates, rotation-preconditioned quantization
 
-New families (e.g. GQFedWAvg's weighted-aggregation variants) register a
-varmap factory here and immediately work with ``Scenario.optimize`` and the
-whole benchmark suite.
+This module keeps the historical surface working: ``FAMILIES`` is a mapping
+view whose values are varmap factories (reading goes straight to the new
+registry; *mutating* it directly is deprecated and warns), and
+``register_family`` accepts either a legacy varmap factory — wrapped into a
+:class:`~repro.families.GenQSGDFamily` — or a full ``AlgorithmFamily``.
 """
 from __future__ import annotations
 
+import warnings
+from collections.abc import MutableMapping
 from typing import Callable, Dict, Optional
 
 from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
                                StepRule)
-from ..opt.problems import (Objective, VarMap, fa_varmap, identity_varmap,
-                            pm_varmap, pr_varmap)
+from ..families import AlgorithmFamily, GenQSGDFamily, get_family
+from ..families import family_names as _family_names
+from ..families import register as _register
+from ..families import registry as _fam_registry
+from ..opt.problems import Objective, VarMap
 
 __all__ = [
     "STEP_RULES", "FAMILIES", "register_step_rule", "register_family",
@@ -57,36 +65,78 @@ def make_step_rule(objective, gamma: float,
 
 
 # ---------------------------------------------------------------------------
-# algorithm families: name -> varmap factory
+# algorithm families: back-compat view over repro.families
 # ---------------------------------------------------------------------------
-# factory(N, with_extra, samples_per_worker) -> VarMap
+# legacy factory signature: factory(N, with_extra, samples_per_worker) -> VarMap
 FamilyFactory = Callable[[int, bool, float], VarMap]
 
-FAMILIES: Dict[str, FamilyFactory] = {}
+
+def register_family(name: str, factory) -> None:
+    """Register an algorithm family under ``name``.
+
+    ``factory`` may be a full :class:`~repro.families.AlgorithmFamily`
+    (registered as-is under its own hooks) or a legacy varmap factory
+    ``(N, with_extra, samples_per_worker) -> VarMap`` (wrapped into a
+    :class:`~repro.families.GenQSGDFamily`, i.e. GenQSGD semantics for
+    aggregation / local updates / codec).
+    """
+    if isinstance(factory, AlgorithmFamily):
+        if factory.key != name:
+            import dataclasses
+            factory = dataclasses.replace(factory, key=str(name))
+        _register(factory, overwrite=True)
+        return
+    _register(GenQSGDFamily(key=str(name), varmap_factory=factory),
+              overwrite=True)
 
 
-def register_family(name: str, factory: FamilyFactory) -> None:
-    FAMILIES[str(name)] = factory
+class _FamiliesShim(MutableMapping):
+    """``FAMILIES`` of old: a name -> varmap-factory mapping.
+
+    Reads delegate to :mod:`repro.families`; direct mutation still works
+    but is deprecated — it can only describe a GenQSGD-semantics family, so
+    new code should ``repro.families.register`` an ``AlgorithmFamily``
+    (or call :func:`register_family`).
+    """
+
+    def __getitem__(self, name) -> FamilyFactory:
+        try:
+            fam = get_family(name)
+        except ValueError:
+            raise KeyError(name) from None
+        return fam.make_varmap
+
+    def __setitem__(self, name, factory) -> None:
+        warnings.warn(
+            "mutating repro.api.FAMILIES directly is deprecated; use "
+            "repro.families.register(AlgorithmFamily(...)) or "
+            "repro.api.register_family(name, factory)",
+            DeprecationWarning, stacklevel=2)
+        register_family(name, factory)
+
+    def __delitem__(self, name) -> None:
+        warnings.warn(
+            "mutating repro.api.FAMILIES directly is deprecated",
+            DeprecationWarning, stacklevel=2)
+        del _fam_registry._REGISTRY[name]
+
+    def __iter__(self):
+        return iter(_family_names())
+
+    def __len__(self) -> int:
+        return len(_family_names())
 
 
-register_family("genqsgd",
-                lambda N, we, spw: identity_varmap(N, with_extra=we))
-register_family("pm", lambda N, we, spw: pm_varmap(N, with_extra=we))
-register_family("fa",
-                lambda N, we, spw: fa_varmap(N, [float(spw)] * N,
-                                             with_extra=we))
-register_family("pr", lambda N, we, spw: pr_varmap(N, with_extra=we))
+FAMILIES = _FamiliesShim()
 
 
 def family_names() -> tuple:
-    return tuple(FAMILIES)
+    return _family_names()
 
 
 def make_varmap(family: str, N: int, with_extra: bool,
                 samples_per_worker: float) -> VarMap:
-    try:
-        factory = FAMILIES[family]
-    except KeyError:
-        raise ValueError(f"unknown family {family!r}; registered: "
-                         f"{sorted(FAMILIES)}") from None
-    return factory(N, with_extra, samples_per_worker)
+    """The family's decision-variable structure; unknown names raise with a
+    nearest-match suggestion pointing at the :mod:`repro.families` registry.
+    """
+    return get_family(family).make_varmap(N, with_extra, samples_per_worker)

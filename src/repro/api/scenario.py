@@ -17,6 +17,7 @@ extraction.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Optional, Union
 
@@ -27,10 +28,10 @@ from ..core.convergence import MLProblemConstants
 from ..core.genqsgd import GenQSGD
 from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
                                StepRule)
+from ..families import AlgorithmFamily, resolve
 from ..opt.gia import solve_param_opt
 from ..opt.problems import Objective, ParamOptProblem, VarMap
 from .plan import Plan, RunReport
-from .registries import FAMILIES, make_varmap
 from .tasks import MNISTTask
 
 __all__ = ["Scenario"]
@@ -49,18 +50,41 @@ class Scenario:
     consts: MLProblemConstants
     T_max: float                          # time budget (s), constraint (20)
     C_max: float                          # convergence-error budget, (21)
-    family: str = "genqsgd"               # registries.FAMILIES key
+    family: Union[str, AlgorithmFamily] = "genqsgd"  # repro.families key
     step: Optional[StepRule] = None       # None -> jointly optimized (m=J)
     samples_per_worker: float = 6000.0    # I_n (FedAvg's epoch tie)
 
     def __post_init__(self):
-        if self.family not in FAMILIES:
-            raise ValueError(f"unknown family {self.family!r}; registered: "
-                             f"{sorted(FAMILIES)}")
+        resolve(self.family)              # unknown names fail here, loudly
         if self.consts.N != self.system.N:
             raise ValueError(
                 f"consts describe N={self.consts.N} workers but the system "
                 f"has N={self.system.N}")
+
+    # ------------------------------------------------------------------
+    @property
+    def family_obj(self) -> AlgorithmFamily:
+        """The resolved :class:`~repro.families.AlgorithmFamily`."""
+        return resolve(self.family)
+
+    @property
+    def family_key(self) -> str:
+        return self.family_obj.key
+
+    @functools.cached_property
+    def _priced_system(self) -> EdgeSystem:
+        """The system whose M_s / q_s price the *family's* codec — the one
+        guarantee of the closed loop: the optimizer and the runtime move
+        the same bytes through the same quantizer.  A rotated family on a
+        bucketed system drops ``q_dim``: rotation isotropizes the whole
+        message, so per-bucket norms are redundant (and the codec rejects
+        the combination)."""
+        fam = self.family_obj
+        if fam.codec_kind == self.system.codec_kind:
+            return self.system
+        q_dim = None if fam.codec_kind == "rotated" else self.system.q_dim
+        return dataclasses.replace(self.system, codec_kind=fam.codec_kind,
+                                   q_dim=q_dim)
 
     # ------------------------------------------------------------------
     @property
@@ -89,15 +113,17 @@ class Scenario:
         """The underlying :class:`ParamOptProblem` (escape hatch for direct
         ``evaluate``/``feasible`` queries and fixed-parameter baselines)."""
         m = self._resolve(m)
+        fam = self.family_obj
         if vmap is None:
-            vmap = make_varmap(self.family, self.system.N,
-                               m in (Objective.EXPONENTIAL, Objective.JOINT),
-                               self.samples_per_worker)
+            vmap = fam.make_varmap(
+                self.system.N,
+                m in (Objective.EXPONENTIAL, Objective.JOINT),
+                self.samples_per_worker)
         gamma = None if self.step is None else float(self.step.gamma)
         rho = getattr(self.step, "rho", None)
-        return ParamOptProblem(sys=self.system, consts=self.consts,
+        return ParamOptProblem(sys=self._priced_system, consts=self.consts,
                                T_max=self.T_max, C_max=self.C_max, m=m,
-                               gamma=gamma, rho=rho, vmap=vmap)
+                               gamma=gamma, rho=rho, vmap=vmap, family=fam)
 
     # ------------------------------------------------------------------
     def _plan_from_result(self, m: Objective, r) -> Plan:
@@ -106,11 +132,15 @@ class Scenario:
             step = ConstantRule(float(r.gamma))
         else:
             step = self.step
-        sys = self.system
+        sys = self._priced_system
+        fam = self.family_obj
         return Plan(K0=int(r.K0), Kn=tuple(int(k) for k in r.Kn), B=int(r.B),
                     step_rule=step, s0=sys.s0, sn=tuple(sys.sn), dim=sys.dim,
                     q_dim=sys.q_dim, wire=sys.wire, objective=m,
-                    family=self.family, predicted_E=r.E, predicted_T=r.T,
+                    family=fam.key, codec_kind=fam.codec_kind,
+                    agg_weights=fam.agg_weights(sys.N),
+                    momentum=fam.momentum, normalize=fam.normalize,
+                    predicted_E=r.E, predicted_T=r.T,
                     predicted_C=r.C, feasible=bool(r.feasible),
                     converged=bool(r.converged))
 
@@ -161,14 +191,18 @@ class Scenario:
                 wall: float, final_metrics: dict, history,
                 wire: Optional[str] = None) -> RunReport:
         # wire=None prices at the Plan's wire (the reference backend has no
-        # transport); the spmd path passes the transport it actually used
+        # transport); the spmd path passes the transport it actually used.
+        # Cost-model measurements evaluate on the *priced* system — the one
+        # whose M_s/q_s describe the family's codec — so measured_E/T are
+        # comparable to predicted_E/T within the same report.
         comm = rounds * plan.round_bits(dim=model_dim, wire=wire)
+        sys = self._priced_system
         return RunReport(
             plan=plan, backend=backend, rounds=rounds, model_dim=model_dim,
             wall_time_s=wall, comm_bits=comm,
-            measured_E=energy_cost(self.system, rounds, np.asarray(plan.Kn),
+            measured_E=energy_cost(sys, rounds, np.asarray(plan.Kn),
                                    plan.B),
-            measured_T=time_cost(self.system, rounds, np.asarray(plan.Kn),
+            measured_T=time_cost(sys, rounds, np.asarray(plan.Kn),
                                  plan.B),
             final_metrics=dict(final_metrics), history=tuple(history))
 

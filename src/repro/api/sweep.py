@@ -191,9 +191,9 @@ def sweep_scenarios(scenarios: Sequence, names: Optional[Sequence[str]] = None,
     for i, (scn, m, r) in enumerate(zip(scenarios, ms, results)):
         plan = scn._plan_from_result(m, r)
         name = (names[i] if names is not None
-                else f"{scn.family}-{m.value}")
+                else f"{scn.family_key}-{m.value}")
         rows.append({
-            "name": name, "family": scn.family, "m": m.value,
+            "name": name, "family": scn.family_key, "m": m.value,
             "gamma": plan.gamma, "T_max": scn.T_max, "C_max": scn.C_max,
             "K0": plan.K0, "Kn": plan.Kn, "B": plan.B,
             "E": plan.predicted_E, "T": plan.predicted_T,

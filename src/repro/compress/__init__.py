@@ -6,8 +6,12 @@ random quantizer ``Q(·; s)`` characterized by its variance constant ``q_s``
 concrete home.  It splits the concern into three orthogonal axes:
 
   codec     (*what* is sent)   — :class:`QSGDCodec` (Assumption-1 stochastic
-            levels, optional per-bucket norms) and :class:`IdentityCodec`
-            (s = ∞, recovering PM-SGD / FedAvg / PR-SGD);
+            levels, optional per-bucket norms), :class:`RotatedQSGDCodec`
+            (randomized-Hadamard preconditioning, GQFedWAvg's quantizer),
+            :class:`IdentityCodec` (s = ∞, recovering PM-SGD / FedAvg /
+            PR-SGD), and the stateful :class:`ErrorFeedbackCodec` wrapper
+            (memory-compensated encode; runtime-only — see its legality
+            note);
   backend   (*how* it is computed) — reference ``jnp`` math or the Pallas TPU
             kernels from :mod:`repro.kernels.qsgd`, interchangeable per call
             and verified bit-identical;
@@ -26,15 +30,19 @@ Consumers:
 """
 from .backends import (default_interpret, decode_tensor, encode_tensor,
                        level_dtype, qsgd_levels)
-from .codec import (Codec, IdentityCodec, QSGDCodec, bits_per_message,
+from .codec import (CODEC_KINDS, Codec, ErrorFeedbackCodec, IdentityCodec,
+                    QSGDCodec, RotatedQSGDCodec, bits_per_message,
                     make_codec, q_pair, variance_bound)
+from .rotation import fwht, next_pow2, rotate, unrotate
 from .wire import (RUNTIME_WIRES, WIRE_FORMATS, level_bits, pack_int4,
                    unpack_int4, wire_bits, wire_max_s)
 
 __all__ = [
-    "Codec", "QSGDCodec", "IdentityCodec", "make_codec",
+    "Codec", "QSGDCodec", "IdentityCodec", "RotatedQSGDCodec",
+    "ErrorFeedbackCodec", "CODEC_KINDS", "make_codec",
     "encode_tensor", "decode_tensor", "qsgd_levels", "level_dtype",
     "variance_bound", "bits_per_message", "q_pair",
     "WIRE_FORMATS", "RUNTIME_WIRES", "wire_bits", "level_bits",
     "wire_max_s", "pack_int4", "unpack_int4", "default_interpret",
+    "rotate", "unrotate", "fwht", "next_pow2",
 ]

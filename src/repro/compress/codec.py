@@ -29,12 +29,17 @@ import jax
 import jax.numpy as jnp
 
 from . import backends as B
+from . import rotation as R
 from . import wire as W
 
 __all__ = [
-    "Codec", "QSGDCodec", "IdentityCodec", "make_codec",
+    "Codec", "QSGDCodec", "IdentityCodec", "RotatedQSGDCodec",
+    "ErrorFeedbackCodec", "CODEC_KINDS", "make_codec",
     "variance_bound", "bits_per_message", "q_pair",
 ]
+
+#: make_codec preconditioner variants ("kind" axis, orthogonal to backend/wire)
+CODEC_KINDS = ("qsgd", "rotated")
 
 
 def variance_bound(s: Optional[int], dim: int) -> float:
@@ -194,27 +199,179 @@ class QSGDCodec(Codec):
         return variance_bound(self.s_levels, eff)
 
 
+@dataclasses.dataclass(frozen=True)
+class RotatedQSGDCodec(QSGDCodec):
+    """Rotation-preconditioned QSGD (GQFedWAvg's quantizer).
+
+    Encodes ``R y`` with ``R = (1/sqrt(d)) H_d D_sigma`` the randomized
+    Hadamard rotation (:mod:`repro.compress.rotation`), decodes with the
+    exact inverse ``R^T``.  ``R`` is orthonormal, so Assumption 1 holds for
+    the rotated message verbatim; the preconditioner makes the quantizer's
+    input near-isotropic (no coordinate can dominate the post-rotation
+    norm), so realized error is input-structure-independent and the
+    dynamic range collapses to ~sqrt(2 log d / d) of the norm.
+
+    Shape contract: the rotation pads to ``d' = next_pow2(dim)``, so
+    ``encode`` returns levels of length ``d'`` (that is the message — the
+    wire moves the padded levels plus the 32-bit rotation seed, and
+    ``wire_bits`` prices exactly that) and ``decode`` returns the
+    unrotated padded vector; ``quantize_dequantize`` round-trips the
+    caller's exact shape.  Per-bucket norms are not supported (the rotation
+    already isotropizes the message).
+
+    Backends share the rotation code verbatim and differ only in the QSGD
+    level assignment ("jnp" reference vs the Pallas kernels) — verified
+    bit-identical in ``tests/unit/test_rotation_codec.py``.
+    """
+
+    seed: int = 0
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.bucket is not None:
+            raise ValueError("rotation preconditioning and per-bucket norms "
+                             "are mutually exclusive (the rotation already "
+                             "isotropizes the message)")
+
+    def padded_dim(self, dim: int) -> int:
+        return R.next_pow2(dim)
+
+    # -- encode / decode -------------------------------------------------
+    def encode(self, y: jax.Array, u: jax.Array):
+        """``u`` must be uniform noise of shape ``(padded_dim(y.size),)``
+        — the rotated message's length (``quantize_dequantize`` handles
+        this; direct callers padding by hand get a shape error from the
+        level assignment otherwise)."""
+        r = R.rotate(y, self.seed)
+        if self.backend == "pallas":
+            return B.encode_pallas(r, self.s_levels, u, self.interpret)
+        lvl, norm = B.encode_jnp(r, self.s_levels, u)
+        return lvl.astype(self.level_dtype), norm
+
+    def decode(self, levels: jax.Array, norm: jax.Array, dtype=jnp.float32):
+        dq = B.decode_jnp(levels, norm, self.s_levels, jnp.float32)
+        return R.unrotate(dq, self.seed, dq.shape[0]).astype(dtype)
+
+    def decode_apply(self, x: jax.Array, levels: jax.Array, norm: jax.Array,
+                     gamma) -> jax.Array:
+        upd = gamma * self.decode(levels, norm)[:x.size].reshape(x.shape)
+        return (x.astype(jnp.float32) + upd).astype(x.dtype)
+
+    def quantize_dequantize(self, y: jax.Array, key: jax.Array) -> jax.Array:
+        u = jax.random.uniform(key, (self.padded_dim(y.size),), jnp.float32)
+        lvl, norm = self.encode(y, u)
+        out = self.decode(lvl, norm)
+        return out[:y.size].reshape(y.shape).astype(y.dtype)
+
+    # -- cost-layer views ------------------------------------------------
+    def wire_bits(self, dim: int) -> float:
+        """The padded levels plus the 32-bit rotation seed — what actually
+        travels, so ``EdgeSystem.M_s`` and the runtime agree."""
+        return W.wire_bits(self.s_levels, self.padded_dim(dim),
+                           wire=self.wire) + 32.0
+
+    def variance_bound(self, dim: int) -> float:
+        """Assumption 1 at the rotated message's dimension (the rotation is
+        orthonormal, so the bound applies to the padded vector as-is)."""
+        return variance_bound(self.s_levels, self.padded_dim(dim))
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedbackCodec:
+    """Memory-compensated (EF-)quantization around any inner codec.
+
+    Encodes the *error-compensated* message ``y + e`` and carries the new
+    residual ``e' = (y + e) - decode(encode(y + e))`` as explicit state —
+    codecs stay frozen/stateless, so the caller threads ``state`` through
+    (``init_state`` → ``encode``/``quantize_dequantize`` → next round).  The
+    telescoping identity ``sum_t decode_t = sum_t y_t + e_0 - e_T`` makes
+    the *cumulative* applied update track the true sum to within one
+    residual — the contract ``tests/unit/test_rotation_codec.py`` asserts.
+
+    Legality note: EF-compensated quantization is **biased** per message —
+    Assumption 1's unbiasedness fails, so Theorem 1 (and therefore every
+    shipped family's convergence block: ``genqsgd``/``pm``/``fa``/``pr``
+    and ``gqfedwavg``) does not cover it.  ``variance_bound`` raises to
+    keep the optimizer from ever pricing ``q_s`` for an EF codec; use it
+    for runtime experimentation, not inside ``Scenario.optimize``.
+    """
+
+    inner: Codec
+
+    @property
+    def s(self) -> Optional[int]:
+        return self.inner.s
+
+    @property
+    def wire(self) -> str:
+        return self.inner.wire
+
+    def init_state(self, dim: int) -> jax.Array:
+        """The zero residual memory (f32 vector of the message dimension)."""
+        return jnp.zeros(int(dim), jnp.float32)
+
+    def encode(self, y: jax.Array, u: jax.Array, state: jax.Array):
+        """-> (levels, norm, new_state); ``state`` shaped like the flat y."""
+        comp = y.astype(jnp.float32) + state.reshape(y.shape)
+        lvl, norm = self.inner.encode(comp, u)
+        # rotated inners decode to the padded flat message; slice flat
+        sent = self.inner.decode(lvl, norm).reshape(-1)[:y.size] \
+            .reshape(y.shape)
+        return lvl, norm, (comp - sent).reshape(-1)
+
+    def decode(self, levels: jax.Array, norm: jax.Array, dtype=jnp.float32):
+        return self.inner.decode(levels, norm, dtype)
+
+    def quantize_dequantize(self, y: jax.Array, key: jax.Array,
+                            state: jax.Array):
+        """-> (value, new_state): the stateful twin of the codec method."""
+        comp = y.astype(jnp.float32) + state.reshape(y.shape)
+        sent = self.inner.quantize_dequantize(comp, key)
+        return sent, (comp - sent).reshape(-1)
+
+    def wire_bits(self, dim: int) -> float:
+        return self.inner.wire_bits(dim)
+
+    def variance_bound(self, dim: int) -> float:
+        raise TypeError(
+            "error-feedback quantization is biased: Assumption 1's q_s does "
+            "not exist, so no shipped family's convergence block may price "
+            "it — run it in the runtime, keep the optimizer on the inner "
+            "codec")
+
+
 @functools.lru_cache(maxsize=1024)
 def _make_codec_cached(s: Optional[int], wire: str, bucket: Optional[int],
-                       backend: str, interpret: Optional[bool]) -> Codec:
+                       backend: str, interpret: Optional[bool], kind: str,
+                       seed: int) -> Codec:
+    if kind not in CODEC_KINDS:
+        raise ValueError(f"unknown codec kind {kind!r}; "
+                         f"expected one of {CODEC_KINDS}")
     if s is None:
+        # exact communication needs no preconditioner either way
         return IdentityCodec(wire=wire)
+    if kind == "rotated":
+        return RotatedQSGDCodec(wire=wire, s_levels=int(s), bucket=bucket,
+                                backend=backend, interpret=interpret,
+                                seed=int(seed))
     return QSGDCodec(wire=wire, s_levels=int(s), bucket=bucket,
                      backend=backend, interpret=interpret)
 
 
 def make_codec(s: Optional[int], wire: str = "packed",
                bucket: Optional[int] = None, backend: str = "jnp",
-               interpret: Optional[bool] = None) -> Codec:
-    """The one constructor: s=None -> IdentityCodec, else QSGDCodec.
+               interpret: Optional[bool] = None, kind: str = "qsgd",
+               seed: int = 0) -> Codec:
+    """The one constructor: s=None -> IdentityCodec, else QSGDCodec (or the
+    rotation-preconditioned variant for ``kind="rotated"``).
 
     Codecs are frozen/stateless, so instances are memoized — the cost layer
     reconstructs them inside the GIA inner loop and must not pay object
     churn there.
     """
     try:
-        hash((s, wire, bucket, backend, interpret))
+        hash((s, wire, bucket, backend, interpret, kind, seed))
     except TypeError:  # unhashable argument: build fresh, uncached
         return _make_codec_cached.__wrapped__(s, wire, bucket, backend,
-                                              interpret)
-    return _make_codec_cached(s, wire, bucket, backend, interpret)
+                                              interpret, kind, seed)
+    return _make_codec_cached(s, wire, bucket, backend, interpret, kind, seed)

@@ -1,0 +1,85 @@
+"""Randomized-Hadamard rotation preconditioner (GQFedWAvg's quantizer).
+
+Pre-rotating with a randomized Hadamard transform ``R = (1/sqrt(d)) H_d
+D_sigma`` (``H_d`` the Walsh-Hadamard matrix, ``D_sigma`` random signs)
+spreads every input's energy evenly across coordinates before quantization
+and is undone exactly after dequantization.  ``R`` is orthonormal, so norms
+(and therefore Assumption 1's per-message analysis) are preserved; what the
+preconditioner buys is *input-independence*: the quantizer always sees a
+near-isotropic message (max coordinate ~ sqrt(2 log d / d) of the norm
+w.h.p.), so realized error concentrates at the dense-case level regardless
+of input structure and the dynamic range that fixed-grid wire formats pay
+for collapses by ~sqrt(d / log d).
+
+Implementation notes:
+
+  * ``fwht`` is the standard O(d log d) butterfly on a power-of-2 length;
+    inputs are zero-padded to ``next_pow2(dim)`` (padding is part of the
+    wire format — the cost layer prices the padded message, see
+    ``RotatedQSGDCodec.wire_bits``).
+  * The sign vector derives from a 32-bit seed through the same murmur3
+    finalizer the SPMD runtime uses for quantization noise — a pure
+    elementwise index hash, so encode and decode regenerate identical signs
+    from the seed alone (the seed is the only rotation state on the wire:
+    32 bits).
+  * Both codec backends ("jnp" reference and "pallas" kernels) share this
+    exact rotation code and differ only in the QSGD level assignment they
+    delegate to, which keeps them bit-identical end to end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["next_pow2", "rademacher", "fwht", "rotate", "unrotate"]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    if n <= 1:
+        return 1
+    return 1 << (int(n) - 1).bit_length()
+
+
+def _mix32(z: jax.Array) -> jax.Array:
+    z = (z ^ (z >> 16)) * jnp.uint32(0x85EBCA6B)
+    z = (z ^ (z >> 13)) * jnp.uint32(0xC2B2AE35)
+    return z ^ (z >> 16)
+
+
+def rademacher(n: int, seed: int) -> jax.Array:
+    """Deterministic ±1 f32 signs of length n from a 32-bit seed."""
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    z = _mix32(idx * jnp.uint32(0x9E3779B9) + jnp.uint32(seed & 0xFFFFFFFF))
+    return jnp.where((z & jnp.uint32(1)) == 0, jnp.float32(1.0),
+                     jnp.float32(-1.0))
+
+
+def fwht(x: jax.Array) -> jax.Array:
+    """Unnormalized Walsh-Hadamard transform of a 1-D power-of-2 vector."""
+    d = x.shape[0]
+    h = 1
+    while h < d:
+        x = x.reshape(d // (2 * h), 2, h)
+        a, b = x[:, 0, :], x[:, 1, :]
+        x = jnp.stack([a + b, a - b], axis=1).reshape(d)
+        h *= 2
+    return x
+
+
+def rotate(y: jax.Array, seed: int) -> jax.Array:
+    """R y for the flattened input: pad to pow2, sign-flip, orthonormal WHT.
+
+    Returns the rotated vector of length ``next_pow2(y.size)``.
+    """
+    flat = y.reshape(-1).astype(jnp.float32)
+    d = next_pow2(flat.shape[0])
+    flat = jnp.pad(flat, (0, d - flat.shape[0]))
+    return fwht(flat * rademacher(d, seed)) * jnp.float32(d ** -0.5)
+
+
+def unrotate(v: jax.Array, seed: int, n: int) -> jax.Array:
+    """R^T v: the exact inverse of :func:`rotate`, sliced back to length n."""
+    d = v.shape[0]
+    out = fwht(v.astype(jnp.float32)) * jnp.float32(d ** -0.5)
+    return (out * rademacher(d, seed))[:n]

@@ -24,6 +24,19 @@ __all__ = ["MLProblemConstants", "coefficients", "c_arbitrary", "c_constant",
            "c_exponential", "c_diminishing", "c_m"]
 
 
+def _weighted_blocks(Kn: np.ndarray, q_pairs: np.ndarray, eps):
+    """``(sum_n eps_n K_n, sum_n q_n (eps_n K_n)^2)`` — the two aggregation
+    blocks of the bound.  ``eps=None`` (uniform weights) takes the exact
+    historical arithmetic, so GenQSGD results stay bitwise unchanged;
+    weighted families (``eps_n = N w_n``, :mod:`repro.families`) reweight
+    the effective local work and the quantization variance per worker."""
+    if eps is None:
+        return Kn.sum(), (q_pairs * Kn**2).sum()
+    e = np.asarray(eps, dtype=np.float64)
+    eK = e * Kn
+    return eK.sum(), (q_pairs * eK**2).sum()
+
+
 @dataclasses.dataclass(frozen=True)
 class MLProblemConstants:
     """Pre-training estimates describing the ML problem (Sec. IV-A)."""
@@ -46,7 +59,7 @@ def coefficients(L: float, sigma: float, G: float, f_gap: float, N: int):
     return c1, c2, c3, c4
 
 
-def c_arbitrary(K0, Kn, B, gammas, c, q_pairs) -> float:
+def c_arbitrary(K0, Kn, B, gammas, c, q_pairs, eps=None) -> float:
     """C_A(K, B, Gamma) — eq. (9), arbitrary step-size sequence."""
     c1, c2, c3, c4 = c
     Kn = np.asarray(Kn, dtype=np.float64)
@@ -56,32 +69,32 @@ def c_arbitrary(K0, Kn, B, gammas, c, q_pairs) -> float:
     sum_g = g.sum()
     sum_g2 = (g**2).sum()
     sum_g3 = (g**3).sum()
-    sum_K = Kn.sum()
+    sum_K, qK2 = _weighted_blocks(Kn, q_pairs, eps)
     kmax = Kn.max()
     t1 = c1 / (sum_K * sum_g)
     t2 = c2 * kmax**2 * sum_g3 / sum_g
     t3 = c3 * sum_g2 / (B * sum_g)
-    t4 = c4 * (q_pairs * Kn**2).sum() * sum_g2 / (sum_K * sum_g)
+    t4 = c4 * qK2 * sum_g2 / (sum_K * sum_g)
     return float(t1 + t2 + t3 + t4)
 
 
-def c_constant(K0, Kn, B, gamma_c, c, q_pairs):
+def c_constant(K0, Kn, B, gamma_c, c, q_pairs, eps=None):
     """C_C — eq. (11).  Broadcasts over an ndarray ``K0`` (the feasibility
     grid search evaluates whole K0 ladders at once); scalar in, float out."""
     c1, c2, c3, c4 = c
     Kn = np.asarray(Kn, dtype=np.float64)
     q_pairs = np.asarray(q_pairs, dtype=np.float64)
-    sum_K = Kn.sum()
+    sum_K, qK2 = _weighted_blocks(Kn, q_pairs, eps)
     out = (
         c1 / (gamma_c * K0 * sum_K)
         + c2 * gamma_c**2 * Kn.max() ** 2
         + c3 * gamma_c / B
-        + c4 * gamma_c * (q_pairs * Kn**2).sum() / sum_K
+        + c4 * gamma_c * qK2 / sum_K
     )
     return out if np.ndim(K0) else float(out)
 
 
-def c_exponential(K0, Kn, B, gamma_e, rho_e, c, q_pairs):
+def c_exponential(K0, Kn, B, gamma_e, rho_e, c, q_pairs, eps=None):
     """C_E — eq. (13).  Broadcasts over an ndarray ``K0``."""
     c1, c2, c3, c4 = c
     Kn = np.asarray(Kn, dtype=np.float64)
@@ -90,17 +103,17 @@ def c_exponential(K0, Kn, B, gamma_e, rho_e, c, q_pairs):
     a2 = gamma_e**2 / (1.0 + rho_e + rho_e**2)
     a3 = gamma_e / (1.0 + rho_e)
     r1 = rho_e**K0
-    sum_K = Kn.sum()
+    sum_K, qK2 = _weighted_blocks(Kn, q_pairs, eps)
     out = (
         a1 * c1 / ((1.0 - r1) * sum_K)
         + a2 * c2 * (1.0 - rho_e ** (3 * K0)) / (1.0 - r1) * Kn.max() ** 2
         + a3 * (1.0 - rho_e ** (2 * K0)) / (1.0 - r1)
-        * (c3 / B + c4 * (q_pairs * Kn**2).sum() / sum_K)
+        * (c3 / B + c4 * qK2 / sum_K)
     )
     return out if np.ndim(K0) else float(out)
 
 
-def c_diminishing(K0, Kn, B, gamma_d, rho_d, c, q_pairs):
+def c_diminishing(K0, Kn, B, gamma_d, rho_d, c, q_pairs, eps=None):
     """C_D — eq. (16) (upper bound used for optimization).  Broadcasts over
     an ndarray ``K0``."""
     c1, c2, c3, c4 = c
@@ -111,24 +124,25 @@ def c_diminishing(K0, Kn, B, gamma_d, rho_d, c, q_pairs):
         + (rho_d**2 * gamma_d**2) / (2.0 * (rho_d + 1.0) ** 2)
     b3 = rho_d * gamma_d / (rho_d + 1.0) ** 2 + rho_d * gamma_d / (rho_d + 1.0)
     logt = np.log((K0 + rho_d + 1.0) / (rho_d + 1.0))
-    sum_K = Kn.sum()
+    sum_K, qK2 = _weighted_blocks(Kn, q_pairs, eps)
     out = (
         b1 * c1 / (logt * sum_K)
         + b2 * c2 * Kn.max() ** 2 / logt
         + b3 * c3 / (B * logt)
-        + b3 * c4 * (q_pairs * Kn**2).sum() / (logt * sum_K)
+        + b3 * c4 * qK2 / (logt * sum_K)
     )
     return out if np.ndim(K0) else float(out)
 
 
-def c_m(m: str, K0, Kn, B, rule, c, q_pairs) -> float:
+def c_m(m: str, K0, Kn, B, rule, c, q_pairs, eps=None) -> float:
     """Dispatch on the paper's m in {A, C, E, D}."""
     if m == "C":
-        return c_constant(K0, Kn, B, rule.gamma, c, q_pairs)
+        return c_constant(K0, Kn, B, rule.gamma, c, q_pairs, eps)
     if m == "E":
-        return c_exponential(K0, Kn, B, rule.gamma, rule.rho, c, q_pairs)
+        return c_exponential(K0, Kn, B, rule.gamma, rule.rho, c, q_pairs, eps)
     if m == "D":
-        return c_diminishing(K0, Kn, B, rule.gamma, rule.rho, c, q_pairs)
+        return c_diminishing(K0, Kn, B, rule.gamma, rule.rho, c, q_pairs, eps)
     if m == "A":
-        return c_arbitrary(K0, Kn, B, rule.sequence(int(round(K0))), c, q_pairs)
+        return c_arbitrary(K0, Kn, B, rule.sequence(int(round(K0))), c,
+                           q_pairs, eps)
     raise ValueError(f"unknown convergence measure m={m!r}")

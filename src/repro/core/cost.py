@@ -53,6 +53,12 @@ class EdgeSystem:
     # wire format priced by M_s ("packed" = fixed-length code, arbitrary s;
     # "f32"/"int8"/"int4"/"rs_ag" = the runtime's aggregation transports).
     wire: str = "packed"
+    # codec preconditioner kind priced by M_s / q_s: "qsgd" (the paper's
+    # quantizer) or "rotated" (randomized-Hadamard preconditioning —
+    # GQFedWAvg's family; pow2-padded levels + 32-bit seed on the wire).
+    # Scenario derives this from the algorithm family so the optimizer
+    # provably prices the codec the runtime runs.
+    codec_kind: str = "qsgd"
 
     def __post_init__(self):
         for name in ("Fn", "Cn", "pn", "rn", "alphan"):
@@ -72,7 +78,8 @@ class EdgeSystem:
     # loop reads q_pairs / comm_time on every surrogate build, and rebuilding
     # codec objects there is pure overhead.
     def codec(self, s: Optional[int]):
-        return make_codec(s, wire=self.wire, bucket=self.q_dim)
+        return make_codec(s, wire=self.wire, bucket=self.q_dim,
+                          kind=self.codec_kind)
 
     @functools.cached_property
     def M_s0(self) -> float:

@@ -2,9 +2,10 @@
 
 This is the single-process reference implementation (the paper's algorithm,
 exactly): the N workers are carried as a leading ``vmap`` axis and the server
-aggregation is a mean across it.  The multi-device SPMD version that maps
-workers onto the ``fl`` mesh axis lives in :mod:`repro.fed.runtime` and is
-tested for equivalence against this one.
+aggregation is a mean across it (or, for weighted families like GQFedWAvg, a
+general weighted sum — see :mod:`repro.families`).  The multi-device SPMD
+version that maps workers onto the ``fl`` mesh axis lives in
+:mod:`repro.fed.runtime` and is tested for equivalence against this one.
 
 Heterogeneous local iteration counts ``K_n`` are handled the way the paper's
 analysis does (eqs. (6)-(8)): every worker scans ``K_max = max_n K_n`` local
@@ -57,7 +58,14 @@ def unflatten_like(flat, tree):
 
 @dataclasses.dataclass(frozen=True)
 class GenQSGDConfig:
-    """Algorithm parameters (K, B, Γ) + quantizer parameters (s_0, s_n)."""
+    """Algorithm parameters (K, B, Γ) + quantizer parameters (s_0, s_n).
+
+    The family hooks (:mod:`repro.families`) ride along as plain fields:
+    ``agg_weights`` turns the server mean into a general weighted
+    aggregation, ``momentum``/``normalize`` select GQFedWAvg's normalized
+    momentum local update, ``codec_kind`` the quantizer preconditioner.
+    The defaults reproduce GenQSGD (Algorithm 1) exactly.
+    """
     K0: int                      # global iterations
     Kn: Tuple[int, ...]          # per-worker local iterations (len N)
     B: int                       # mini-batch size
@@ -65,6 +73,18 @@ class GenQSGDConfig:
     s0: Optional[int] = None     # server quantizer (None = s = ∞)
     sn: Optional[Sequence[Optional[int]]] = None  # per-worker quantizers
     bucket: Optional[int] = None  # per-bucket-norm quantization (q_dim)
+    agg_weights: Optional[Tuple[float, ...]] = None  # w_n (None = mean)
+    momentum: float = 0.0        # local-update momentum beta
+    normalize: bool = False      # normalized (unit-direction) local updates
+    codec_kind: str = "qsgd"     # repro.compress.make_codec kind
+
+    def __post_init__(self):
+        from ..families import check_agg_weights, check_momentum  # cycle
+        if self.agg_weights is not None:
+            object.__setattr__(self, "agg_weights",
+                               check_agg_weights(self.agg_weights,
+                                                 len(self.Kn)))
+        check_momentum(self.momentum)
 
     @property
     def N(self) -> int:
@@ -103,21 +123,58 @@ class GenQSGD:
 
     # ------------------------------------------------------------------
     def _local_train(self, x_hat, worker_data, key, gamma, k_n):
-        """K_max masked local mini-batch SGD steps for ONE worker."""
+        """K_max masked local steps for ONE worker.
+
+        Plain mini-batch SGD by default; with ``momentum``/``normalize``
+        set (GQFedWAvg) each active step updates a momentum buffer
+        ``v ← β v + (1-β) g`` and moves along ``v`` (unit-normalized over
+        the whole model when ``normalize``).  Virtual (masked) steps leave
+        both ``x`` and ``v`` untouched, as eqs. (6)-(8) require.
+        """
         cfg = self.cfg
         grad_fn = jax.grad(self.loss_fn)
 
-        def body(carry, k):
-            x, key = carry
+        if cfg.momentum == 0.0 and not cfg.normalize:
+            def body(carry, k):
+                x, key = carry
+                key, bkey = jax.random.split(key)
+                batch = self.sample_fn(worker_data, bkey, cfg.B)
+                g = grad_fn(x, batch)
+                active = (k < k_n).astype(jnp.float32)
+                x = jax.tree.map(
+                    lambda p, gg: p - (gamma * active) * gg.astype(p.dtype),
+                    x, g)
+                return (x, key), None
+
+            (x, _), _ = jax.lax.scan(body, (x_hat, key),
+                                     jnp.arange(cfg.K_max))
+            return x
+
+        beta = jnp.float32(cfg.momentum)
+
+        def body_m(carry, k):
+            x, v, key = carry
             key, bkey = jax.random.split(key)
             batch = self.sample_fn(worker_data, bkey, cfg.B)
             g = grad_fn(x, batch)
             active = (k < k_n).astype(jnp.float32)
+            v = jax.tree.map(
+                lambda vv, gg: vv + active * (beta * vv + (1.0 - beta)
+                                              * gg.astype(jnp.float32) - vv),
+                v, g)
+            if cfg.normalize:
+                vn = jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                                  for l in jax.tree.leaves(v)))
+                scale = (gamma * active) / jnp.maximum(vn, 1e-12)
+            else:
+                scale = gamma * active
             x = jax.tree.map(
-                lambda p, gg: p - (gamma * active) * gg.astype(p.dtype), x, g)
-            return (x, key), None
+                lambda p, vv: p - scale * vv.astype(p.dtype), x, v)
+            return (x, v, key), None
 
-        (x, _), _ = jax.lax.scan(body, (x_hat, key), jnp.arange(cfg.K_max))
+        v0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), x_hat)
+        (x, _, _), _ = jax.lax.scan(body_m, (x_hat, v0, key),
+                                    jnp.arange(cfg.K_max))
         return x
 
     def _round_impl(self, x_hat, data, key, gamma):
@@ -141,7 +198,8 @@ class GenQSGD:
             d = (flatten_like(xw) - flat_hat) / gamma
             return codec.quantize_dequantize(d, wkey)
 
-        codecs = [make_codec(s, bucket=cfg.bucket) for s in cfg.worker_s()]
+        codecs = [make_codec(s, bucket=cfg.bucket, kind=cfg.codec_kind)
+                  for s in cfg.worker_s()]
         if len(set(codecs)) == 1:
             deltas = jax.vmap(
                 lambda xw, wk: worker_delta(xw, wk, codecs[0]))(
@@ -150,10 +208,14 @@ class GenQSGD:
             deltas = jnp.stack([
                 worker_delta(jax.tree.map(lambda l: l[i], x_workers),
                              wkeys[i], codecs[i]) for i in range(cfg.N)])
-        delta_hat = deltas.mean(axis=0)
+        if cfg.agg_weights is None:
+            delta_hat = deltas.mean(axis=0)
+        else:  # general weighted aggregation (GQFedWAvg)
+            w = jnp.asarray(cfg.agg_weights, jnp.float32)
+            delta_hat = jnp.tensordot(w / w.sum(), deltas, axes=1)
 
         # (3): server quantizes the averaged update and everyone applies it.
-        delta_q = make_codec(cfg.s0, bucket=cfg.bucket) \
+        delta_q = make_codec(cfg.s0, bucket=cfg.bucket, kind=cfg.codec_kind) \
             .quantize_dequantize(delta_hat, skey)
         new_flat = flat_hat + gamma * delta_q
         x_new = unflatten_like(new_flat, x_hat)

@@ -80,11 +80,21 @@ class FedConfig:
                                          # size (EdgeSystem's q_dim), or None
     aux_weight: float = 0.01
     microbatch: int = 1                  # grad-accumulation splits per local step
+    agg_weights: object = None           # per-worker aggregation weights w_n
+                                         # (tuple, len fl; None = plain mean)
+    momentum: float = 0.0                # local-update momentum beta
+    normalize: bool = False              # normalized local updates (GQFedWAvg)
 
     def __post_init__(self):
         if self.wire not in RUNTIME_WIRES:
             raise ValueError(f"wire must be one of {RUNTIME_WIRES}, "
                              f"got {self.wire!r}")
+        from ..families import check_agg_weights, check_momentum  # cycle
+        if self.agg_weights is not None:
+            object.__setattr__(self, "agg_weights",
+                               check_agg_weights(self.agg_weights,
+                                                 self.n_workers))
+        check_momentum(self.momentum)
         if self.bucket is not None and int(self.bucket) <= 0:
             raise ValueError(f"bucket must be positive, got {self.bucket}")
         cap = wire_max_s(self.wire)
@@ -186,6 +196,9 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
             lambda g, sp: jax.lax.with_sharding_constraint(
                 g, NamedSharding(mesh, sp)), tree, specs)
 
+    use_momentum = fed.momentum > 0.0 or fed.normalize
+    beta = jnp.float32(fed.momentum)
+
     def local_train(x_hat, data, kn, gamma):
         def loss_grad(pp, micro):
             l, g = jax.value_and_grad(
@@ -193,11 +206,9 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                                          aux_weight=fed.aux_weight))(pp)
             return l, _grad_sharding(g)
 
-        def body(carry, inp):
-            p, step = carry
-            batch_k = inp
+        def eval_grad(p, batch_k):
             # mixed precision: forward/backward in bf16 against a bf16 view,
-            # SGD update applied to the (possibly f32) master copy.
+            # the update applied to the (possibly f32) master copy.
             p_half = jax.tree.map(
                 lambda w: w.astype(jnp.bfloat16)
                 if w.dtype == jnp.float32 else w, p)
@@ -228,6 +239,11 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                                             micro_tree)
             else:
                 loss, g = loss_grad(p_half, batch_k)
+            return loss, g
+
+        def body(carry, inp):
+            p, step = carry
+            loss, g = eval_grad(p, inp)
             active = (step < kn).astype(jnp.float32)
             p = jax.tree.map(
                 lambda w, gg: (w.astype(jnp.float32)
@@ -235,13 +251,53 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                                ).astype(w.dtype), p, g)
             return (p, step + 1), loss
 
-        (p, _), losses = jax.lax.scan(body, (x_hat, jnp.int32(0)), data)
+        def body_momentum(carry, inp):
+            # GQFedWAvg local update: v ← β v + (1-β) g on active steps,
+            # move along v (unit-normalized over the whole model when
+            # fed.normalize); virtual steps leave both x and v untouched.
+            p, v, step = carry
+            loss, g = eval_grad(p, inp)
+            active = (step < kn).astype(jnp.float32)
+            v = jax.tree.map(
+                lambda vv, gg: vv + active * (beta * vv + (1.0 - beta)
+                                              * gg.astype(jnp.float32) - vv),
+                v, g)
+            if fed.normalize:
+                vn = jnp.sqrt(sum(jnp.sum(jnp.square(l))
+                                  for l in jax.tree.leaves(v)))
+                scale = (gamma * active) / jnp.maximum(vn, 1e-12)
+            else:
+                scale = gamma * active
+            p = jax.tree.map(
+                lambda w, vv: (w.astype(jnp.float32) - scale * vv)
+                .astype(w.dtype), p, v)
+            return (p, v, step + 1), loss
+
+        if use_momentum:
+            v0 = jax.tree.map(lambda w: jnp.zeros(w.shape, jnp.float32),
+                              x_hat)
+            (p, _, _), losses = jax.lax.scan(
+                body_momentum, (x_hat, v0, jnp.int32(0)), data)
+        else:
+            (p, _), losses = jax.lax.scan(body, (x_hat, jnp.int32(0)), data)
         return p, losses.mean()
 
     sn_arr = (None if fed.sn_exact
               else jnp.asarray([s or 0 for s in fed.sn_tuple()], jnp.float32))
 
     bucket = None if fed.bucket is None else int(fed.bucket)
+
+    w_agg = None
+    if fed.agg_weights is not None:
+        _w = np.asarray(fed.agg_weights, np.float64)
+        w_agg = jnp.asarray(_w / _w.sum(), jnp.float32)
+
+    def combine_fl(d):
+        """Collapse a (fl, ...) stacked leaf: the server mean, or the
+        family's general weighted aggregation (sum_n w_n d_n)."""
+        if w_agg is None:
+            return d.mean(axis=0)
+        return jnp.tensordot(w_agg, d, axes=1)
 
     def worker_quantize(delta, key, s_w):
         leaves, treedef = jax.tree.flatten(delta)
@@ -269,9 +325,9 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
             levels_fl, norms_fl)
 
     def agg_f32(levels_fl, norms_fl):
-        """Paper-faithful: dequantize then mean over fl (f32 all-reduce)."""
-        return jax.tree.map(lambda d: d.mean(axis=0),
-                            _decode_fl(levels_fl, norms_fl))
+        """Paper-faithful: dequantize then mean over fl (f32 all-reduce);
+        weighted families aggregate sum_n w_n Q(Δ_n) instead."""
+        return jax.tree.map(combine_fl, _decode_fl(levels_fl, norms_fl))
 
     def _agg_rs_ag_local(levels_loc, norms_loc):
         """Runs inside shard_map: dequantize locally (whole-tensor norms
@@ -287,13 +343,18 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         return _mean_rs_ag_local(deq)
 
     def _mean_rs_ag_local(deq_loc):
-        """Runs inside shard_map: mean of per-worker f32 deltas over fl via
-        reduce-scatter + all-gather.  ``deq_loc`` leaves are the local
-        (1, ...) fl blocks of already-decoded deltas."""
+        """Runs inside shard_map: mean (or weighted sum) of per-worker f32
+        deltas over fl via reduce-scatter + all-gather.  ``deq_loc`` leaves
+        are the local (1, ...) fl blocks of already-decoded deltas; each
+        member pre-scales its own block (1/n, or its aggregation weight) so
+        the reduction is a plain sum either way."""
         n = fed.n_workers
 
         def per_leaf(d):
-            d = d[0] / n
+            if w_agg is None:
+                d = d[0] / n
+            else:
+                d = d[0] * w_agg[jax.lax.axis_index("fl")]
             if d.size % n:  # ragged leaf: fall back to psum
                 return jax.lax.psum(d, "fl")
             own = jax.lax.psum_scatter(d.reshape(n, -1), "fl",
@@ -320,7 +381,7 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                       if pack_nibbles else pi)
                 return decode_tensor(li, ni, None if sn_arr is None else si)
 
-            return jax.vmap(dec)(g, gn, ss).mean(axis=0)
+            return combine_fl(jax.vmap(dec)(g, gn, ss))
         return jax.tree.map(per_leaf, levels_loc, norms_loc)
 
     def _agg_int8_local(levels_loc, norms_loc):
@@ -399,8 +460,7 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
             # context, so XLA's FMA choices can flip a few stochastic
             # roundings upstream.
             g = make_gather_sm(x_hat, fed.wire == "int4")(levels_fl)
-            delta_hat = jax.tree.map(lambda d: d.mean(axis=0),
-                                     _decode_fl(g, norms_fl))
+            delta_hat = jax.tree.map(combine_fl, _decode_fl(g, norms_fl))
         else:  # bucketed rs_ag: decode per worker, then rs+ag the f32 mean
             delta_hat = make_mean_sm(x_hat)(_decode_fl(levels_fl, norms_fl))
 

@@ -186,9 +186,13 @@ class ParamOptProblem:
     gamma: Optional[float] = None        # step size (m in C/E/D)
     rho: Optional[float] = None          # rho_E or rho_D
     vmap: Optional[VarMap] = None
+    family: object = "genqsgd"           # repro.families key or instance
 
     def __post_init__(self):
+        from ..families import resolve   # lazy: families imports this module
         self.m = Objective.coerce(self.m)
+        self.family = resolve(self.family)
+        self.family.agg_eps(self.sys.N)  # N-mismatched weights fail loudly
         if self.vmap is None:
             self.vmap = identity_varmap(
                 self.sys.N,
@@ -197,6 +201,28 @@ class ParamOptProblem:
             raise ValueError(f"m={self.m} requires a fixed gamma")
         if self.m.needs_rho and self.rho is None:
             raise ValueError(f"m={self.m} requires rho")
+
+    # -- family hooks (repro.families): coefficient-only reweighting ---------
+    # The family only moves *coefficients* of the convergence block (weights
+    # in the aggregation sums, scales on c2/c3); term counts and exponent
+    # structure stay family-independent, so every family batches and fuses
+    # through repro.opt.refresh / gia_jax unchanged.
+    @functools.cached_property
+    def _agg_eps(self) -> Optional[np.ndarray]:
+        """Effective aggregation weights eps_n = N w_n (None = uniform)."""
+        return self.family.agg_eps(self.sys.N)
+
+    @functools.cached_property
+    def _c_eff(self):
+        """Theorem-1 coefficients with the family's (c2, c3) scales folded
+        in; scales of exactly 1.0 leave the floats bitwise untouched."""
+        c1, c2, c3, c4 = self.consts.c
+        c2s, c3s = self.family.c_scales(self.sys.N)
+        if c2s != 1.0:
+            c2 = c2 * c2s
+        if c3s != 1.0:
+            c3 = c3 * c3s
+        return c1, c2, c3, c4
 
     # -- shared pieces ------------------------------------------------------
     def _objective(self) -> Posy:
@@ -228,17 +254,26 @@ class ParamOptProblem:
         return cons
 
     def _sum_Kn(self) -> Posy:
-        out = self.vmap.Kn[0]
-        for k in self.vmap.Kn[1:]:
+        """sum_n eps_n K_n (eps=None: the unweighted historical sum)."""
+        eps = self._agg_eps
+        terms = self.vmap.Kn if eps is None else \
+            [float(eps[i]) * self.vmap.Kn[i] for i in range(self.sys.N)]
+        out = terms[0]
+        for k in terms[1:]:
             out = out + k
         return out
 
     def _sum_q_Kn2(self) -> Posy:
+        """sum_n q_n (eps_n K_n)^2 — the quantization-variance block."""
         qp = self.sys.q_pairs
+        eps = self._agg_eps
         v = self.vmap
         out = None
         for i in range(self.sys.N):
-            t = float(max(qp[i], 1e-300)) * (v.Kn[i] ** 2)
+            q = max(qp[i], 1e-300)
+            if eps is not None:
+                q = q * float(eps[i]) ** 2
+            t = float(q) * (v.Kn[i] ** 2)
             out = t if out is None else out + t
         return out
 
@@ -252,7 +287,7 @@ class ParamOptProblem:
         performs a handful of monomial divisions — no posynomial-algebra
         rebuild in the hot loop.
         """
-        c1, c2, c3, c4 = self.consts.c
+        c1, c2, c3, c4 = self._c_eff
         v = self.vmap
         Cmax = self.C_max
         sumK = self._sum_Kn()
@@ -436,8 +471,9 @@ class ParamOptProblem:
         can never drift from the true cost model."""
         from ..core import convergence as conv
         from ..core.cost import energy_cost, time_cost
-        c = self.consts.c
+        c = self._c_eff
         qp = self.sys.q_pairs
+        eps = self._agg_eps
         G, L = Kn.shape[0], ks.shape[0]
         C = np.empty((G, L))
         T = np.empty((G, L))
@@ -445,14 +481,14 @@ class ParamOptProblem:
         for g in range(G):
             if self.m is Objective.EXPONENTIAL:
                 C[g] = conv.c_exponential(ks, Kn[g], B[g], self.gamma,
-                                          self.rho, c, qp)
+                                          self.rho, c, qp, eps)
             elif self.m is Objective.DIMINISHING:
                 C[g] = conv.c_diminishing(ks, Kn[g], B[g], self.gamma,
-                                          self.rho, c, qp)
+                                          self.rho, c, qp, eps)
             else:   # CONSTANT, or JOINT at the grid's trial gamma
                 gam = (gam_arr[g] if self.m is Objective.JOINT
                        else self.gamma)
-                C[g] = conv.c_constant(ks, Kn[g], B[g], gam, c, qp)
+                C[g] = conv.c_constant(ks, Kn[g], B[g], gam, c, qp, eps)
             T[g] = time_cost(self.sys, ks, Kn[g], B[g])
             E[g] = energy_cost(self.sys, ks, Kn[g], B[g])
         return C, T, E
@@ -534,17 +570,20 @@ class ParamOptProblem:
                  extra: Optional[float] = None) -> Dict[str, float]:
         from ..core import convergence as conv
         from ..core.cost import energy_cost, time_cost
-        c = self.consts.c
+        c = self._c_eff
         qp = self.sys.q_pairs
+        eps = self._agg_eps
         if self.m is Objective.CONSTANT:
-            C = conv.c_constant(K0, Kn, B, self.gamma, c, qp)
+            C = conv.c_constant(K0, Kn, B, self.gamma, c, qp, eps)
         elif self.m is Objective.EXPONENTIAL:
-            C = conv.c_exponential(K0, Kn, B, self.gamma, self.rho, c, qp)
+            C = conv.c_exponential(K0, Kn, B, self.gamma, self.rho, c, qp,
+                                   eps)
         elif self.m is Objective.DIMINISHING:
-            C = conv.c_diminishing(K0, Kn, B, self.gamma, self.rho, c, qp)
+            C = conv.c_diminishing(K0, Kn, B, self.gamma, self.rho, c, qp,
+                                   eps)
         elif self.m is Objective.JOINT:
             assert extra is not None
-            C = conv.c_constant(K0, Kn, B, extra, c, qp)
+            C = conv.c_constant(K0, Kn, B, extra, c, qp, eps)
         return {
             "E": energy_cost(self.sys, K0, Kn, B),
             "T": time_cost(self.sys, K0, Kn, B),

@@ -37,12 +37,17 @@ def structure_signature(problem: ParamOptProblem) -> tuple:
     """Hashable key identifying the fixed GP layout of a problem instance.
 
     Instances with equal signatures (same objective m, same variable map
-    shape, same worker count) produce GPs of identical constraint counts and
-    can be stacked into one :class:`PackedBatch`; budgets, step-size
-    parameters, and system constants only change coefficients.
+    shape, same worker count, same algorithm-family key) produce GPs of
+    identical constraint counts and can be stacked into one
+    :class:`PackedBatch`; budgets, step-size parameters, and system
+    constants only change coefficients.  The family key is part of the
+    signature even though families never change the packed *shapes*
+    (:mod:`repro.families` hooks are coefficient-only) so sweep grouping
+    and the fused-program trace counters stay per-family.
     """
     v = problem.vmap
-    return (problem.m, v.n, tuple(v.names), problem.sys.N)
+    return (problem.m, v.n, tuple(v.names), problem.sys.N,
+            problem.family.key)
 
 
 @dataclasses.dataclass

@@ -1,0 +1,305 @@
+"""repro.families: the pluggable algorithm-family subsystem.
+
+Covers the ISSUE-5 acceptance bar: the refactored genqsgd family is
+*bit-identical* to the pre-family pipeline (neutral hooks select the exact
+historical arithmetic), gqfedwavg optimizes and runs end-to-end with its
+weighted aggregation / momentum / rotated-codec hooks, the legacy
+``FAMILIES`` registry keeps working (mutation deprecated), and unknown
+family names fail with nearest-match suggestions naming repro.families.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import (ConstantRule, DiminishingRule, EdgeSystem,
+                       ExponentialRule, MLProblemConstants, Objective, Plan,
+                       QuadraticTask, Scenario, FAMILIES, make_varmap,
+                       register_family)
+from repro.families import (AlgorithmFamily, GenQSGDFamily, GQFedWAvgFamily,
+                            family_names, get_family, register)
+from repro.opt import solve_param_opt, structure_signature
+from repro.opt.problems import pm_varmap
+
+CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=4)
+
+
+def _scenario(family, step=ConstantRule(0.01), C_max=0.25, dim=1024, N=4):
+    sys_ = EdgeSystem.paper_sec_vii(dim=dim, N=N)
+    return Scenario(system=sys_, consts=dataclasses.replace(CONSTS, N=N),
+                    T_max=1e5, C_max=C_max, family=family, step=step)
+
+
+#: a GQFedWAvg-machinery family whose every hook is numerically neutral —
+#: uniform weights, no momentum, plain QSGD — i.e. GenQSGD spelled through
+#: the general family code paths
+_NEUTRAL = GQFedWAvgFamily(key="gqfedwavg-neutral", weights=(1.0,) * 4,
+                           momentum=0.0, normalize=False, codec_kind="qsgd")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_contents_and_lookup():
+    assert set(family_names()) >= {"genqsgd", "pm", "fa", "pr", "gqfedwavg"}
+    fam = get_family("gqfedwavg")
+    assert fam.codec_kind == "rotated" and fam.normalize
+    assert isinstance(get_family("genqsgd"), GenQSGDFamily)
+
+
+def test_unknown_family_suggests_and_names_registry():
+    with pytest.raises(ValueError, match="repro.families"):
+        get_family("sgd")
+    with pytest.raises(ValueError, match="did you mean 'gqfedwavg'"):
+        get_family("gqfedwvag")
+    with pytest.raises(ValueError, match="gqfedwavg"):
+        make_varmap("gqfedwvag", 4, False, 6000.0)
+    with pytest.raises(ValueError, match="unknown family"):
+        _scenario("gqfedwvag")
+
+
+def test_families_shim_reads_and_deprecated_mutation():
+    assert "genqsgd" in FAMILIES and len(FAMILIES) == len(family_names())
+    vm = FAMILIES["pm"](4, False, 6000.0)
+    assert vm.names == pm_varmap(4).names
+    with pytest.raises(KeyError):
+        FAMILIES["nope"]
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        FAMILIES["pm-clone"] = lambda N, we, spw: pm_varmap(N, with_extra=we)
+    try:
+        # the mutated entry is a full (GenQSGD-semantics) family
+        plan = _scenario("pm-clone").optimize(max_iter=5)
+        ref = _scenario("pm").optimize(max_iter=5)
+        assert (plan.K0, plan.Kn, plan.B) == (ref.K0, ref.Kn, ref.B)
+    finally:
+        with pytest.warns(DeprecationWarning):
+            del FAMILIES["pm-clone"]
+    assert "pm-clone" not in FAMILIES
+
+
+def test_register_family_accepts_instances_and_factories():
+    register_family("pm-legacy", lambda N, we, spw: pm_varmap(N, with_extra=we))
+    register_family("gq-variant", GQFedWAvgFamily(key="gq-variant",
+                                                  momentum=0.25))
+    try:
+        assert isinstance(get_family("pm-legacy"), GenQSGDFamily)
+        assert get_family("gq-variant").momentum == 0.25
+    finally:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            del FAMILIES["pm-legacy"], FAMILIES["gq-variant"]
+    with pytest.raises(TypeError, match="AlgorithmFamily"):
+        register("not a family")
+
+
+# ---------------------------------------------------------------------------
+# the tentpole guarantee: genqsgd through the interface is bit-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m", list(Objective))
+def test_neutral_hooks_conv_block_bitwise(m):
+    """eps = ones / unit scales produce the *same floats* as the historical
+    unweighted arithmetic — per conv-block constraint, coefficient for
+    coefficient (1.0·x is exact for every finite float)."""
+    steps = {Objective.CONSTANT: ConstantRule(0.01),
+             Objective.EXPONENTIAL: ExponentialRule(0.02, 0.9995),
+             Objective.DIMINISHING: DiminishingRule(0.02, 600.0),
+             Objective.JOINT: None}
+    p_ref = _scenario("genqsgd", step=steps[m]).problem()
+    p_neu = _scenario(_NEUTRAL, step=steps[m]).problem()
+    z = p_ref.z_init()
+    assert np.array_equal(z, p_neu.z_init())
+    for a, b in zip(p_ref.conv_block(z), p_neu.conv_block(z)):
+        assert np.array_equal(a.c, b.c)
+        assert np.array_equal(a.A, b.A)
+
+
+def test_neutral_hooks_full_solve_bitwise():
+    """The whole scalar GIA (z_init, surrogates, integer recovery) lands on
+    bitwise-identical results through the family interface."""
+    r_ref = solve_param_opt(_scenario("genqsgd").problem())
+    r_neu = solve_param_opt(_scenario(_NEUTRAL).problem())
+    assert np.array_equal(r_ref.z, r_neu.z)
+    assert (r_ref.K0, r_ref.B, r_ref.E) == (r_neu.K0, r_neu.B, r_neu.E)
+    assert np.array_equal(r_ref.Kn, r_neu.Kn)
+    assert r_ref.history == r_neu.history
+
+
+def test_structure_signature_carries_family_key():
+    pg = _scenario("genqsgd").problem()
+    pw = _scenario("gqfedwavg").problem()
+    assert structure_signature(pg) != structure_signature(pw)
+    # coefficient-only hooks: the packed *shapes* still match
+    assert structure_signature(pg)[:4] == structure_signature(pw)[:4]
+
+
+# ---------------------------------------------------------------------------
+# weighted aggregation: bound + runtime agree on the weighting
+# ---------------------------------------------------------------------------
+def test_weighted_conv_closed_form():
+    from repro.core.convergence import c_constant
+    fam = GQFedWAvgFamily(key="gq-w", weights=(4.0, 2.0, 1.0, 1.0),
+                          momentum=0.0, codec_kind="qsgd")
+    prob = _scenario(fam).problem()
+    Kn = np.array([2.0, 3.0, 1.0, 4.0])
+    got = prob.evaluate(100, Kn, 8, None)["C"]
+    eps = fam.agg_eps(4)
+    c1, c2, c3, c4 = CONSTS.c
+    qp = prob.sys.q_pairs
+    g = 0.01
+    sum_K = float((eps * Kn).sum())
+    ref = (c1 / (g * 100 * sum_K) + c2 * g**2 * Kn.max() ** 2
+           + fam.c_scales(4)[1] * c3 * g / 8
+           + c4 * g * (qp * (eps * Kn) ** 2).sum() / sum_K)
+    assert got == pytest.approx(ref, rel=1e-12)
+    assert c_constant(100, Kn, 8, g, prob._c_eff, qp, eps) == got
+
+
+def test_runtime_weighted_aggregation_linearity():
+    """x(w) = x̂ + γ Σ_n w_n Q(Δ_n) is affine in w: two complementary
+    weightings must average to the uniform-mean round exactly."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.genqsgd import GenQSGD, GenQSGDConfig
+
+    task = QuadraticTask(dim=8)
+    data = task.make_data(2)
+    p0 = task.init_params(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+
+    def one_round(w):
+        cfg = GenQSGDConfig(K0=1, Kn=(2, 3), B=4,
+                            step_rule=ConstantRule(0.05), agg_weights=w)
+        alg = GenQSGD(task.loss, task.sample, cfg)
+        x, _ = alg._round(p0, data, key, jnp.float32(0.05))
+        return np.asarray(x["w"])
+
+    x_mean = one_round(None)
+    xa = one_round((0.3, 0.7))
+    xb = one_round((0.7, 0.3))
+    assert np.allclose(xa + xb, 2 * x_mean, atol=1e-6)
+    assert not np.allclose(xa, x_mean, atol=1e-6)   # the weights bite
+
+
+def test_runtime_normalized_momentum_step_size():
+    """normalize=True moves exactly γ per active local step, so each
+    worker's delta norm is bounded by γ·K_n (triangle inequality) and the
+    masked virtual steps contribute nothing."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.genqsgd import GenQSGD, GenQSGDConfig
+
+    task = QuadraticTask(dim=8)
+    data = task.make_data(2)
+    p0 = task.init_params(jax.random.PRNGKey(0))
+    gamma = 0.05
+    cfg = GenQSGDConfig(K0=1, Kn=(1, 4), B=4, step_rule=ConstantRule(gamma),
+                        momentum=0.5, normalize=True)
+    alg = GenQSGD(task.loss, task.sample, cfg)
+    kn = jnp.asarray(cfg.Kn)
+    local = jax.vmap(alg._local_train, in_axes=(None, 0, 0, None, 0))
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    xw = local(p0, data, keys, jnp.float32(gamma), kn)
+    for i, k_n in enumerate(cfg.Kn):
+        d = float(jnp.linalg.norm(xw["w"][i] - p0["w"]))
+        assert 0.0 < d <= gamma * k_n * (1 + 1e-5), (i, d)
+
+
+# ---------------------------------------------------------------------------
+# gqfedwavg end-to-end: optimize -> run closes the loop exactly
+# ---------------------------------------------------------------------------
+def test_gqfedwavg_closed_loop_reference_backend():
+    task = QuadraticTask(dim=8)
+    sys_ = EdgeSystem.paper_sec_vii(dim=task.dim)
+    consts = dataclasses.replace(CONSTS, N=10)
+    scn = Scenario(system=sys_, consts=consts, T_max=1e5, C_max=0.25,
+                   family="gqfedwavg")
+    assert scn._priced_system.codec_kind == "rotated"
+    # rotated pricing: pow2-padded levels + the 32-bit rotation seed
+    # (dim=8 is already a power of two, so only the seed word is added)
+    assert scn._priced_system.M_s0 == sys_.M_s0 + 32.0
+    plan = scn.optimize()
+    assert plan.feasible and plan.codec_kind == "rotated"
+    assert plan.momentum == 0.5 and plan.normalize
+    report = scn.run(plan, task=task)
+    # measured comm-bits == K0 * round_bits at the rotated pricing, exactly
+    assert report.comm_bits == report.predicted_comm_bits
+    assert report.comm_bits_match
+    # full-K0 cost-model measurements price the *family's* codec, so they
+    # coincide with the predictions (internally consistent closed loop)
+    assert report.measured_E == pytest.approx(plan.predicted_E)
+    assert report.measured_T == pytest.approx(plan.predicted_T)
+    assert report.final_metrics["err"] < 0.1
+
+
+def test_gqfedwavg_on_bucketed_system_drops_q_dim():
+    """A rotated family on a per-bucket-norm system must not crash deep in
+    the optimizer: rotation isotropizes the whole message, so the priced
+    system (and the Plan) drop q_dim instead."""
+    sys_t = EdgeSystem.tpu_v5e_fleet(dim=1024, n_groups=4, chips_per_group=1)
+    assert sys_t.q_dim is not None
+    scn = Scenario(system=sys_t, consts=CONSTS, T_max=1e5, C_max=0.25,
+                   family="gqfedwavg")
+    assert scn._priced_system.q_dim is None
+    plan = scn.optimize(max_iter=5)
+    assert plan.q_dim is None and plan.codec_kind == "rotated"
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        Plan.manual(K0=1, Kn=(1,), B=1, step_rule=ConstantRule(0.1),
+                    codec_kind="rotated", q_dim=256)
+
+
+def test_plan_agg_weights_positivity():
+    """Plan enforces the same weight rules as both runtime configs (one
+    shared validator), so a frozen Plan can never carry weights its
+    runtimes would reject."""
+    with pytest.raises(ValueError, match="positive"):
+        Plan.manual(K0=1, Kn=(1, 1), B=1, step_rule=ConstantRule(0.1),
+                    agg_weights=(0.0, 1.0))
+    with pytest.raises(ValueError, match="2 aggregation weights"):
+        Plan.manual(K0=1, Kn=(1, 1, 1), B=1, step_rule=ConstantRule(0.1),
+                    agg_weights=(0.5, 0.5))
+
+
+def test_rotated_plan_round_bits_wire_consistency():
+    """Explicitly naming the Plan's own pricing wire must give the same
+    answer as the default; a *different* wire names a runtime transport
+    (per-tensor QSGD levels) and prices accordingly."""
+    p = Plan.manual(K0=2, Kn=(1,) * 4, B=1, step_rule=ConstantRule(0.1),
+                    s0=7, sn=7, dim=1000, codec_kind="rotated")
+    assert p.round_bits() == p.round_bits(wire="packed")
+    from repro.compress import make_codec
+    up_down = 5 * make_codec(7, wire="f32").wire_bits(1000)
+    assert p.round_bits(wire="f32") == up_down
+
+
+def test_gqfedwavg_plan_derives_both_runtime_configs():
+    fam = GQFedWAvgFamily(key="gq-cfg", weights=(3.0, 1.0),
+                          codec_kind="qsgd")
+    plan = Plan.manual(K0=4, Kn=(1, 2), B=2, step_rule=ConstantRule(0.01),
+                       s0=16, sn=7, family="gq-cfg", codec_kind="qsgd",
+                       agg_weights=fam.agg_weights(2), momentum=fam.momentum,
+                       normalize=fam.normalize)
+    cfg = plan.to_genqsgd_config()
+    assert cfg.agg_weights == (0.75, 0.25)
+    assert cfg.momentum == 0.5 and cfg.normalize
+    fed = plan.to_fed_config(wire="int8")
+    assert fed.agg_weights == (0.75, 0.25)
+    assert fed.momentum == 0.5 and fed.normalize
+
+
+def test_scenario_accepts_family_instances():
+    fam = GQFedWAvgFamily(key="gq-inline", weights=(2.0, 1.0, 1.0, 1.0),
+                          momentum=0.0, codec_kind="qsgd")
+    plan = _scenario(fam).optimize(max_iter=10)
+    assert plan.family == "gq-inline"
+    assert plan.agg_weights == pytest.approx((0.4, 0.2, 0.2, 0.2))
+
+
+def test_family_validation():
+    with pytest.raises(ValueError, match="momentum"):
+        GQFedWAvgFamily(key="bad", momentum=1.0)
+    with pytest.raises(ValueError, match="positive"):
+        GQFedWAvgFamily(key="bad", weights=(1.0, -1.0))
+    fam = GQFedWAvgFamily(key="bad-n", weights=(1.0, 2.0))
+    with pytest.raises(ValueError, match="N=4"):
+        _scenario(fam).problem()

@@ -100,6 +100,8 @@ def test_gp_backends_agree_fast(m):
     ("genqsgd", Objective.EXPONENTIAL),
     ("pm", Objective.DIMINISHING),
     ("genqsgd", Objective.JOINT),
+    ("gqfedwavg", Objective.CONSTANT),
+    ("gqfedwavg", Objective.JOINT),
 ])
 def test_fused_gia_matches_numpy_fast(family, m):
     """The fused single-while-loop engine lands on the NumPy reference:
@@ -210,14 +212,15 @@ def test_batched_jnp_gia_matches_scalar_fast(family, m):
 
 
 @pytest.mark.slow
+@pytest.mark.families
 @pytest.mark.parametrize("backend", ["jnp", "jnp-fused"])
 @pytest.mark.parametrize("family", family_names())
 @pytest.mark.parametrize("m", list(Objective))
 def test_batched_jnp_gia_matches_scalar_full_grid(backend, family, m):
-    """Property over the full (m, family) grid: both device engines land on
-    the scalar NumPy reference's solution — same feasibility verdict, same
-    integer recovery, matching continuous point and costs — including the
-    infeasible (fa, *) / (pr, E) combinations."""
+    """Property over the full (m, family) grid — gqfedwavg included: both
+    device engines land on the scalar NumPy reference's solution — same
+    feasibility verdict, same integer recovery, matching continuous point
+    and costs — including the infeasible (fa, *) / (pr, E) combinations."""
     probs = _problems(family, m, budgets=(0.25, 0.3))
     seq = [solve_param_opt(p) for p in _problems(family, m,
                                                  budgets=(0.25, 0.3))]
