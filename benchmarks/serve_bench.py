@@ -1,0 +1,177 @@
+"""PlanServer throughput/latency under an open-loop Poisson request trace.
+
+The serving-layer benchmark: a seeded synthetic trace of heterogeneous
+``Scenario.optimize`` requests (several structure signatures; early
+requests are unique budgets = cold solves, later ones revisit a hot set —
+exact repeats land in the plan cache, 0.2%-jittered near-duplicates
+warm-start) is submitted open-loop at Poisson arrivals to a
+:class:`repro.serve.PlanServer`.  Measured per source class (hit / warm /
+cold): request latency p50/p99/mean; end-to-end solves/sec over the whole
+trace; cache hit-rate; fused traces per signature.
+
+Hard assertions (the serving contract, not just numbers to eyeball):
+
+  * **<= 1 fused trace/compile per distinct signature** across the whole
+    trace — micro-batches are padded to ``max_batch`` rows, so every
+    dispatch of a signature reuses one executable (both modes);
+  * warm cache-hit solves **>= 3x lower mean latency than cold** in the
+    same trace, and end-to-end solves/sec **>= the PR-4 fig5 warm fused
+    baseline** (11.9 solves/s) — full mode only; the smoke trace is too
+    small to make the ratios meaningful, so it records them instead.
+
+Results land in ``BENCH_serve.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench           # full trace
+    PYTHONPATH=src python -m benchmarks.serve_bench --smoke   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.serve import PlanServer
+
+from .common import get_constants, make_scenario, paper_system
+from .opt_bench import _enable_compilation_cache
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_serve.json")
+
+#: PR-4 fig5 warm fused throughput (solves/s) — the bar the serving layer
+#: must clear end-to-end, admission queueing and cache lookups included.
+BASELINE_SOLVES_S = 11.9
+
+FULL = dict(algos=("Gen-C", "Gen-E", "Gen-D", "Gen-O"), n_unique=8,
+            n_total=480, rate_per_s=400.0, max_batch=16, window_s=0.02)
+SMOKE = dict(algos=("Gen-C", "Gen-O"), n_unique=3, n_total=24,
+             rate_per_s=400.0, max_batch=8, window_s=0.02)
+
+
+def build_trace(rng, sys_, consts, algos, n_unique, n_total):
+    """Seeded two-phase request trace: ``(populate, tail)``.
+
+    The populate phase is every unique (algo, budget) scenario — all cold.
+    The tail re-asks an earlier scenario verbatim (exact fingerprint ->
+    cache hit) or with the budget jittered by ~0.2% (near-duplicate ->
+    warm-started solve), 50/50.  The phases are submitted with a barrier
+    between them: open-loop *within* each phase, but the tail only starts
+    once the populate solves have landed in the cache — otherwise a fast
+    trace outruns its own cache and every repeat is reclassified cold.
+    """
+    pool = []
+    for algo in algos:
+        for c in np.linspace(0.22, 0.45, n_unique):
+            scn, _ = make_scenario(algo, sys_, consts, T_max=1e5,
+                                   C_max=float(c))
+            pool.append(scn)
+    rng.shuffle(pool)
+    tail = []
+    while len(pool) + len(tail) < n_total:
+        base = pool[rng.integers(len(pool))]
+        if rng.random() < 0.5:
+            tail.append(base)                        # exact repeat: hit
+        else:
+            jitter = 1.0 + rng.uniform(-2e-3, 2e-3)
+            tail.append(dataclasses.replace(         # near-duplicate: warm
+                base, C_max=base.C_max * jitter))
+    return pool, tail
+
+
+def _latency_stats(handles):
+    if not handles:
+        return {"count": 0}
+    ms = np.array([h.latency_s for h in handles]) * 1e3
+    return {"count": len(handles), "mean_ms": round(float(ms.mean()), 3),
+            "p50_ms": round(float(np.percentile(ms, 50)), 3),
+            "p99_ms": round(float(np.percentile(ms, 99)), 3)}
+
+
+def run(smoke=False, seed=0):
+    cfg = SMOKE if smoke else FULL
+    _enable_compilation_cache()
+    rng = np.random.default_rng(seed)
+    consts = get_constants()
+    sys_ = paper_system()
+    populate, tail = build_trace(rng, sys_, consts, cfg["algos"],
+                                 cfg["n_unique"], cfg["n_total"])
+    n = len(populate) + len(tail)
+    gaps = rng.exponential(1.0 / cfg["rate_per_s"], size=n)
+
+    with PlanServer(max_batch=cfg["max_batch"],
+                    window_s=cfg["window_s"]) as srv:
+        handles = []
+        t0 = time.perf_counter()
+        for phase in (populate, tail):               # open-loop within each
+            for scn in phase:                        # phase, barrier between
+                time.sleep(gaps[len(handles)])
+                handles.append(srv.submit(scn))
+            for h in handles:
+                h.result(timeout=600)
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+        compiles = {"/".join(map(str, sig)): c
+                    for sig, c in srv.compile_counts().items()}
+
+    by_src = {s: [h for h in handles if h.source == s]
+              for s in ("hit", "warm", "cold")}
+    lat = {s: _latency_stats(hs) for s, hs in by_src.items()}
+    lat["all"] = _latency_stats(handles)
+    solves_per_s = len(handles) / wall
+    ratio = (lat["cold"]["mean_ms"] / lat["warm"]["mean_ms"]
+             if by_src["warm"] and by_src["cold"] else None)
+
+    assert all(c <= 1 for c in compiles.values()), \
+        f"fused engine re-traced a signature: {compiles}"
+    if not smoke:
+        assert ratio is not None and ratio >= 3.0, \
+            f"warm mean latency only {ratio:.2f}x better than cold"
+        assert solves_per_s >= BASELINE_SOLVES_S, \
+            f"{solves_per_s:.1f} solves/s < fig5 warm fused baseline " \
+            f"({BASELINE_SOLVES_S})"
+
+    bench = {
+        "schema": 1,
+        "smoke": bool(smoke),
+        "trace": {"requests": len(handles), "seed": seed,
+                  "rate_per_s": cfg["rate_per_s"],
+                  "signatures": stats["signatures"],
+                  "algos": list(cfg["algos"]),
+                  "max_batch": cfg["max_batch"],
+                  "window_s": cfg["window_s"]},
+        "latency_ms": lat,
+        "solves_per_s": round(solves_per_s, 2),
+        "baseline_fig5_warm_fused_solves_per_s": BASELINE_SOLVES_S,
+        "warm_vs_cold_latency_ratio": round(ratio, 2) if ratio else None,
+        "hit_rate": round(stats["hit_rate"], 4),
+        "sources": {s: len(hs) for s, hs in by_src.items()},
+        "mean_batch": round(stats["mean_batch"], 2),
+        "batches": stats["batches"],
+        "compiles_per_signature": compiles,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(bench, f, indent=2)
+        f.write("\n")
+    print(f"  {len(handles)} requests in {wall:.2f}s "
+          f"({solves_per_s:.1f} solves/s, hit rate "
+          f"{stats['hit_rate']:.0%}); mean latency "
+          f"cold {lat['cold'].get('mean_ms', 0):.0f}ms / warm "
+          f"{lat['warm'].get('mean_ms', 0):.0f}ms / hit "
+          f"{lat['hit'].get('mean_ms', 0):.2f}ms"
+          + (f"; warm {ratio:.1f}x faster than cold" if ratio else "")
+          + f"; {sum(compiles.values())} compiles "
+            f"over {stats['signatures']} signatures")
+    return {"json": BENCH_JSON, "solves_per_s": round(solves_per_s, 2),
+            "hit_rate": round(stats["hit_rate"], 3), "wall_s": round(wall, 2)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="24-request 2-signature trace for CI smoke runs")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print(run(smoke=args.smoke, seed=args.seed))

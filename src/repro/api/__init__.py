@@ -57,14 +57,18 @@ __all__ = [
     "STEP_RULES", "FAMILIES", "register_step_rule", "register_family",
     "family_names", "AlgorithmFamily", "GQFedWAvgFamily", "get_family",
     "MNISTTask", "QuadraticTask", "SpmdTask",
-    "GenQSGDTrainer", "round_comm_bits",
+    "GenQSGDTrainer", "round_comm_bits", "PlanServer",
 ]
 
 
 def __getattr__(name):
     # lazy: the trainer pulls the SPMD runtime stack, which optimizer-only
-    # consumers (e.g. benchmarks/tpu_autotune) never need
+    # consumers (e.g. benchmarks/tpu_autotune) never need; the PlanServer
+    # lives in repro.serve (Scenario.optimize(server=...) accepts one)
     if name in ("GenQSGDTrainer", "round_comm_bits"):
         from ..train import trainer
         return getattr(trainer, name)
+    if name == "PlanServer":
+        from ..serve.planserver import PlanServer
+        return PlanServer
     raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

@@ -29,7 +29,7 @@ from ..core.genqsgd import GenQSGD
 from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
                                StepRule)
 from ..families import AlgorithmFamily, resolve
-from ..opt.gia import solve_param_opt
+from ..opt.gia import solve_param_opt, solve_param_opt_batched
 from ..opt.problems import Objective, ParamOptProblem, VarMap
 from .plan import Plan, RunReport
 from .tasks import MNISTTask
@@ -145,13 +145,33 @@ class Scenario:
                     converged=bool(r.converged))
 
     def optimize(self, m=None, z0=None, tol: float = 1e-4,
-                 max_iter: int = 60, verbose: bool = False) -> Plan:
+                 max_iter: int = 60, verbose: bool = False,
+                 backend: str = "numpy", server=None) -> Plan:
         """Solve the scenario's parameter-optimization problem (Algorithms
-        2-5) and freeze the solution into a :class:`Plan`."""
+        2-5) and freeze the solution into a :class:`Plan`.
+
+        ``backend`` picks the solver engine: ``"numpy"`` (the scalar
+        reference loop) or ``"jnp"``/``"jnp-fused"`` — the fused engine
+        compiles once per structure signature into a process-level cache,
+        so repeated ``optimize()`` calls across distinct Scenario objects
+        reuse the executable.  ``z0`` warm-starts the GIA (e.g. from a
+        previously solved neighbor's ``Plan``).  Passing ``server`` (a
+        :class:`~repro.serve.PlanServer`) routes the request through its
+        micro-batching queue and warm-start cache instead — the server's
+        own ``tol``/``max_iter`` govern, and concurrent same-signature
+        requests share one fused device call.
+        """
+        if server is not None:
+            return server.solve(self, m=m)
         m = self._resolve(m)
         prob = self.problem(m)
-        r = solve_param_opt(prob, z0=z0, tol=tol, max_iter=max_iter,
-                            verbose=verbose)
+        if backend == "numpy":
+            r = solve_param_opt(prob, z0=z0, tol=tol, max_iter=max_iter,
+                                verbose=verbose)
+        else:
+            r = solve_param_opt_batched(
+                [prob], z0s=None if z0 is None else [z0], tol=tol,
+                max_iter=max_iter, backend=backend, verbose=verbose)[0]
         return self._plan_from_result(m, r)
 
     def sweep(self, over, names=None, backend: str = "auto",

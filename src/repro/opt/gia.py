@@ -116,11 +116,13 @@ def solve_param_opt(problem: ParamOptProblem,
 
 
 def solve_param_opt_batched(problems: Sequence[ParamOptProblem],
-                            z0s: Optional[Sequence[np.ndarray]] = None,
+                            z0s: Optional[Sequence[Optional[np.ndarray]]]
+                            = None,
                             tol: float = 1e-4, max_iter: int = 60,
                             backend: str = "jnp",
                             verbose: bool = False,
-                            joint_restart: bool = True) -> List[GIAResult]:
+                            joint_restart: bool = True,
+                            pad_to: int = 0) -> List[GIAResult]:
     """Lockstep-batched ``solve_param_opt`` over same-structure instances.
 
     Per-instance semantics match the scalar loop exactly: each instance sees
@@ -131,6 +133,15 @@ def solve_param_opt_batched(problems: Sequence[ParamOptProblem],
     the whole outer loop — surrogate refresh included — as one jitted
     device program per structure signature (:mod:`repro.opt.gia_jax`;
     nothing to print per iteration, so ``verbose`` is a no-op there).
+
+    ``z0s`` warm-starts individual rows: entries are starting points in
+    log-space, or ``None`` for that row's cold ``z_init()`` — warm and cold
+    rows mix freely inside one batch (a row warm-started at a previously
+    solved KKT point re-converges in 1-3 GIA iterations instead of running
+    cold phase-I).  ``pad_to`` (fused backend only) pads the device batch to
+    a fixed row count so variable-size micro-batches of one signature share
+    a single compiled executable; padding rows are discarded before the
+    m=J restart and never finalized.
     """
     problems = list(problems)
     if not problems:
@@ -146,16 +157,20 @@ def solve_param_opt_batched(problems: Sequence[ParamOptProblem],
     if z0s is None:
         zs = [p.z_init() for p in problems]
     else:
-        zs = [np.asarray(z, dtype=np.float64).copy() for z in z0s]
+        zs = [p.z_init() if z is None
+              else np.asarray(z, dtype=np.float64).copy()
+              for p, z in zip(problems, z0s)]
     if backend == "jnp-fused":
         from .gia_jax import solve_gia_fused
         results = [
             _finalize(p, np.asarray(z, dtype=np.float64), history, conv)
             for p, (z, history, conv)
-            in zip(problems, solve_gia_fused(problems, zs, tol, max_iter))]
+            in zip(problems, solve_gia_fused(problems, zs, tol, max_iter,
+                                             pad_to=pad_to))]
         if joint_restart and problems[0].m is Objective.JOINT:
             results = _joint_restart_batched(problems, results, tol,
-                                             max_iter, backend)
+                                             max_iter, backend,
+                                             pad_to=pad_to)
         return results
     structure = GPStructure(problems[0])
     history: List[List[float]] = [[] for _ in range(B)]
@@ -241,10 +256,11 @@ def _better_kkt(a: GIAResult, b: GIAResult) -> GIAResult:
 
 def _joint_restart_batched(problems: Sequence[ParamOptProblem],
                            colds: List[GIAResult], tol: float, max_iter: int,
-                           backend: str) -> List[GIAResult]:
+                           backend: str, pad_to: int = 0) -> List[GIAResult]:
     """Batched counterpart of the scalar restart in :func:`solve_param_opt`:
     one batched companion solve + one batched warm re-solve per seed round
-    (companions share a signature, so each round stays two compiled calls).
+    (companions share a signature, so each round stays two compiled calls;
+    ``pad_to`` keeps both at the caller's fixed batch shape).
     """
     i_ex = problems[0].vmap.names.index("extra")
     cands = [_joint_seed_gammas(p, r) for p, r in zip(problems, colds)]
@@ -253,7 +269,7 @@ def _joint_restart_batched(problems: Sequence[ParamOptProblem],
         idxs = [i for i, c in enumerate(cands) if len(c) > j]
         comps = [_companion_constant(problems[i], cands[i][j]) for i in idxs]
         rcs = solve_param_opt_batched(comps, tol=tol, max_iter=max_iter,
-                                      backend=backend)
+                                      backend=backend, pad_to=pad_to)
         z0s = []
         for i, rc in zip(idxs, rcs):
             zw = rc.z.copy()
@@ -261,7 +277,8 @@ def _joint_restart_batched(problems: Sequence[ParamOptProblem],
             z0s.append(zw)
         warms = solve_param_opt_batched([problems[i] for i in idxs], z0s=z0s,
                                         tol=tol, max_iter=max_iter,
-                                        backend=backend, joint_restart=False)
+                                        backend=backend, joint_restart=False,
+                                        pad_to=pad_to)
         for i, w in zip(idxs, warms):
             best[i] = _better_kkt(best[i], w)
     return best

@@ -29,6 +29,7 @@ and unpacked host-side after the single device call.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, List, Sequence, Tuple
 
@@ -44,7 +45,8 @@ from .problems import Objective
 from .refresh import RefreshPlan, make_project, make_refresh
 from .structure import PAD_LOGC
 
-__all__ = ["solve_gia_fused", "trace_count", "TRACE_COUNTS"]
+__all__ = ["solve_gia_fused", "trace_count", "TRACE_COUNTS",
+           "compile_cache_info", "compile_cache_clear"]
 #: host-loop stall budget, verbatim (gia.solve_param_opt_batched)
 _STALL_MAX = 8
 #: emergency bound on total body iterations (a legitimate solve is ~1e3-1e4
@@ -60,6 +62,23 @@ TRACE_COUNTS: Dict[tuple, int] = {}
 def trace_count(plan_or_key) -> int:
     key = getattr(plan_or_key, "signature_key", plan_or_key)
     return sum(v for k, v in TRACE_COUNTS.items() if k[0] == key)
+
+
+def compile_cache_info():
+    """Hit/miss statistics of the process-level fused-program cache.
+
+    The cache is owned by the module (``functools.lru_cache`` on
+    :func:`_compiled`), not by any solver or batch object: every
+    ``Scenario.optimize``, sweep, and :class:`~repro.serve.PlanServer`
+    micro-batch in the process shares the same traced refresh plans and
+    compiled executables, keyed by (structure signature, max_iter) and —
+    inside jax.jit — the padded batch shape.
+    """
+    return _compiled.cache_info()
+
+
+def compile_cache_clear():
+    _compiled.cache_clear()
 
 
 @functools.lru_cache(maxsize=64)
@@ -323,17 +342,34 @@ def _compiled(m_value: str, n: int, m_cons: int, seg_bytes: bytes,
 
 
 def solve_gia_fused(problems: Sequence, z0s: Sequence[np.ndarray],
-                    tol: float, max_iter: int
+                    tol: float, max_iter: int, pad_to: int = 0
                     ) -> List[Tuple[np.ndarray, List[float], bool]]:
     """Run the fused lockstep GIA; returns per-instance
-    ``(z, history, converged)`` for :func:`repro.opt.gia._finalize`."""
+    ``(z, history, converged)`` for :func:`repro.opt.gia._finalize`.
+
+    ``pad_to > len(problems)`` pads the device batch to a fixed row count by
+    replicating row 0 (padding rows solve normally and are discarded), so
+    every dispatch of a structure signature shares one jitted shape — a
+    serving loop whose micro-batches vary in size still pays exactly one
+    trace/compile per signature.  Padding rows cannot stretch the lockstep:
+    the flat state machine's trip count is the max of per-row totals, and a
+    duplicate of row 0 finishes exactly when row 0 does.
+    """
     plan = RefreshPlan.build(problems)
     fn = _compiled(plan.m.value, plan.n, plan.m_cons, plan.seg.tobytes(),
                    plan.caps, plan.i_x0, int(max_iter))
+    z0 = np.stack([np.asarray(z, dtype=np.float64) for z in z0s])
+    pad = int(pad_to) - len(problems)
+    if pad > 0:
+        def _pad(a):
+            return np.concatenate([a, np.repeat(a[:1], pad, axis=0)])
+        z0 = _pad(z0)
+        plan = dataclasses.replace(
+            plan, obj_logc=_pad(plan.obj_logc), obj_A=_pad(plan.obj_A),
+            skel_logc=_pad(plan.skel_logc), skel_A=_pad(plan.skel_A),
+            arrays={k: _pad(v) for k, v in plan.arrays.items()})
     with enable_x64():
-        z, conv, hist, nh = fn(float(tol),
-                               np.stack([np.asarray(z, dtype=np.float64)
-                                         for z in z0s]),
+        z, conv, hist, nh = fn(float(tol), z0,
                                plan.obj_logc, plan.obj_A, plan.skel_logc,
                                plan.skel_A, plan.arrays)
         # the single host sync of the whole solve

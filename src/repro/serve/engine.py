@@ -31,6 +31,8 @@ class Request:
     output: Optional[List[int]] = None
     slot: int = -1
     done: bool = False
+    failed: bool = False               # rejected at admission (no slot used)
+    error: Optional[str] = None
 
 
 class ServeEngine:
@@ -73,12 +75,27 @@ class ServeEngine:
         self.caches = jax.tree.map(splice, self.caches, new_caches)
 
     def submit(self, req: Request) -> bool:
-        """Admit a request if a slot is free.  Prefills immediately."""
+        """Admit a request if a slot is free.  Prefills immediately.
+
+        Returns True when the request was *consumed* — admitted to a slot,
+        or rejected (``req.failed`` set) because it can never fit the KV
+        cache.  A rejection must not take the whole engine down (one
+        oversized request in a stream used to assert-crash every other
+        in-flight request); it also must not occupy a slot.  False means
+        "no free slot, try again later".
+        """
+        P = len(req.prompt)
+        if P + req.max_new_tokens > self.max_len:
+            req.done = True
+            req.failed = True
+            req.output = []
+            req.error = (f"prompt ({P}) + max_new_tokens "
+                         f"({req.max_new_tokens}) exceeds the engine's "
+                         f"max_len ({self.max_len})")
+            return True
         slot = self._free_slot()
         if slot is None:
             return False
-        P = len(req.prompt)
-        assert P + req.max_new_tokens <= self.max_len
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None],
                  "labels": jnp.zeros((1, P), jnp.int32)}
         if self.cfg.family == "vlm":

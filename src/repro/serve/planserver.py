@@ -1,0 +1,395 @@
+"""PlanServer: multi-tenant plan serving over the fused GIA engine.
+
+The optimizer as a service: every device cohort (its own
+:class:`~repro.api.Scenario` — system, family, budgets) asks for its own
+operating point, concurrently.  The fused solver already turns 1e3+-point
+same-signature batches into one compiled device call; this module exploits
+that for an *open-loop stream* of heterogeneous requests:
+
+  * **signature micro-batching** — ``submit()`` enqueues the request under
+    its optimizer structure signature ``(m, family varmap, N)``; a
+    dispatcher thread groups same-signature requests into micro-batches
+    (admission ``window_s`` / ``max_batch`` knobs, modeled on the slot-based
+    continuous batching in :mod:`repro.serve.engine`) and dispatches each
+    batch to ``backend="jnp-fused"`` — padded to a fixed ``max_batch`` row
+    count, so the whole trace pays **one trace/compile per distinct
+    signature** (process-level LRU of traced refresh plans + executables in
+    :mod:`repro.opt.gia_jax`, asserted via its ``TRACE_COUNTS`` hook);
+
+  * **warm-start plan cache** — solved scenarios are cached under a
+    quantized *fingerprint* of the problem's coefficient tensors.  An exact
+    fingerprint match returns the frozen Plan without solving; a near match
+    (same signature, relative distance ≤ ``warm_radius``) seeds the new
+    row's GIA at the cached solution's expansion point, so warm rows
+    re-converge in 1-3 GIA iterations instead of cold phase-I — warm and
+    cold rows mix freely inside one micro-batch (per-row ``z0s`` in
+    :func:`repro.opt.gia.solve_param_opt_batched`).
+
+Requests return :class:`PlanHandle`\\ s; ``handle.result()`` blocks until
+the frozen :class:`~repro.api.plan.Plan` is ready.  ``Scenario.optimize(
+server=...)`` routes through a server transparently.
+
+    with PlanServer(max_batch=16, window_s=0.02) as srv:
+        handles = [srv.submit(s) for s in scenarios]   # open-loop stream
+        plans = [h.result() for h in handles]
+        srv.stats()                                    # hit-rate, compiles
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..opt.gia import GIAResult, solve_param_opt_batched
+from ..opt.problems import Objective
+from ..opt.refresh import RefreshPlan
+from ..opt.structure import structure_signature
+
+__all__ = ["PlanServer", "PlanHandle", "PlanCache", "fingerprint",
+           "fingerprint_distance"]
+
+
+# ---------------------------------------------------------------------------
+# scenario fingerprints
+# ---------------------------------------------------------------------------
+def fingerprint(problem) -> np.ndarray:
+    """The problem instance as a flat coefficient vector.
+
+    Concatenates the objective / packed-skeleton log-coefficients and the
+    refresh plan's per-instance coefficient arrays (exponent rows are
+    signature-determined, so they are skipped): two problems of one
+    signature agree on this vector iff they are numerically the same
+    instance — budgets, step-size parameters, Theorem-1 constants, and
+    every cost-model coefficient all live in these tensors, so nothing a
+    Scenario can vary escapes the fingerprint.
+    """
+    plan = RefreshPlan.build([problem])
+    parts = [plan.obj_logc[0].ravel(), plan.skel_logc[0].ravel()]
+    for k in sorted(plan.arrays):
+        if k.endswith("_A"):
+            continue
+        parts.append(np.asarray(plan.arrays[k][0], np.float64).ravel())
+    return np.concatenate(parts)
+
+
+def fingerprint_distance(a: np.ndarray, b: np.ndarray) -> float:
+    """Scale-free nearness: max relative coordinate deviation."""
+    return float(np.max(np.abs(a - b) / (1.0 + np.abs(b))))
+
+
+def _quantize(vec: np.ndarray) -> bytes:
+    # float32 keeps ~7 significant digits per coordinate — repeats of the
+    # same Scenario collide exactly, genuinely different budgets never do
+    return vec.astype(np.float32).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# warm-start plan cache
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _CacheEntry:
+    vec: np.ndarray
+    result: GIAResult          # converged GIA result (z = expansion point)
+
+
+class PlanCache:
+    """LRU of converged solves keyed by (signature, quantized fingerprint).
+
+    Two lookups: :meth:`get` (exact quantized match — serve the cached
+    solution without solving) and :meth:`nearest` (closest cached neighbor
+    of one signature — its continuous solution seeds a warm GIA row).
+    Only *converged* results are cached: a stalled/infeasible point is not
+    an expansion point anyone should warm-start from.
+    """
+
+    def __init__(self, maxsize: int = 4096):
+        self.maxsize = int(maxsize)
+        self._lock = threading.Lock()
+        self._entries: "collections.OrderedDict[tuple, _CacheEntry]" = \
+            collections.OrderedDict()          # (sig, fp) -> entry
+        self._by_sig: Dict[tuple, Dict[bytes, _CacheEntry]] = {}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, sig: tuple, fp: bytes) -> Optional[_CacheEntry]:
+        with self._lock:
+            e = self._entries.get((sig, fp))
+            if e is not None:
+                self._entries.move_to_end((sig, fp))
+            return e
+
+    def nearest(self, sig: tuple, vec: np.ndarray
+                ) -> Tuple[Optional[_CacheEntry], float]:
+        with self._lock:
+            pool = self._by_sig.get(sig)
+            if not pool:
+                return None, float("inf")
+            best, best_d = None, float("inf")
+            for e in pool.values():
+                d = fingerprint_distance(vec, e.vec)
+                if d < best_d:
+                    best, best_d = e, d
+            return best, best_d
+
+    def put(self, sig: tuple, fp: bytes, entry: _CacheEntry):
+        with self._lock:
+            key = (sig, fp)
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            self._by_sig.setdefault(sig, {})[fp] = entry
+            while len(self._entries) > self.maxsize:
+                (osig, ofp), _ = self._entries.popitem(last=False)
+                self._by_sig[osig].pop(ofp, None)
+
+
+# ---------------------------------------------------------------------------
+# request handle
+# ---------------------------------------------------------------------------
+class PlanHandle:
+    """One submitted ``Scenario.optimize`` request.
+
+    ``source`` records how it was served: ``"hit"`` (exact fingerprint —
+    cached solution, no solve), ``"warm"`` (solved, seeded from the nearest
+    cached neighbor), or ``"cold"`` (solved from ``z_init``).
+    """
+
+    def __init__(self, scenario, m, problem, sig, vec, fp):
+        self.scenario = scenario
+        self.m = m
+        self.problem = problem
+        self.sig = sig
+        self.vec = vec
+        self.fp = fp
+        self.plan = None
+        self.error: Optional[str] = None
+        self.source: Optional[str] = None
+        self.warm_dist: Optional[float] = None
+        self.batch_size: Optional[int] = None
+        self.t_submit = time.perf_counter()
+        self.t_done: Optional[float] = None
+        self.z0: Optional[np.ndarray] = None
+        self._event = threading.Event()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("plan request still pending")
+        if self.error is not None:
+            raise RuntimeError(self.error)
+        return self.plan
+
+    def _resolve(self):
+        self.t_done = time.perf_counter()
+        self._event.set()
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+class PlanServer:
+    """Multi-tenant plan serving: signature micro-batching + warm-start
+    cache over the fused GIA backend.
+
+    Knobs: ``max_batch`` (batch capacity *and* the fixed padded device
+    shape — every dispatch of a signature reuses one compiled executable),
+    ``window_s`` (admission window: a batch launches when full or when its
+    oldest request has waited this long), ``warm_radius`` (max relative
+    fingerprint distance for warm-start seeding), ``cache_size`` (LRU
+    entries).  ``tol``/``max_iter`` are server-wide so every micro-batch of
+    a signature shares one compiled program.
+
+    m=J batches whose rows are *all* warm skip the Gen-C-seeded joint
+    restart (``restart_warm_joint=True`` re-enables it): each warm seed is
+    itself a post-restart best KKT point, so re-running the companion
+    solves can only reproduce it.
+    """
+
+    def __init__(self, max_batch: int = 16, window_s: float = 0.02,
+                 backend: str = "jnp-fused", tol: float = 1e-4,
+                 max_iter: int = 60, cache_size: int = 4096,
+                 warm_radius: float = 0.05, restart_warm_joint: bool = False,
+                 start: bool = True):
+        self.max_batch = int(max_batch)
+        self.window_s = float(window_s)
+        self.backend = backend
+        self.tol = float(tol)
+        self.max_iter = int(max_iter)
+        self.warm_radius = float(warm_radius)
+        self.restart_warm_joint = bool(restart_warm_joint)
+        self.cache = PlanCache(maxsize=cache_size)
+        self._cond = threading.Condition()
+        self._queues: Dict[tuple, "collections.deque[PlanHandle]"] = {}
+        self._closing = False
+        self._counts = collections.Counter()
+        self._batch_sizes: List[int] = []
+        self._trace_base: Dict[tuple, Tuple[tuple, int]] = {}
+        self._thread: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # -- lifecycle -----------------------------------------------------
+    def start(self):
+        if self._thread is not None:
+            return self
+        self._thread = threading.Thread(target=self._dispatch_loop,
+                                        name="planserver", daemon=True)
+        self._thread.start()
+        return self
+
+    def close(self):
+        """Drain every pending request, then stop the dispatcher."""
+        with self._cond:
+            self._closing = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- submission ----------------------------------------------------
+    def submit(self, scenario, m=None) -> PlanHandle:
+        """Admit one ``Scenario.optimize`` request; returns immediately."""
+        m = scenario._resolve(m)
+        problem = scenario.problem(m)
+        sig = structure_signature(problem)
+        vec = fingerprint(problem)
+        fp = _quantize(vec)
+        h = PlanHandle(scenario, m, problem, sig, vec, fp)
+        hit = self.cache.get(sig, fp)
+        if hit is not None:
+            h.source = "hit"
+            h.plan = scenario._plan_from_result(m, hit.result)
+            with self._cond:
+                self._counts["hit"] += 1
+                self._counts["submitted"] += 1
+            h._resolve()
+            return h
+        near, dist = self.cache.nearest(sig, vec)
+        if near is not None and dist <= self.warm_radius:
+            h.source, h.warm_dist, h.z0 = "warm", dist, near.result.z
+        else:
+            h.source = "cold"
+        with self._cond:
+            if self._closing:
+                raise RuntimeError("PlanServer is closed")
+            self._counts["submitted"] += 1
+            self._counts[h.source] += 1
+            self._queues.setdefault(sig, collections.deque()).append(h)
+            self._cond.notify_all()
+        return h
+
+    def solve(self, scenario, m=None, timeout: Optional[float] = None):
+        """Blocking convenience: ``submit(...).result(...)``."""
+        return self.submit(scenario, m=m).result(timeout)
+
+    def solve_many(self, scenarios: Sequence, timeout: Optional[float] = None
+                   ) -> List:
+        handles = [self.submit(s) for s in scenarios]
+        return [h.result(timeout) for h in handles]
+
+    # -- dispatcher ----------------------------------------------------
+    def _take_batch(self) -> Optional[List[PlanHandle]]:
+        """Under the lock: pop the most overdue ready batch, or None."""
+        now = time.perf_counter()
+        ready_sig, oldest = None, None
+        for sig, q in self._queues.items():
+            if not q:
+                continue
+            t0 = q[0].t_submit
+            if (len(q) >= self.max_batch or self._closing
+                    or now - t0 >= self.window_s):
+                if oldest is None or t0 < oldest:
+                    ready_sig, oldest = sig, t0
+        if ready_sig is None:
+            return None
+        q = self._queues[ready_sig]
+        return [q.popleft() for _ in range(min(len(q), self.max_batch))]
+
+    def _next_deadline(self) -> Optional[float]:
+        ts = [q[0].t_submit + self.window_s
+              for q in self._queues.values() if q]
+        return min(ts) if ts else None
+
+    def _dispatch_loop(self):
+        while True:
+            with self._cond:
+                batch = self._take_batch()
+                while batch is None:
+                    if self._closing and not any(self._queues.values()):
+                        return
+                    dl = self._next_deadline()
+                    self._cond.wait(
+                        None if dl is None
+                        else max(1e-4, dl - time.perf_counter()))
+                    batch = self._take_batch()
+            self._solve_batch(batch)
+
+    def _solve_batch(self, batch: List[PlanHandle]):
+        problems = [h.problem for h in batch]
+        sig = batch[0].sig
+        if sig not in self._trace_base:
+            from ..opt import gia_jax
+            key = RefreshPlan.build([problems[0]]).signature_key
+            self._trace_base[sig] = (key, gia_jax.trace_count(key))
+        joint = problems[0].m is Objective.JOINT
+        all_warm = all(h.source == "warm" for h in batch)
+        restart = not (joint and all_warm and not self.restart_warm_joint)
+        pad = self.max_batch if self.backend == "jnp-fused" else 0
+        try:
+            results = solve_param_opt_batched(
+                problems, z0s=[h.z0 for h in batch], tol=self.tol,
+                max_iter=self.max_iter, backend=self.backend,
+                joint_restart=restart, pad_to=pad)
+        except Exception as e:                      # noqa: BLE001
+            for h in batch:
+                h.error = f"{type(e).__name__}: {e}"
+                h._resolve()
+            return
+        self._batch_sizes.append(len(batch))
+        for h, r in zip(batch, results):
+            h.plan = h.scenario._plan_from_result(h.m, r)
+            h.batch_size = len(batch)
+            if r.converged:
+                self.cache.put(sig, h.fp, _CacheEntry(h.vec, r))
+            h._resolve()
+
+    # -- introspection -------------------------------------------------
+    def compile_counts(self) -> Dict[tuple, int]:
+        """Fused-program traces attributed to this server, per signature —
+        the "one compile per distinct signature" assertion reads this."""
+        from ..opt import gia_jax
+        return {sig: gia_jax.trace_count(key) - base
+                for sig, (key, base) in self._trace_base.items()}
+
+    def stats(self) -> dict:
+        sizes = self._batch_sizes
+        return {
+            "submitted": self._counts["submitted"],
+            "hits": self._counts["hit"],
+            "warm": self._counts["warm"],
+            "cold": self._counts["cold"],
+            "hit_rate": (self._counts["hit"] / self._counts["submitted"]
+                         if self._counts["submitted"] else 0.0),
+            "batches": len(sizes),
+            "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
+            "signatures": len(self._trace_base),
+            "cache_entries": len(self.cache),
+            "compiles": {"/".join(map(str, sig)): c
+                         for sig, c in self.compile_counts().items()},
+        }

@@ -26,6 +26,37 @@ def test_slot_reuse_and_completion():
     assert all(r.done and len(r.output) == 6 for r in out)
 
 
+def test_submit_rejects_overlong_request():
+    """A request that can never fit the KV cache is rejected (marked
+    failed), not assert-crashed: the engine and every other in-flight
+    request keep going."""
+    cfg, params = _setup()
+    eng = ServeEngine(params, cfg, slots=2, max_len=64,
+                      cache_dtype=jnp.float32)
+    rng = np.random.default_rng(2)
+    ok1 = Request(prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+                  max_new_tokens=6)
+    bad = Request(prompt=rng.integers(0, cfg.vocab, 60).astype(np.int32),
+                  max_new_tokens=6)          # 60 + 6 > 64: impossible
+    ok2 = Request(prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+                  max_new_tokens=6)
+    out = eng.run([ok1, bad, ok2])
+    assert bad.done and bad.failed and bad.output == []
+    assert "max_len" in bad.error
+    assert bad.slot == -1                    # never occupied a slot
+    for r in (ok1, ok2):
+        assert r.done and not r.failed and len(r.output) == 6
+    # the rejected request's tokens never entered a cache: ok2 alone agrees
+    eng1 = ServeEngine(params, cfg, slots=1, max_len=64,
+                       cache_dtype=jnp.float32)
+    rng = np.random.default_rng(2)
+    _ = rng.integers(0, cfg.vocab, 10)
+    _ = rng.integers(0, cfg.vocab, 60)
+    alone = Request(prompt=rng.integers(0, cfg.vocab, 10).astype(np.int32),
+                    max_new_tokens=6)
+    assert eng1.run([alone])[0].output == ok2.output
+
+
 def test_cross_slot_isolation():
     """Mixed prompt lengths in one batch must not interfere (per-row cache
     cursors)."""

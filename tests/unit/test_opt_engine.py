@@ -159,6 +159,122 @@ def test_fused_stalled_instance_regression():
     assert np.array_equal(good.Kn, solo.Kn)
 
 
+def _assert_warm_matches_cold(family, m, tol, z_atol):
+    """Warm-starting a solve at its own cold solution must reach the same
+    KKT point: 1-3 GIA iterations (no cold phase-I), continuous point to
+    ``z_atol``, identical integer recovery."""
+    budgets = (0.22, 0.25, 0.3)
+    cold = solve_param_opt_batched(_problems(family, m, budgets),
+                                   backend="jnp-fused", tol=tol)
+    warm = solve_param_opt_batched(_problems(family, m, budgets),
+                                   z0s=[r.z for r in cold],
+                                   backend="jnp-fused", tol=tol,
+                                   joint_restart=False)
+    for c, w in zip(cold, warm):
+        if not c.converged:
+            continue                  # nothing cached seeds from such a row
+        assert w.converged
+        assert 1 <= w.iterations <= 3
+        assert np.allclose(w.z, c.z, atol=z_atol)
+        assert c.feasible == w.feasible
+        if c.feasible:
+            assert (c.K0, c.B) == (w.K0, w.B)
+            assert np.array_equal(c.Kn, w.Kn)
+            assert w.E == pytest.approx(c.E, rel=1e-9)
+
+
+@pytest.mark.parametrize("family,m", [
+    ("genqsgd", Objective.CONSTANT),
+    ("genqsgd", Objective.JOINT),
+])
+def test_warm_start_reaches_cold_kkt_fast(family, m):
+    # measured fixed-point accuracy at tol=1e-8: C/D/J ~1e-9, E ~4e-9
+    _assert_warm_matches_cold(family, m, tol=1e-8, z_atol=1e-8)
+
+
+@pytest.mark.slow
+@pytest.mark.serve
+@pytest.mark.families
+@pytest.mark.parametrize("family", family_names())
+@pytest.mark.parametrize("m", list(Objective))
+def test_warm_start_reaches_cold_kkt_full_grid(family, m):
+    """Warm-start correctness over the whole (m, family) grid: the plan
+    cache may only ever hand out seeds that re-converge to the cold
+    answer."""
+    _assert_warm_matches_cold(family, m, tol=1e-8, z_atol=1e-8)
+
+
+def test_fused_mixed_warm_cold_with_stalled_row():
+    """PR-4 stalled-row regression, extended with warm/cold mixing: a
+    stalled/infeasible row inside a mixed warm/cold micro-batch must not
+    perturb the healthy rows — the warm row still converges in 1-3
+    iterations onto its cold KKT point, the cold row matches its solo
+    solve, and the padding rows of a fixed-shape dispatch change nothing."""
+    healthy = _scenario("genqsgd", Objective.CONSTANT, C_max=0.25).problem()
+    other = _scenario("genqsgd", Objective.CONSTANT, C_max=0.3).problem()
+    hopeless = _scenario("genqsgd", Objective.CONSTANT, C_max=1e-9,
+                         T_max=10.0).problem()
+    solo_h = solve_param_opt_batched([healthy], backend="jnp-fused")[0]
+    solo_o = solve_param_opt_batched([other], backend="jnp-fused")[0]
+
+    mixed = solve_param_opt_batched(
+        [_scenario("genqsgd", Objective.CONSTANT, C_max=0.25).problem(),
+         _scenario("genqsgd", Objective.CONSTANT, C_max=1e-9,
+                   T_max=10.0).problem(),
+         _scenario("genqsgd", Objective.CONSTANT, C_max=0.3).problem()],
+        z0s=[solo_h.z, None, None], backend="jnp-fused", pad_to=8)
+    warm, bad, cold = mixed
+    assert not bad.feasible and not bad.converged
+    assert warm.converged and 1 <= warm.iterations <= 3
+    assert np.allclose(warm.z, solo_h.z, atol=1e-6)
+    assert (warm.K0, warm.B) == (solo_h.K0, solo_h.B)
+    assert np.array_equal(warm.Kn, solo_h.Kn)
+    assert cold.iterations == solo_o.iterations
+    assert cold.history == pytest.approx(solo_o.history, rel=1e-12)
+    assert np.allclose(cold.z, solo_o.z, atol=1e-9)
+    assert (cold.K0, cold.B) == (solo_o.K0, solo_o.B)
+
+
+def test_fused_pad_to_rows_bitwise_unchanged():
+    """Padding a fused batch to a fixed shape (the serving path) is a
+    bitwise no-op for the real rows."""
+    ref = solve_param_opt_batched(
+        _problems("genqsgd", Objective.CONSTANT), backend="jnp-fused")
+    pad = solve_param_opt_batched(
+        _problems("genqsgd", Objective.CONSTANT), backend="jnp-fused",
+        pad_to=8)
+    assert len(pad) == 3
+    for a, b in zip(ref, pad):
+        assert np.array_equal(a.z, b.z)
+        assert a.history == b.history
+        assert a.iterations == b.iterations
+        assert (a.K0, a.B, a.E) == (b.K0, b.B, b.E)
+
+
+def test_optimize_fused_compile_cache_is_process_level():
+    """Repeated ``Scenario.optimize(backend='jnp-fused')`` calls across
+    *distinct* Scenario objects reuse the compiled fused executable: the
+    cache is the process-level LRU in repro.opt.gia_jax, keyed by structure
+    signature — not tied to any Scenario / sweep / GPStructure instance —
+    so the trace counter must stay flat after the first call."""
+    from repro.opt import gia_jax
+    from repro.opt.refresh import RefreshPlan
+
+    key = RefreshPlan.build(
+        [_scenario("genqsgd", Objective.CONSTANT).problem()]).signature_key
+    p1 = _scenario("genqsgd", Objective.CONSTANT,
+                   C_max=0.24).optimize(backend="jnp-fused")
+    n1 = gia_jax.trace_count(key)
+    assert n1 >= 1
+    p2 = _scenario("genqsgd", Objective.CONSTANT,
+                   C_max=0.28).optimize(backend="jnp-fused")
+    assert gia_jax.trace_count(key) == n1
+    assert p1.feasible and p2.feasible
+    # and the scalar reference agrees with the fused single-row solve
+    ref = _scenario("genqsgd", Objective.CONSTANT, C_max=0.28).optimize()
+    assert p2.K0 == ref.K0 and p2.B == ref.B and p2.Kn == ref.Kn
+
+
 def test_gp_batch_numpy_rows_equal_scalar_solver():
     probs = _problems("genqsgd", Objective.CONSTANT)
     st = GPStructure(probs[0])

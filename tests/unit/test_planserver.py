@@ -1,0 +1,190 @@
+"""PlanServer: signature micro-batching, the warm-start plan cache, and
+the one-compile-per-signature guarantee.
+
+The fast subset uses a single small signature (N=4, dim=1024) so the one
+fused compile it pays is shared across every test in the module via the
+process-level executable cache.  Stream-scale behavior (mixed signatures,
+LRU eviction under pressure) is marked ``serve`` + ``slow``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants,
+                       Objective, Scenario)
+from repro.serve import (PlanCache, PlanServer, fingerprint,
+                         fingerprint_distance)
+from repro.serve.planserver import _CacheEntry, _quantize
+
+CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=4)
+SYS = EdgeSystem.paper_sec_vii(dim=1024, N=4)
+
+
+def _scenario(C_max=0.25, T_max=1e5, family="genqsgd", step=ConstantRule(0.01)):
+    return Scenario(system=SYS, consts=CONSTS, T_max=T_max, C_max=C_max,
+                    family=family, step=step)
+
+
+def _server(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("window_s", 0.01)
+    return PlanServer(**kw)
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+def test_fingerprint_identity_and_distance():
+    a = fingerprint(_scenario(C_max=0.25).problem())
+    a2 = fingerprint(_scenario(C_max=0.25).problem())
+    b = fingerprint(_scenario(C_max=0.2501).problem())
+    far = fingerprint(_scenario(C_max=0.4).problem())
+    assert np.array_equal(a, a2)
+    assert _quantize(a) == _quantize(a2)
+    assert _quantize(a) != _quantize(b)
+    assert fingerprint_distance(a, a) == 0.0
+    # a 0.04% budget nudge is a *near* neighbor, a 60% change is not
+    assert 0.0 < fingerprint_distance(b, a) < 1e-3
+    assert fingerprint_distance(far, a) > 0.05
+
+
+def test_plan_cache_lru_eviction():
+    cache = PlanCache(maxsize=2)
+    vecs = [np.array([float(i)]) for i in range(3)]
+    for i, v in enumerate(vecs):
+        cache.put(("sig",), _quantize(v), _CacheEntry(v, result=i))
+    assert len(cache) == 2
+    assert cache.get(("sig",), _quantize(vecs[0])) is None      # evicted
+    assert cache.get(("sig",), _quantize(vecs[2])).result == 2
+    # touching an entry protects it from the next eviction
+    cache.get(("sig",), _quantize(vecs[1]))
+    v3 = np.array([3.0])
+    cache.put(("sig",), _quantize(v3), _CacheEntry(v3, result=3))
+    assert cache.get(("sig",), _quantize(vecs[1])) is not None
+    assert cache.get(("sig",), _quantize(vecs[2])) is None
+    # nearest() only sees surviving entries of the signature
+    near, d = cache.nearest(("sig",), np.array([2.9]))
+    assert near.result == 3 and d == pytest.approx(0.1 / 4.0)
+    assert cache.nearest(("other",), v3)[0] is None
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def test_server_micro_batches_one_signature_one_compile():
+    """Concurrent same-signature requests coalesce into micro-batches,
+    solve in one padded fused dispatch each, and the whole stream pays at
+    most one trace of the fused program (the executable may even be
+    inherited from an earlier test — hence <=, asserted not measured)."""
+    budgets = [0.22, 0.24, 0.26, 0.3]
+    with _server(window_s=0.05) as srv:
+        handles = [srv.submit(_scenario(C_max=c)) for c in budgets]
+        plans = [h.result(timeout=300) for h in handles]
+    for c, p, h in zip(budgets, plans, handles):
+        assert p.feasible and p.converged
+        assert h.source == "cold" and h.batch_size == 4
+        ref = _scenario(C_max=c).optimize()
+        assert (p.K0, p.B, p.Kn) == (ref.K0, ref.B, ref.Kn)
+    st = srv.stats()
+    assert st["submitted"] == 4 and st["cold"] == 4 and st["batches"] == 1
+    assert all(c <= 1 for c in srv.compile_counts().values())
+
+
+def test_exact_hit_serves_cached_plan_without_solving():
+    with _server() as srv:
+        p1 = srv.solve(_scenario(C_max=0.25))
+        h = srv.submit(_scenario(C_max=0.25))    # identical fingerprint
+        assert h.done() and h.source == "hit"
+        p2 = h.result()
+        assert dataclasses.asdict(p1) == dataclasses.asdict(p2)
+        st = srv.stats()
+        assert st["hits"] == 1 and st["batches"] == 1    # no second solve
+        assert st["hit_rate"] == pytest.approx(0.5)
+
+
+def test_warm_request_seeds_from_neighbor_and_matches_cold():
+    with _server(tol=1e-8) as srv:
+        cold = srv.solve(_scenario(C_max=0.25))
+        h = srv.submit(_scenario(C_max=0.25005))  # 0.02% away: warm
+        warm = h.result(timeout=300)
+        assert h.source == "warm" and h.warm_dist < 1e-3
+        assert h.z0 is not None
+        # a from-scratch solve of the same scenario agrees exactly
+        ref = _scenario(C_max=0.25005).optimize(backend="jnp-fused",
+                                                tol=1e-8)
+        assert (warm.K0, warm.B, warm.Kn) == (ref.K0, ref.B, ref.Kn)
+        assert warm.predicted_E == pytest.approx(ref.predicted_E, rel=1e-6)
+        assert cold.feasible and warm.feasible
+
+
+def test_optimize_server_kwarg_routes_through_server():
+    with _server() as srv:
+        direct = _scenario(C_max=0.27).optimize()
+        served = _scenario(C_max=0.27).optimize(server=srv)
+        assert (served.K0, served.B, served.Kn) == (direct.K0, direct.B,
+                                                    direct.Kn)
+        assert srv.stats()["submitted"] == 1
+
+
+def test_closed_server_rejects_and_drains():
+    srv = _server(window_s=5.0)                  # window >> test: close()
+    h = srv.submit(_scenario(C_max=0.25))        # must force the drain
+    srv.close()
+    assert h.done() and h.result().feasible
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(_scenario(C_max=0.3))
+
+
+def test_failed_batch_resolves_handles_with_error():
+    """A solver exception must resolve every handle of the batch with the
+    error message — never leave a caller blocked on a dead batch."""
+    import collections
+
+    from repro.opt.structure import structure_signature
+    from repro.serve.planserver import PlanHandle
+
+    s = _scenario(C_max=0.25)
+    prob = s.problem(Objective.CONSTANT)
+    bad = PlanHandle(s, Objective.CONSTANT, prob,
+                     structure_signature(prob), fingerprint(prob), b"x")
+    bad.source = "warm"
+    bad.z0 = np.zeros(3)                         # wrong-shape seed: solver
+    with _server() as srv:                       # raises inside the batch
+        with srv._cond:
+            srv._queues.setdefault(bad.sig,
+                                   collections.deque()).append(bad)
+            srv._cond.notify_all()
+        with pytest.raises(RuntimeError):
+            bad.result(timeout=300)
+        assert bad.error is not None
+
+
+@pytest.mark.serve
+@pytest.mark.slow
+def test_stream_mixed_signatures_and_joint_warm():
+    """An interleaved stream over three signatures (m=C, m=J, gqfedwavg):
+    every request returns its scenario's own plan, signatures never share a
+    batch, and the trace pays <=1 fused compile per signature."""
+    scens = []
+    for c in (0.22, 0.25, 0.3):
+        scens.append(_scenario(C_max=c))
+        scens.append(_scenario(C_max=c, step=None))            # m=J
+        scens.append(_scenario(C_max=c, family="gqfedwavg"))
+    with _server(max_batch=3, window_s=0.05) as srv:
+        handles = [srv.submit(s) for s in scens]
+        plans = [h.result(timeout=600) for h in handles]
+        # warm round: jitter every budget by 0.1%
+        warm_handles = [srv.submit(dataclasses.replace(
+            s, C_max=s.C_max * 1.001)) for s in scens]
+        warm_plans = [h.result(timeout=600) for h in warm_handles]
+    for s, p in zip(scens, plans):
+        ref = s.optimize()
+        assert (p.K0, p.B) == (ref.K0, ref.B)
+    assert all(h.source == "warm" for h in warm_handles)
+    assert all(h.batch_size <= 3 for h in handles + warm_handles)
+    for p in warm_plans:
+        assert p.feasible
+    st = srv.stats()
+    assert st["signatures"] == 3
+    assert all(c <= 1 for c in srv.compile_counts().values())
