@@ -34,6 +34,12 @@ convergence-block reweighting, its runtime aggregation / local-update
 hooks, and its codec preconditioner — so successor algorithm variants plug
 in without touching the facade.  Step rules live in the small registry in
 :mod:`repro.api.registries`.
+
+Participation models (``full`` | ``uniform`` | ``importance``) plug in the
+same way (:mod:`repro.sampling`): ``Scenario(sampling=uniform())`` makes
+the per-round cohort size ``S`` a GP decision variable (``uniform(S=k)``
+pins it), the frozen Plan carries the cohort decision, and both runtimes
+draw seeded cohorts with unbiased Horvitz-Thompson reweighting.
 """
 from ..core.convergence import MLProblemConstants
 from ..core.cost import EdgeSystem
@@ -41,6 +47,7 @@ from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
                                StepRule, make_rule)
 from ..families import AlgorithmFamily, GQFedWAvgFamily, get_family
 from ..opt.problems import Objective
+from ..sampling import SamplingModel, importance, uniform
 from .plan import Plan, RunReport
 from .registries import (FAMILIES, STEP_RULES, family_names, make_step_rule,
                          make_varmap, register_family, register_step_rule)
@@ -56,6 +63,7 @@ __all__ = [
     "make_rule", "make_step_rule", "make_varmap",
     "STEP_RULES", "FAMILIES", "register_step_rule", "register_family",
     "family_names", "AlgorithmFamily", "GQFedWAvgFamily", "get_family",
+    "SamplingModel", "uniform", "importance",
     "MNISTTask", "QuadraticTask", "SpmdTask",
     "GenQSGDTrainer", "round_comm_bits", "PlanServer",
 ]

@@ -55,6 +55,11 @@ class Plan:
     agg_weights: Optional[Tuple[float, ...]] = None  # w_n (None = mean)
     momentum: float = 0.0                # local-update momentum beta
     normalize: bool = False              # normalized local updates
+    # client sampling (repro.sampling), frozen into the Plan so both
+    # runtimes draw the cohorts the optimizer priced
+    sampling: str = "full"               # participation-model key
+    cohort_S: Optional[int] = None       # per-round cohort size (None = full)
+    sampling_p: Optional[Tuple[float, ...]] = None  # base probs (None = unif)
     # predictions at (K0, Kn, B) — NaN for manual plans
     predicted_E: float = float("nan")    # energy (J), eq. (18)
     predicted_T: float = float("nan")    # time (s), eq. (17)
@@ -85,6 +90,21 @@ class Plan:
                 "rotation preconditioning and per-bucket norms are mutually "
                 "exclusive (the rotation already isotropizes the message); "
                 "a rotated Plan must carry q_dim=None")
+        if self.sampling_p is not None and self.cohort_S is None:
+            raise ValueError("sampling_p given without cohort_S")
+        if self.cohort_S is not None:
+            from ..sampling.base import check_probs
+            S = int(self.cohort_S)
+            if not 1 <= S <= self.N:
+                raise ValueError(f"cohort_S={S} outside [1, N={self.N}]")
+            object.__setattr__(self, "cohort_S", S)
+            if self.sampling_p is not None:
+                p = check_probs(self.sampling_p, self.N)
+                if S * max(p) > 1.0 + 1e-9:
+                    raise ValueError(
+                        f"inclusion probability S*max(p)={S * max(p):.4g} "
+                        f"exceeds 1")
+                object.__setattr__(self, "sampling_p", p)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -146,17 +166,58 @@ class Plan:
                           kind=kind).wire_bits(d)
         return up + down
 
+    def _up_down(self, dim: Optional[int] = None,
+                 wire: Optional[str] = None):
+        """Per-worker upload bits + the server multicast bits, the same
+        codec/wire resolution as :meth:`round_bits` (client sampling needs
+        the per-worker granularity: uploads scale by pi_n, the multicast
+        does not)."""
+        d = self.dim if dim is None else int(dim)
+        w = self.wire if wire is None else wire
+        transport = wire is not None and w in RUNTIME_WIRES
+        kind = "qsgd" if transport else self.codec_kind
+        ups = [make_codec(s, wire=w, bucket=self.q_dim,
+                          kind=kind).wire_bits(d) for s in self.sn]
+        down_w = "f32" if (self.s0 is None and w == "int4") else w
+        down = make_codec(self.s0, wire=down_w, bucket=self.q_dim,
+                          kind=kind).wire_bits(d)
+        return ups, down
+
+    def expected_round_bits(self, dim: Optional[int] = None,
+                            wire: Optional[str] = None) -> float:
+        """E[wire bits] of one round under the Plan's participation model:
+        each worker's upload scales by its inclusion probability pi_n
+        (uniform: ``S * sum_n M_{s_n} / N``), the server multicast by 1.
+        Without sampling this IS :meth:`round_bits`, bitwise."""
+        if self.cohort_S is None:
+            return self.round_bits(dim=dim, wire=wire)
+        ups, down = self._up_down(dim, wire)
+        S = float(self.cohort_S)
+        if self.sampling_p is None:        # uniform: pi_n = S/N for all n
+            return S * sum(ups) / self.N + down
+        return sum(S * p * u for p, u in zip(self.sampling_p, ups)) + down
+
+    def cohort_round_bits(self, idx, dim: Optional[int] = None,
+                          wire: Optional[str] = None) -> float:
+        """Realized wire bits of one sampled round: the uploads of the
+        cohort ``idx`` actually drawn, plus the server multicast."""
+        ups, down = self._up_down(dim, wire)
+        return sum(ups[int(i)] for i in idx) + down
+
     @property
     def predicted_comm_bits(self) -> float:
-        """K0 * (sum_n M_{s_n} + M_{s_0}) — total bits the cost model
-        budgeted for the whole run."""
-        return self.K0 * self.round_bits()
+        """K0 * E[per-round bits] — total bits the cost model budgeted for
+        the whole run (the historical N-upload sum without sampling)."""
+        return self.K0 * self.expected_round_bits()
 
     # -- runtime configs (the tentpole: one source of truth) ------------
-    def to_genqsgd_config(self, max_K0: Optional[int] = None) -> GenQSGDConfig:
+    def to_genqsgd_config(self, max_K0: Optional[int] = None,
+                          seed: Optional[int] = None) -> GenQSGDConfig:
         """The single-process reference runtime's config (Algorithm 1, plus
         the Plan's family hooks: aggregation weights, momentum/normalized
-        local updates, codec preconditioner)."""
+        local updates, codec preconditioner — and, under client sampling,
+        the cohort size/probabilities with ``seed`` driving the per-round
+        cohort draws)."""
         K0 = self.K0 if max_K0 is None else min(self.K0, int(max_K0))
         return GenQSGDConfig(K0=K0, Kn=self.Kn, B=self.B,
                              step_rule=self.step_rule, s0=self.s0,
@@ -164,10 +225,13 @@ class Plan:
                              agg_weights=self.agg_weights,
                              momentum=self.momentum,
                              normalize=self.normalize,
-                             codec_kind=self.codec_kind)
+                             codec_kind=self.codec_kind,
+                             sampling_S=self.cohort_S,
+                             sampling_p=self.sampling_p, seed=seed)
 
     def to_fed_config(self, wire: str = "f32", microbatch: int = 1,
-                      aux_weight: float = 0.01) -> FedConfig:
+                      aux_weight: float = 0.01,
+                      seed: Optional[int] = None) -> FedConfig:
         """The SPMD runtime's config, cross-validated against the Plan.
 
         ``wire`` is the aggregation *transport* (how the quantized levels
@@ -200,12 +264,16 @@ class Plan:
                          sn=self.sn, wire=wire, bucket=self.q_dim,
                          microbatch=microbatch, aux_weight=aux_weight,
                          agg_weights=self.agg_weights,
-                         momentum=self.momentum, normalize=self.normalize)
+                         momentum=self.momentum, normalize=self.normalize,
+                         sampling_S=self.cohort_S,
+                         sampling_p=self.sampling_p, seed=seed)
 
     def describe(self) -> str:
         sn = set(self.sn)
         sn_txt = str(next(iter(sn))) if len(sn) == 1 else str(list(self.sn))
-        return (f"Plan[{self.family}/{self.objective.value}] "
+        samp = ("" if self.cohort_S is None
+                else f" S={self.cohort_S}/{self.N} ({self.sampling})")
+        return (f"Plan[{self.family}/{self.objective.value}]{samp} "
                 f"K0={self.K0} Kn={list(self.Kn)} B={self.B} "
                 f"gamma={self.gamma:.4g} s0={self.s0} sn={sn_txt} | "
                 f"E={self.predicted_E:.4g} J, T={self.predicted_T:.4g} s, "
@@ -234,6 +302,8 @@ class RunReport:
     measured_T: float                # cost-model time over executed rounds
     final_metrics: dict = dataclasses.field(default_factory=dict)
     history: tuple = ()
+    round_bits_trace: tuple = ()     # per-round realized wire bits (sampled
+                                     # runs only; empty = uniform K0 rounds)
 
     @property
     def predicted_comm_bits(self) -> float:
@@ -243,7 +313,9 @@ class RunReport:
     def comm_bits_match(self) -> bool:
         """Exact closure of the loop: did the run move exactly the bits the
         optimizer budgeted?  True when the full K0 executed on a model of
-        the dimension the Scenario priced."""
+        the dimension the Scenario priced (under client sampling: when the
+        realized cohort bits sum to K0 times the expected per-round bits —
+        exact for uniform cohorts over homogeneous quantizers)."""
         return self.comm_bits == self.predicted_comm_bits
 
     def summary(self) -> str:

@@ -53,9 +53,11 @@ class Scenario:
     family: Union[str, AlgorithmFamily] = "genqsgd"  # repro.families key
     step: Optional[StepRule] = None       # None -> jointly optimized (m=J)
     samples_per_worker: float = 6000.0    # I_n (FedAvg's epoch tie)
+    sampling: object = "full"             # repro.sampling key or model
 
     def __post_init__(self):
         resolve(self.family)              # unknown names fail here, loudly
+        self.sampling_obj.validate(self.system.N)
         if self.consts.N != self.system.N:
             raise ValueError(
                 f"consts describe N={self.consts.N} workers but the system "
@@ -66,6 +68,12 @@ class Scenario:
     def family_obj(self) -> AlgorithmFamily:
         """The resolved :class:`~repro.families.AlgorithmFamily`."""
         return resolve(self.family)
+
+    @property
+    def sampling_obj(self):
+        """The resolved :class:`~repro.sampling.SamplingModel`."""
+        from ..sampling import resolve as resolve_sampling
+        return resolve_sampling(self.sampling)
 
     @property
     def family_key(self) -> str:
@@ -123,7 +131,8 @@ class Scenario:
         rho = getattr(self.step, "rho", None)
         return ParamOptProblem(sys=self._priced_system, consts=self.consts,
                                T_max=self.T_max, C_max=self.C_max, m=m,
-                               gamma=gamma, rho=rho, vmap=vmap, family=fam)
+                               gamma=gamma, rho=rho, vmap=vmap, family=fam,
+                               sampling=self.sampling_obj)
 
     # ------------------------------------------------------------------
     def _plan_from_result(self, m: Objective, r) -> Plan:
@@ -134,12 +143,20 @@ class Scenario:
             step = self.step
         sys = self._priced_system
         fam = self.family_obj
+        samp = self.sampling_obj
+        if samp.free_S:                   # integer-recovered cohort size
+            cohort_S = None if r.S is None else int(r.S)
+        else:
+            cohort_S = samp.pinned_S(sys.N)   # None for full / neutral
+        sampling_p = samp.plan_p(sys.N) if cohort_S is not None else None
         return Plan(K0=int(r.K0), Kn=tuple(int(k) for k in r.Kn), B=int(r.B),
                     step_rule=step, s0=sys.s0, sn=tuple(sys.sn), dim=sys.dim,
                     q_dim=sys.q_dim, wire=sys.wire, objective=m,
                     family=fam.key, codec_kind=fam.codec_kind,
                     agg_weights=fam.agg_weights(sys.N),
                     momentum=fam.momentum, normalize=fam.normalize,
+                    sampling=samp.key if cohort_S is not None else "full",
+                    cohort_S=cohort_S, sampling_p=sampling_p,
                     predicted_E=r.E, predicted_T=r.T,
                     predicted_C=r.C, feasible=bool(r.feasible),
                     converged=bool(r.converged))
@@ -209,28 +226,44 @@ class Scenario:
 
     def _report(self, plan: Plan, backend: str, rounds: int, model_dim: int,
                 wall: float, final_metrics: dict, history,
-                wire: Optional[str] = None) -> RunReport:
+                wire: Optional[str] = None, cohort_trace=None) -> RunReport:
         # wire=None prices at the Plan's wire (the reference backend has no
         # transport); the spmd path passes the transport it actually used.
         # Cost-model measurements evaluate on the *priced* system — the one
         # whose M_s/q_s describe the family's codec — so measured_E/T are
         # comparable to predicted_E/T within the same report.
-        comm = rounds * plan.round_bits(dim=model_dim, wire=wire)
+        if cohort_trace:
+            # sampled run: realized per-round cohort uploads, summed; the
+            # modeled energy is the expected energy at the Plan's pi_n —
+            # the same energy_cost(pi=...) the optimizer minimized.
+            trace = tuple(plan.cohort_round_bits(idx, dim=model_dim,
+                                                 wire=wire)
+                          for idx in cohort_trace)
+            comm = float(sum(trace))
+        else:
+            trace = ()
+            comm = rounds * plan.round_bits(dim=model_dim, wire=wire)
+        pi = None
+        if plan.cohort_S is not None:
+            pi = (np.full(plan.N, float(plan.cohort_S) / plan.N)
+                  if plan.sampling_p is None
+                  else float(plan.cohort_S) * np.asarray(plan.sampling_p))
         sys = self._priced_system
         return RunReport(
             plan=plan, backend=backend, rounds=rounds, model_dim=model_dim,
             wall_time_s=wall, comm_bits=comm,
             measured_E=energy_cost(sys, rounds, np.asarray(plan.Kn),
-                                   plan.B),
+                                   plan.B, pi=pi),
             measured_T=time_cost(sys, rounds, np.asarray(plan.Kn),
                                  plan.B),
-            final_metrics=dict(final_metrics), history=tuple(history))
+            final_metrics=dict(final_metrics), history=tuple(history),
+            round_bits_trace=trace)
 
     def _run_reference(self, plan, task, seed, max_rounds, eval_every):
         import jax
 
         task = MNISTTask() if task is None else task
-        cfg = plan.to_genqsgd_config(max_K0=max_rounds)
+        cfg = plan.to_genqsgd_config(max_K0=max_rounds, seed=seed)
         alg = GenQSGD(task.loss, task.sample, cfg)
         data = task.make_data(plan.N)
         p0 = task.init_params(jax.random.PRNGKey(seed))
@@ -244,7 +277,8 @@ class Scenario:
         wall = time.time() - t0
         final = task.metrics(pf) if hasattr(task, "metrics") else {}
         return self._report(plan, "reference", cfg.K0, model_dim, wall,
-                            final, hist)
+                            final, hist,
+                            cohort_trace=getattr(alg, "cohort_trace", None))
 
     def _run_spmd(self, plan, task, seed, max_rounds, wire, log_every):
         import jax
@@ -254,7 +288,7 @@ class Scenario:
         if task is None:
             raise ValueError("backend='spmd' needs an SpmdTask (model api, "
                              "arch config, mesh, batches)")
-        fed = plan.to_fed_config(wire=wire)
+        fed = plan.to_fed_config(wire=wire, seed=seed)
         trainer = GenQSGDTrainer(task.api, task.arch, fed, task.mesh,
                                  step_rule=plan.step_rule,
                                  checkpoint_dir=task.checkpoint_dir)
@@ -270,4 +304,6 @@ class Scenario:
         wall = time.time() - t0
         final = dict(state.history[-1]) if state.history else {}
         return self._report(plan, "spmd", rounds, model_dim, wall, final,
-                            state.history, wire=wire)
+                            state.history, wire=wire,
+                            cohort_trace=getattr(trainer, "cohort_trace",
+                                                 None))

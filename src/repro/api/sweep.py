@@ -45,21 +45,35 @@ def expand_grid(base, over: Mapping[str, Iterable]):
     Keys are Scenario field names (``"rule"``/``"cmax"``/``"tmax"`` aliases
     accepted); values are iterables of field values (``step`` values are
     StepRule instances or None for the jointly-optimized objective).
+
+    The special axis ``"N"`` sweeps the worker count: the edge system is
+    ceil-tiled to N workers via :meth:`~repro.core.cost.EdgeSystem.resized`
+    and the ML-problem constants follow — combined with a free-``S``
+    ``sampling`` model this sweeps the energy-vs-N participation frontier
+    in one batched call.
     """
     fields = {f.name for f in dataclasses.fields(base)}
     keys, grids = [], []
     for k, vals in over.items():
         canon = _ALIASES.get(k, k)
-        if canon not in fields:
+        if canon != "N" and canon not in fields:
             raise ValueError(
                 f"cannot sweep over {k!r}; Scenario fields are "
-                f"{sorted(fields)} (aliases: {sorted(_ALIASES)})")
+                f"{sorted(fields)} + ['N'] (aliases: {sorted(_ALIASES)})")
         if canon in keys:
             raise ValueError(f"duplicate sweep axis {canon!r}")
         keys.append(canon)
         grids.append(list(vals))
-    scenarios = [dataclasses.replace(base, **dict(zip(keys, combo)))
-                 for combo in itertools.product(*grids)]
+    scenarios = []
+    for combo in itertools.product(*grids):
+        kv = dict(zip(keys, combo))
+        n_new = kv.pop("N", None)
+        s = base
+        if n_new is not None:
+            s = dataclasses.replace(
+                s, system=s.system.resized(int(n_new)),
+                consts=dataclasses.replace(s.consts, N=int(n_new)))
+        scenarios.append(dataclasses.replace(s, **kv) if kv else s)
     return scenarios
 
 
@@ -196,6 +210,7 @@ def sweep_scenarios(scenarios: Sequence, names: Optional[Sequence[str]] = None,
             "name": name, "family": scn.family_key, "m": m.value,
             "gamma": plan.gamma, "T_max": scn.T_max, "C_max": scn.C_max,
             "K0": plan.K0, "Kn": plan.Kn, "B": plan.B,
+            "N": plan.N, "S": plan.cohort_S, "sampling": plan.sampling,
             "E": plan.predicted_E, "T": plan.predicted_T,
             "C": plan.predicted_C, "feasible": plan.feasible,
             "converged": plan.converged, "iterations": r.iterations,

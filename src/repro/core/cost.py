@@ -127,6 +127,32 @@ class EdgeSystem:
                      + self.p0 * self.M_s0 / self.r0
                      + np.sum(self.pn * self.M_sn / self.rn))
 
+    @functools.cached_property
+    def server_energy(self) -> float:
+        """The worker-independent slice of ``const_energy`` — server
+        compute + multicast (paid every round regardless of the cohort)."""
+        return float(self.alpha0 * self.C0 * self.F0**2
+                     + self.p0 * self.M_s0 / self.r0)
+
+    @functools.cached_property
+    def comm_energy_coeff(self) -> np.ndarray:
+        """p_n M_{s_n} / r_n — per-worker upload energy per round (paid by
+        a worker only in rounds it participates)."""
+        return self.pn * self.M_sn / self.rn
+
+    def resized(self, N: int) -> "EdgeSystem":
+        """This system with ``N`` workers: per-worker arrays tiled (or
+        truncated) cyclically, server parameters untouched — the knob
+        ``Scenario.sweep(over={"N": ...})`` turns."""
+        N = int(N)
+        reps = -(-N // self.N)             # ceil(N / current N)
+        return dataclasses.replace(
+            self,
+            Fn=np.tile(self.Fn, reps)[:N], Cn=np.tile(self.Cn, reps)[:N],
+            pn=np.tile(self.pn, reps)[:N], rn=np.tile(self.rn, reps)[:N],
+            sn=(list(self.sn) * reps)[:N],
+            alphan=np.tile(self.alphan, reps)[:N])
+
     # --- canonical instantiations ---------------------------------------
     @staticmethod
     def paper_sec_vii(dim: int = 784 * 128 + 128 + 128 * 10 + 10,
@@ -186,8 +212,21 @@ def time_cost(sys: EdgeSystem, K0, Kn, B):
     return out if np.ndim(K0) else float(out)
 
 
-def energy_cost(sys: EdgeSystem, K0, Kn, B):
-    """E(K, B) — eq. (18).  Broadcasts over an ndarray ``K0``."""
+def energy_cost(sys: EdgeSystem, K0, Kn, B, pi=None):
+    """E(K, B) — eq. (18).  Broadcasts over an ndarray ``K0``.
+
+    ``pi`` (per-worker inclusion probabilities under client sampling)
+    turns this into the *expected* energy over cohort draws: each worker's
+    compute and upload terms scale by ``pi_n``.  ``pi=None`` is the
+    historical full-participation arithmetic, verbatim.
+    """
     Kn = np.asarray(Kn, dtype=np.float64)
-    out = K0 * (B * np.sum(sys.comp_energy_coeff * Kn) + sys.const_energy)
+    if pi is None:
+        out = K0 * (B * np.sum(sys.comp_energy_coeff * Kn)
+                    + sys.const_energy)
+    else:
+        pi = np.asarray(pi, dtype=np.float64)
+        out = K0 * (B * np.sum(sys.comp_energy_coeff * pi * Kn)
+                    + sys.server_energy
+                    + np.sum(sys.comm_energy_coeff * pi))
     return out if np.ndim(K0) else float(out)

@@ -77,6 +77,9 @@ class GenQSGDConfig:
     momentum: float = 0.0        # local-update momentum beta
     normalize: bool = False      # normalized (unit-direction) local updates
     codec_kind: str = "qsgd"     # repro.compress.make_codec kind
+    sampling_S: Optional[int] = None  # per-round cohort size (None = full)
+    sampling_p: Optional[Tuple[float, ...]] = None  # base probs (None = unif)
+    seed: Optional[int] = None   # cohort-draw rng seed (None = OS entropy)
 
     def __post_init__(self):
         from ..families import check_agg_weights, check_momentum  # cycle
@@ -85,6 +88,21 @@ class GenQSGDConfig:
                                check_agg_weights(self.agg_weights,
                                                  len(self.Kn)))
         check_momentum(self.momentum)
+        if self.sampling_p is not None and self.sampling_S is None:
+            raise ValueError("sampling_p given without sampling_S")
+        if self.sampling_S is not None:
+            from ..sampling.base import check_probs  # cycle
+            S = int(self.sampling_S)
+            if not 1 <= S <= self.N:
+                raise ValueError(f"sampling_S={S} outside [1, N={self.N}]")
+            object.__setattr__(self, "sampling_S", S)
+            if self.sampling_p is not None:
+                p = check_probs(self.sampling_p, self.N)
+                if S * max(p) > 1.0 + 1e-9:
+                    raise ValueError(
+                        f"inclusion probability S*max(p)={S * max(p):.4g} "
+                        f"exceeds 1")
+                object.__setattr__(self, "sampling_p", p)
 
     @property
     def N(self) -> int:
@@ -177,11 +195,15 @@ class GenQSGD:
                                     jnp.arange(cfg.K_max))
         return x
 
-    def _round_impl(self, x_hat, data, key, gamma):
+    def _round_impl(self, x_hat, data, key, gamma, u=None):
         """One global iteration (Algorithm 1, lines 3-10).
 
         ``data`` is a pytree whose leaves have leading axis N (per-worker
-        shards).
+        shards).  ``u`` (length-N, only under client sampling) replaces the
+        server aggregation with the Horvitz-Thompson weighted sum
+        ``sum_n u_n d_n`` — ``u_n = mask_n w_n / pi_n`` zeroes workers
+        outside the round's cohort and reweights the rest so the sampled
+        round is an unbiased estimate of the full one.
         """
         cfg = self.cfg
         keys = jax.random.split(key, cfg.N + 1)
@@ -208,7 +230,9 @@ class GenQSGD:
             deltas = jnp.stack([
                 worker_delta(jax.tree.map(lambda l: l[i], x_workers),
                              wkeys[i], codecs[i]) for i in range(cfg.N)])
-        if cfg.agg_weights is None:
+        if u is not None:  # sampled round: unbiased reweighted cohort sum
+            delta_hat = jnp.tensordot(u.astype(jnp.float32), deltas, axes=1)
+        elif cfg.agg_weights is None:
             delta_hat = deltas.mean(axis=0)
         else:  # general weighted aggregation (GQFedWAvg)
             w = jnp.asarray(cfg.agg_weights, jnp.float32)
@@ -227,14 +251,32 @@ class GenQSGD:
 
     # ------------------------------------------------------------------
     def run(self, x0, data, key, eval_fn=None, eval_every: int = 10):
-        """Full K0-round driver.  Returns (x*, history)."""
+        """Full K0-round driver.  Returns (x*, history).
+
+        Under client sampling (``cfg.sampling_S``) each round draws a
+        seeded cohort (``cfg.seed``) and aggregates it with unbiased
+        Horvitz-Thompson weights; ``self.cohort_trace`` records the drawn
+        cohort indices per round.  Unsampled configs take the historical
+        path verbatim.
+        """
         cfg = self.cfg
         gammas = cfg.step_rule.sequence(cfg.K0)
         x = x0
         history = []
+        self.cohort_trace = []
+        rng = (np.random.default_rng(cfg.seed)
+               if cfg.sampling_S is not None else None)
         for k0 in range(cfg.K0):
             key, rkey = jax.random.split(key)
-            x, m = self._round(x, data, rkey, jnp.float32(gammas[k0]))
+            if rng is not None:
+                from ..sampling.base import draw_cohort_weights  # cycle
+                idx, u = draw_cohort_weights(rng, cfg.N, cfg.sampling_S,
+                                             cfg.sampling_p, cfg.agg_weights)
+                self.cohort_trace.append(idx)
+                x, m = self._round(x, data, rkey, jnp.float32(gammas[k0]),
+                                   jnp.asarray(u, jnp.float32))
+            else:
+                x, m = self._round(x, data, rkey, jnp.float32(gammas[k0]))
             if eval_fn is not None and (k0 % eval_every == 0 or k0 == cfg.K0 - 1):
                 e = eval_fn(x)
                 e.update({k: float(v) for k, v in m.items()})

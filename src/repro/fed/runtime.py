@@ -84,6 +84,10 @@ class FedConfig:
                                          # (tuple, len fl; None = plain mean)
     momentum: float = 0.0                # local-update momentum beta
     normalize: bool = False              # normalized local updates (GQFedWAvg)
+    sampling_S: object = None            # per-round cohort size (None = full)
+    sampling_p: object = None            # per-worker base probabilities
+                                         # (tuple, len fl; None = uniform)
+    seed: object = None                  # cohort-draw rng seed (trainer side)
 
     def __post_init__(self):
         if self.wire not in RUNTIME_WIRES:
@@ -95,6 +99,34 @@ class FedConfig:
                                check_agg_weights(self.agg_weights,
                                                  self.n_workers))
         check_momentum(self.momentum)
+        if self.sampling_p is not None and self.sampling_S is None:
+            raise ValueError("sampling_p given without sampling_S")
+        if self.sampling_S is not None:
+            from ..sampling.base import check_probs  # cycle
+            S = int(self.sampling_S)
+            if not 1 <= S <= self.n_workers:
+                raise ValueError(
+                    f"sampling_S={S} outside [1, N={self.n_workers}]")
+            object.__setattr__(self, "sampling_S", S)
+            if self.sampling_p is not None:
+                p = check_probs(self.sampling_p, self.n_workers)
+                if S * max(p) > 1.0 + 1e-9:
+                    raise ValueError(
+                        f"inclusion probability S*max(p)={S * max(p):.4g} "
+                        f"exceeds 1")
+                object.__setattr__(self, "sampling_p", p)
+            # the per-round HT weight vector u is a traced round input, so
+            # sampling needs an aggregation that runs OUTSIDE shard_map:
+            # the f32 transport, or the bucketed level wires (whose decode
+            # + combine already run on logical-global arrays).
+            if not (self.wire == "f32"
+                    or (self.bucket is not None
+                        and self.wire in ("int8", "int4"))):
+                raise ValueError(
+                    f"client sampling is not supported on wire="
+                    f"{self.wire!r}" + ("" if self.bucket is not None
+                                        else " without bucketing")
+                    + "; use wire='f32' or a bucketed int8/int4 wire")
         if self.bucket is not None and int(self.bucket) <= 0:
             raise ValueError(f"bucket must be positive, got {self.bucket}")
         cap = wire_max_s(self.wire)
@@ -292,9 +324,14 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         _w = np.asarray(fed.agg_weights, np.float64)
         w_agg = jnp.asarray(_w / _w.sum(), jnp.float32)
 
-    def combine_fl(d):
-        """Collapse a (fl, ...) stacked leaf: the server mean, or the
-        family's general weighted aggregation (sum_n w_n d_n)."""
+    def combine_fl(d, u=None):
+        """Collapse a (fl, ...) stacked leaf: the server mean, the family's
+        general weighted aggregation (sum_n w_n d_n), or — under client
+        sampling — the round's Horvitz-Thompson sum ``sum_n u_n d_n``
+        (``u`` already folds the cohort mask, the aggregation weights and
+        the 1/pi_n reweighting, so it replaces both other branches)."""
+        if u is not None:
+            return jnp.tensordot(u.astype(jnp.float32), d, axes=1)
         if w_agg is None:
             return d.mean(axis=0)
         return jnp.tensordot(w_agg, d, axes=1)
@@ -324,10 +361,12 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                 l, n, ss),
             levels_fl, norms_fl)
 
-    def agg_f32(levels_fl, norms_fl):
+    def agg_f32(levels_fl, norms_fl, u=None):
         """Paper-faithful: dequantize then mean over fl (f32 all-reduce);
-        weighted families aggregate sum_n w_n Q(Δ_n) instead."""
-        return jax.tree.map(combine_fl, _decode_fl(levels_fl, norms_fl))
+        weighted families aggregate sum_n w_n Q(Δ_n) instead, sampled
+        rounds the HT-weighted cohort sum."""
+        return jax.tree.map(lambda d: combine_fl(d, u),
+                            _decode_fl(levels_fl, norms_fl))
 
     def _agg_rs_ag_local(levels_loc, norms_loc):
         """Runs inside shard_map: dequantize locally (whole-tensor norms
@@ -431,7 +470,7 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                          in_specs=(SH.with_fl(pspecs),), out_specs=pspecs)
 
     # -- the round ----------------------------------------------------------
-    def genqsgd_round(x_hat, batch, key, gamma):
+    def genqsgd_round(x_hat, batch, key, gamma, u=None):
         keys = jax.random.split(key, fed.n_workers + 1)
         wkeys, skey = keys[:-1], keys[-1]
 
@@ -446,7 +485,7 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                                                         s_dummy)
 
         if fed.wire == "f32":
-            delta_hat = agg_f32(levels_fl, norms_fl)
+            delta_hat = agg_f32(levels_fl, norms_fl, u)
         elif bucket is None:
             body = {"int8": _agg_int8_local, "int4": _agg_int4_local,
                     "rs_ag": _agg_rs_ag_local}[fed.wire]
@@ -460,7 +499,8 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
             # context, so XLA's FMA choices can flip a few stochastic
             # roundings upstream.
             g = make_gather_sm(x_hat, fed.wire == "int4")(levels_fl)
-            delta_hat = jax.tree.map(combine_fl, _decode_fl(g, norms_fl))
+            delta_hat = jax.tree.map(lambda d: combine_fl(d, u),
+                                     _decode_fl(g, norms_fl))
         else:  # bucketed rs_ag: decode per worker, then rs+ag the f32 mean
             delta_hat = make_mean_sm(x_hat)(_decode_fl(levels_fl, norms_fl))
 

@@ -53,6 +53,7 @@ class GIAResult:
     T: float
     C: float
     history: List[float]           # objective per GIA iteration
+    S: Optional[int] = None        # cohort size (None = full participation)
 
 
 def _extract(problem: ParamOptProblem, z: np.ndarray):
@@ -61,7 +62,9 @@ def _extract(problem: ParamOptProblem, z: np.ndarray):
     Kn = np.array([float(np.exp(k.logvalue(z))) for k in v.Kn])
     B = float(np.exp(v.B.logvalue(z)))
     extra = float(np.exp(v.extra.logvalue(z))) if v.extra is not None else None
-    return K0, Kn, B, extra
+    i_S = problem._i_S
+    S = float(np.exp(z[i_S])) if i_S is not None else None
+    return K0, Kn, B, extra, S
 
 
 def solve_param_opt(problem: ParamOptProblem,
@@ -287,24 +290,28 @@ def _joint_restart_batched(problems: Sequence[ParamOptProblem],
 def _finalize(problem: ParamOptProblem, z: np.ndarray,
               history: List[float], converged: bool) -> GIAResult:
     """Integer recovery + true-constraint evaluation at the continuous point."""
-    _, _, _, extra = _extract(problem, z)
-    K0i, Kni, Bi, extra_i, _ = _round_integer(problem, z, extra)
-    ev = problem.evaluate(K0i, Kni, Bi, extra_i)
+    _, _, _, extra, _ = _extract(problem, z)
+    K0i, Kni, Bi, extra_i, Si, _ = _round_integer(problem, z, extra)
+    ev = problem.evaluate(K0i, Kni, Bi, extra_i, S=Si)
     v = problem.vmap
     named = {name: float(np.exp(z[i])) for i, name in enumerate(v.names)}
+    # pinned-cohort models have no S variable; report their fixed size so
+    # Plan plumbing is uniform (None stays the full-participation marker)
+    S_out = Si if Si is not None \
+        else problem.sampling.pinned_S(problem.sys.N)
     return GIAResult(
         converged=converged,
-        feasible=problem.feasible(K0i, Kni, Bi, extra_i),
+        feasible=problem.feasible(K0i, Kni, Bi, extra_i, S=Si),
         iterations=len(history), z=z, x=named,
         K0=K0i, Kn=Kni, B=Bi,
         gamma=extra_i if problem.m is Objective.JOINT else problem.gamma,
-        E=ev["E"], T=ev["T"], C=ev["C"], history=list(history))
+        E=ev["E"], T=ev["T"], C=ev["C"], history=list(history), S=S_out)
 
 
 def min_feasible_K0(problem: ParamOptProblem, Kn, B,
                     extra: Optional[float] = None, K0_lo: int = 1,
                     ctol: float = 1e-9, ttol: float = 1e-9,
-                    max_doublings: int = 200):
+                    max_doublings: int = 200, S: Optional[int] = None):
     """Smallest integer ``K0 >= K0_lo`` with ``C(K0) <= C_max*(1+ctol)``.
 
     ``C_m`` is non-increasing and ``T`` non-decreasing in ``K0``, so the
@@ -315,7 +322,7 @@ def min_feasible_K0(problem: ParamOptProblem, Kn, B,
     """
     C_cap = problem.C_max * (1 + ctol)
     T_cap = problem.T_max * (1 + ttol)
-    ev = problem.evaluate(K0_lo, Kn, B, extra)
+    ev = problem.evaluate(K0_lo, Kn, B, extra, S=S)
     if ev["C"] <= C_cap:
         return K0_lo, ev["T"] <= T_cap
     lo, hi = K0_lo, K0_lo
@@ -323,7 +330,7 @@ def min_feasible_K0(problem: ParamOptProblem, Kn, B,
         if ev["T"] > problem.T_max:
             return hi, False            # time budget dies before C is met
         lo, hi = hi, hi * 2
-        ev = problem.evaluate(hi, Kn, B, extra)
+        ev = problem.evaluate(hi, Kn, B, extra, S=S)
         if ev["C"] <= C_cap:
             break
     else:
@@ -331,15 +338,16 @@ def min_feasible_K0(problem: ParamOptProblem, Kn, B,
     # invariant: C(lo) > C_cap >= C(hi); bisect to the smallest C-ok K0
     while hi - lo > 1:
         mid = (lo + hi) // 2
-        if problem.evaluate(mid, Kn, B, extra)["C"] <= C_cap:
+        if problem.evaluate(mid, Kn, B, extra, S=S)["C"] <= C_cap:
             hi = mid
         else:
             lo = mid
-    return hi, problem.evaluate(hi, Kn, B, extra)["T"] <= T_cap
+    return hi, problem.evaluate(hi, Kn, B, extra, S=S)["T"] <= T_cap
 
 
 def min_feasible_K0_joint(problem: ParamOptProblem, Kn, B, K0_lo: int = 1,
-                          ctol: float = 1e-9, ttol: float = 1e-9):
+                          ctol: float = 1e-9, ttol: float = 1e-9,
+                          S: Optional[int] = None):
     """m=J integer recovery: smallest ``K0 >= K0_lo`` whose *gamma-optimized*
     error meets the budget, ``min_gamma C(K0, gamma) <= C_max*(1+ctol)``.
 
@@ -357,7 +365,7 @@ def min_feasible_K0_joint(problem: ParamOptProblem, Kn, B, K0_lo: int = 1,
     C_cap = problem.C_max * (1 + ctol)
     T_cap = problem.T_max * (1 + ttol)
     probes = (0.5, 1.0, 2.0)
-    Cs = np.array([problem.evaluate(1, Kn, B, g)["C"] for g in probes])
+    Cs = np.array([problem.evaluate(1, Kn, B, g, S=S)["C"] for g in probes])
     M = np.array([[1.0 / g, g * g, g] for g in probes])
     a, b, c = np.linalg.solve(M, Cs)
     L_cap = 1.0 / float(problem.consts.L)
@@ -373,9 +381,19 @@ def min_feasible_K0_joint(problem: ParamOptProblem, Kn, B, K0_lo: int = 1,
     if slack <= 0.0:
         return K0_lo, g, False
     K0 = max(K0_lo, int(math.ceil(a / slack - 1e-12)))
-    while problem.evaluate(K0, Kn, B, g)["C"] > C_cap:   # fp guard
+    while problem.evaluate(K0, Kn, B, g, S=S)["C"] > C_cap:   # fp guard
         K0 += 1
-    return K0, g, problem.evaluate(K0, Kn, B, g)["T"] <= T_cap
+    return K0, g, problem.evaluate(K0, Kn, B, g, S=S)["T"] <= T_cap
+
+
+def _round_S(problem: ParamOptProblem, Sf: Optional[float], mode=round
+             ) -> Optional[int]:
+    """Integer cohort size clamped to ``[1, floor(s_cap)]`` — rounding can
+    never push an inclusion probability above 1.  None stays None."""
+    if Sf is None:
+        return None
+    s_hi = int(math.floor(problem.sampling.s_cap(problem.sys.N) + 1e-9))
+    return min(max(1, int(mode(Sf))), max(1, s_hi))
 
 
 #: uniform integer candidate grids of the m=J polish (z_init's search grids
@@ -397,7 +415,8 @@ def _joint_integer_polish(problem: ParamOptProblem, z: np.ndarray, best):
     work-product band around the continuous point.
     """
     v = problem.vmap
-    _, Knf, Bf, _ = _extract(problem, z)
+    _, Knf, Bf, _, Sf = _extract(problem, z)
+    Si = _round_S(problem, Sf)
     prod = float(max(np.mean(Knf) * Bf, 1.0))
     seen = set()
     for Bv in _POLISH_B_GRID:
@@ -408,7 +427,7 @@ def _joint_integer_polish(problem: ParamOptProblem, z: np.ndarray, best):
                     zc[i] = np.log(float(Kv))
                 elif nm == "B":
                     zc[i] = np.log(float(Bv))
-            _, Knf_c, Bf_c, _ = _extract(problem, zc)
+            _, Knf_c, Bf_c, _, _ = _extract(problem, zc)
             Kni = np.maximum(1, np.round(Knf_c)).astype(np.int64)
             Bi = max(1, int(round(Bf_c)))
             key = (tuple(Kni.tolist()), Bi)
@@ -417,12 +436,12 @@ def _joint_integer_polish(problem: ParamOptProblem, z: np.ndarray, best):
             seen.add(key)
             if not prod / 3.0 <= float(np.mean(Kni)) * Bi <= prod * 3.0:
                 continue
-            K0i, g, ok = min_feasible_K0_joint(problem, Kni, Bi)
+            K0i, g, ok = min_feasible_K0_joint(problem, Kni, Bi, S=Si)
             if not ok:
                 continue
-            ev = problem.evaluate(K0i, Kni, Bi, g)
-            if best is None or ev["E"] < best[4]:
-                best = (K0i, Kni, Bi, g, ev["E"])
+            ev = problem.evaluate(K0i, Kni, Bi, g, S=Si)
+            if best is None or ev["E"] < best[5]:
+                best = (K0i, Kni, Bi, g, Si, ev["E"])
     return best
 
 
@@ -436,41 +455,50 @@ def _round_integer(problem: ParamOptProblem, z: np.ndarray,
     non-increasing in K0 for every rule, so each rounding takes the smallest
     K0 restoring C <= C_max (via :func:`min_feasible_K0` bisection — for m=J
     the gamma-optimizing :func:`min_feasible_K0_joint`) and the least-energy
-    feasible candidate wins.  Returns ``(K0, Kn, B, extra, E)`` with
-    ``extra`` the (re-optimized, for m=J) step size / X0 value.
+    feasible candidate wins.  Returns ``(K0, Kn, B, extra, S, E)`` with
+    ``extra`` the (re-optimized, for m=J) step size / X0 value and ``S``
+    the rounded cohort size (None without a free sampling variable).
     """
     v = problem.vmap
     joint = problem.m is Objective.JOINT
     int_idx = [i for i, nm in enumerate(v.names)
-               if nm == "K0" or nm.startswith("K") or nm in ("l", "B")]
+               if nm == "K0" or nm.startswith("K") or nm in ("l", "B", "S")]
+    s_hi = (None if problem._i_S is None else
+            int(math.floor(problem.sampling.s_cap(problem.sys.N) + 1e-9)))
     best = None
     for mode in (math.floor, round, math.ceil):
         zc = z.copy()
         for i in int_idx:
-            zc[i] = np.log(max(1, mode(float(np.exp(z[i])))))
-        K0f, Knf, Bf, _ = _extract(problem, zc)
+            iv = max(1, mode(float(np.exp(z[i]))))
+            if s_hi is not None and v.names[i] == "S":
+                iv = min(iv, s_hi)         # rounding must not breach pi<=1
+            zc[i] = np.log(iv)
+        K0f, Knf, Bf, _, Sf = _extract(problem, zc)
+        Si = _round_S(problem, Sf)
         Kni = np.maximum(1, np.ceil(Knf - 1e-9)).astype(np.int64)
         Bi = max(1, int(round(Bf)))
         K0_lo = max(1, math.floor(K0f))
         if joint:
             K0i, cand_extra, ok = min_feasible_K0_joint(problem, Kni, Bi,
-                                                        K0_lo=K0_lo)
+                                                        K0_lo=K0_lo, S=Si)
         else:
-            K0i, ok = min_feasible_K0(problem, Kni, Bi, extra, K0_lo=K0_lo)
+            K0i, ok = min_feasible_K0(problem, Kni, Bi, extra, K0_lo=K0_lo,
+                                      S=Si)
             cand_extra = extra
         if not ok:
             continue
-        ev = problem.evaluate(K0i, Kni, Bi, cand_extra)
-        if best is None or ev["E"] < best[4]:
-            best = (K0i, Kni, Bi, cand_extra, ev["E"])
+        ev = problem.evaluate(K0i, Kni, Bi, cand_extra, S=Si)
+        if best is None or ev["E"] < best[5]:
+            best = (K0i, Kni, Bi, cand_extra, Si, ev["E"])
     if joint:
         best = _joint_integer_polish(problem, z, best)
     if best is None:
         # fall back to the ceil point even if (slightly) infeasible
-        K0f, Knf, Bf, _ = _extract(problem, z)
+        K0f, Knf, Bf, _, Sf = _extract(problem, z)
+        Si = _round_S(problem, Sf, mode=math.ceil)
         Kni = np.maximum(1, np.ceil(Knf)).astype(np.int64)
         Bi = max(1, math.ceil(Bf))
         K0i = max(1, math.ceil(K0f))
-        ev = problem.evaluate(K0i, Kni, Bi, extra)
-        best = (K0i, Kni, Bi, extra, ev["E"])
+        ev = problem.evaluate(K0i, Kni, Bi, extra, S=Si)
+        best = (K0i, Kni, Bi, extra, Si, ev["E"])
     return best

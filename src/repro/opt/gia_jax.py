@@ -83,12 +83,13 @@ def compile_cache_clear():
 
 @functools.lru_cache(maxsize=64)
 def _compiled(m_value: str, n: int, m_cons: int, seg_bytes: bytes,
-              caps: Tuple[int, ...], i_x0: int, max_iter: int):
+              caps: Tuple[int, ...], i_x0: int, max_iter: int,
+              sampled: bool = False):
     seg = jnp.asarray(np.frombuffer(seg_bytes, dtype=np.int32))
     m = Objective(m_value)
-    refresh_one = make_refresh(m, n, caps)
+    refresh_one = make_refresh(m, n, caps, sampled)
     project_one = make_project(m, i_x0)
-    key = (m_value, n, m_cons, caps, seg_bytes, i_x0)
+    key = (m_value, n, m_cons, caps, seg_bytes, i_x0, sampled)
 
     def _seg_max(t):
         return jax.ops.segment_max(t, seg, num_segments=m_cons,
@@ -357,7 +358,7 @@ def solve_gia_fused(problems: Sequence, z0s: Sequence[np.ndarray],
     """
     plan = RefreshPlan.build(problems)
     fn = _compiled(plan.m.value, plan.n, plan.m_cons, plan.seg.tobytes(),
-                   plan.caps, plan.i_x0, int(max_iter))
+                   plan.caps, plan.i_x0, int(max_iter), plan.sampled)
     z0 = np.stack([np.asarray(z, dtype=np.float64) for z in z0s])
     pad = int(pad_to) - len(problems)
     if pad > 0:

@@ -187,16 +187,24 @@ class ParamOptProblem:
     rho: Optional[float] = None          # rho_E or rho_D
     vmap: Optional[VarMap] = None
     family: object = "genqsgd"           # repro.families key or instance
+    sampling: object = "full"            # repro.sampling key or instance
 
     def __post_init__(self):
         from ..families import resolve   # lazy: families imports this module
+        from ..sampling import resolve as resolve_sampling   # ditto
         self.m = Objective.coerce(self.m)
         self.family = resolve(self.family)
         self.family.agg_eps(self.sys.N)  # N-mismatched weights fail loudly
+        self.sampling = resolve_sampling(self.sampling)
+        self.sampling.validate(self.sys.N)
         if self.vmap is None:
             self.vmap = identity_varmap(
                 self.sys.N,
                 with_extra=self.m in (Objective.EXPONENTIAL, Objective.JOINT))
+        # free-cohort models append the "S" decision variable *after* every
+        # family variable (extra included), so positional lookups stay valid
+        if self.sampling.free_S and "S" not in self.vmap.names:
+            self.vmap = self.sampling.extend_varmap(self.vmap, self.sys.N)
         if self.m is not Objective.JOINT and self.gamma is None:
             raise ValueError(f"m={self.m} requires a fixed gamma")
         if self.m.needs_rho and self.rho is None:
@@ -214,23 +222,94 @@ class ParamOptProblem:
 
     @functools.cached_property
     def _c_eff(self):
-        """Theorem-1 coefficients with the family's (c2, c3) scales folded
-        in; scales of exactly 1.0 leave the floats bitwise untouched."""
+        """Theorem-1 coefficients with the family's (c2, c3) scales *and*
+        the sampling model's c3 inflation folded in; scales of exactly 1.0
+        leave the floats bitwise untouched."""
         c1, c2, c3, c4 = self.consts.c
         c2s, c3s = self.family.c_scales(self.sys.N)
         if c2s != 1.0:
             c2 = c2 * c2s
         if c3s != 1.0:
             c3 = c3 * c3s
+        s3 = self.sampling.c3_scale(self.sys.N)
+        if s3 != 1.0:
+            c3 = c3 * s3
         return c1, c2, c3, c4
+
+    # -- sampling hooks (repro.sampling): participation as coefficients ------
+    # Pinned cohorts are pure coefficient changes (exact inflation factors);
+    # free-S models additionally append the "S" variable and multiply the
+    # variance blocks by the S^{-1} monomial — still posynomial, so sampled
+    # problems batch and fuse through refresh/gia_jax unchanged.
+    @functools.cached_property
+    def _i_S(self) -> Optional[int]:
+        """Index of the free cohort-size variable (None = pinned/full)."""
+        try:
+            return self.vmap.names.index("S")
+        except ValueError:
+            return None
+
+    def _over_S(self, p: Posy) -> Posy:
+        """``p / S`` when the cohort size is a free variable (no-op —
+        the same object, bitwise — for pinned/full participation)."""
+        if self._i_S is None:
+            return p
+        return p / var(self._i_S, self.vmap.n)
+
+    def _pi_at(self, S: Optional[float] = None) -> Optional[np.ndarray]:
+        """Inclusion probabilities at cohort size ``S`` (None = full)."""
+        return self.sampling.pi_at(self.sys.N, S)
+
+    def _conv_coeffs(self, S: Optional[float] = None):
+        """``(c, q_pairs)`` for the closed-form convergence bound with the
+        *exact* sampling inflation at concrete cohort size ``S``.
+
+        This is the bound ``evaluate`` / integer recovery / the feasibility
+        flag report.  For free-``S`` models the GP surrogate instead uses
+        the conservative posynomial relaxation ``(q+1)/pi >= (q+1-pi)/pi``
+        (exactness at ``pi -> 1`` is impossible for a posynomial in ``S``),
+        so the surrogate steers and the closed form validates — the same
+        split the m=E Taylor constraints already follow.  The ``c3``
+        variance-mean scale has no such slack: ``(1/N) sum 1/pi_n`` equals
+        the relaxed-part/``S`` exactly, for every builtin model."""
+        c = self._c_eff
+        qp = self.sys.q_pairs
+        if self._i_S is not None:
+            if S is None:
+                raise ValueError("free-S sampling problem: pass the cohort "
+                                 "size S to evaluate the bound")
+            Sf = float(S)
+            c = (c[0], c[1], c[2] / Sf, c[3])
+            qp = self.sampling.q_coeffs_at(qp, self.sys.N, Sf)
+        else:
+            sq = self.sampling.q_coeffs(qp, self.sys.N)
+            if sq is not None:
+                qp = sq
+        return c, qp
 
     # -- shared pieces ------------------------------------------------------
     def _objective(self) -> Posy:
         v, s = self.vmap, self.sys
         e = s.comp_energy_coeff
-        obj = float(s.const_energy) * v.K0
+        pi = self.sampling.pi(s.N)
+        p = self.sampling.base_p(s.N) if self.sampling.free_S else None
+        if pi is None and p is None:       # full participation, verbatim
+            obj = float(s.const_energy) * v.K0
+            for i in range(s.N):
+                obj = obj + float(e[i]) * (v.K0 * v.B * v.Kn[i])
+            return obj
+        comm = s.comm_energy_coeff         # p_n M_sn / r_n per worker
+        if p is not None:                  # free S: pi_n = p_n * S
+            Sm = var(self._i_S, v.n)
+            obj = float(s.server_energy) * v.K0 \
+                + float(np.sum(comm * p)) * (v.K0 * Sm)
+            for i in range(s.N):
+                obj = obj + float(e[i] * p[i]) * (v.K0 * v.B * v.Kn[i] * Sm)
+            return obj
+        # pinned cohort: constant pi_n folded into the coefficients
+        obj = float(s.server_energy + np.sum(comm * pi)) * v.K0
         for i in range(s.N):
-            obj = obj + float(e[i]) * (v.K0 * v.B * v.Kn[i])
+            obj = obj + float(e[i] * pi[i]) * (v.K0 * v.B * v.Kn[i])
         return obj
 
     def _common_constraints(self) -> List[Posy]:
@@ -264,8 +343,19 @@ class ParamOptProblem:
         return out
 
     def _sum_q_Kn2(self) -> Posy:
-        """sum_n q_n (eps_n K_n)^2 — the quantization-variance block."""
+        """sum_n q_n (eps_n K_n)^2 — the quantization-variance block, with
+        the sampling model's participation inflation on q_n.
+
+        For a free cohort size this is the *positive* part of the exact
+        inflated block: ``q_eff_n = (q_n+1)/(p_n S) - 1`` splits into
+        ``(q_n+1)/p_n * S^{-1}`` (returned here, divided by the S monomial)
+        minus 1; the negative part (:meth:`_sum_Kn2_eps`) moves to the
+        ratio denominator in :meth:`_conv_constraint`, so the GP encodes
+        the exact bound — no relaxation slack."""
         qp = self.sys.q_pairs
+        sq = self.sampling.q_coeffs(qp, self.sys.N)
+        if sq is not None:
+            qp = sq
         eps = self._agg_eps
         v = self.vmap
         out = None
@@ -274,6 +364,18 @@ class ParamOptProblem:
             if eps is not None:
                 q = q * float(eps[i]) ** 2
             t = float(q) * (v.Kn[i] ** 2)
+            out = t if out is None else out + t
+        return self._over_S(out)
+
+    def _sum_Kn2_eps(self) -> Posy:
+        """sum_n (eps_n K_n)^2 — the negative ("-1") part of the exact
+        participation-inflated q-block under a free cohort size."""
+        eps = self._agg_eps
+        v = self.vmap
+        out = None
+        for i in range(self.sys.N):
+            w = 1.0 if eps is None else float(eps[i]) ** 2
+            t = w * (v.Kn[i] ** 2)
             out = t if out is None else out + t
         return out
 
@@ -294,18 +396,42 @@ class ParamOptProblem:
         sumQ = self._sum_q_Kn2()
         st = {"sumK": sumK}
 
+        # Free cohort size: the exact inflated q-block is a signomial
+        # (positive part sumQ/S, negative part -sum (eps K)^2), so the
+        # C/J/D constraints are multiplied through by sum_n eps_n K_n and
+        # kept as a num/den ratio — the negative part lands in the
+        # denominator, which ratio_to_posy AM-GM-condenses per iteration
+        # exactly as m=E's (31) always has.  No bound relaxation.
+        fs = self._i_S is not None
+
         if self.m is Objective.CONSTANT:                    # (26)
             g = self.gamma
-            st["overM_head"] = (c1 / (Cmax * g)) / v.K0
-            st["mid"] = (c2 * g**2 / Cmax) * (v.T2 ** 2) \
-                + (c3 * g / Cmax) / v.B
-            st["overM_tail"] = (c4 * g / Cmax) * sumQ
+            if fs:
+                st["fs_num"] = (c1 / (Cmax * g)) / v.K0 \
+                    + (c2 * g**2 / Cmax) * ((v.T2 ** 2) * sumK) \
+                    + self._over_S((c3 * g / Cmax) * (sumK / v.B)) \
+                    + (c4 * g / Cmax) * sumQ
+                st["fs_den"] = sumK \
+                    + (c4 * g / Cmax) * self._sum_Kn2_eps()
+            else:
+                st["overM_head"] = (c1 / (Cmax * g)) / v.K0
+                st["mid"] = (c2 * g**2 / Cmax) * (v.T2 ** 2) \
+                    + self._over_S((c3 * g / Cmax) / v.B)
+                st["overM_tail"] = (c4 * g / Cmax) * sumQ
         elif self.m is Objective.JOINT:                     # (40)
             gam = v.extra
-            st["overM_head"] = (c1 / Cmax) / (gam * v.K0)
-            st["mid"] = (c2 / Cmax) * (gam ** 2) * (v.T2 ** 2) \
-                + (c3 / Cmax) * gam / v.B
-            st["overM_tail"] = (c4 / Cmax) * (gam * sumQ)
+            if fs:
+                st["fs_num"] = (c1 / Cmax) / (gam * v.K0) \
+                    + (c2 / Cmax) * ((gam ** 2) * ((v.T2 ** 2) * sumK)) \
+                    + self._over_S((c3 / Cmax) * (gam * (sumK / v.B))) \
+                    + (c4 / Cmax) * (gam * sumQ)
+                st["fs_den"] = sumK \
+                    + (c4 / Cmax) * (gam * self._sum_Kn2_eps())
+            else:
+                st["overM_head"] = (c1 / Cmax) / (gam * v.K0)
+                st["mid"] = (c2 / Cmax) * (gam ** 2) * (v.T2 ** 2) \
+                    + self._over_S((c3 / Cmax) * gam / v.B)
+                st["overM_tail"] = (c4 / Cmax) * (gam * sumQ)
             # (39): gamma <= 1/L  (lower bound comes from the box)
             st["gamma_cap"] = float(self.consts.L) * gam
         elif self.m is Objective.DIMINISHING:               # (35)
@@ -314,9 +440,20 @@ class ParamOptProblem:
             b2 = rho**2 * g**2 / (rho + 1.0)**3 \
                 + rho**2 * g**2 / (2 * (rho + 1.0)**2)
             b3 = rho * g / (rho + 1.0)**2 + rho * g / (rho + 1.0)
-            st["overM_head"] = const(b1 * c1, v.n)
-            st["mid"] = b2 * c2 * (v.T2 ** 2) + (b3 * c3) / v.B
-            st["overM_tail"] = b3 * c4 * sumQ
+            if fs:
+                st["fs_num"] = const(b1 * c1, v.n) \
+                    + (b2 * c2) * ((v.T2 ** 2) * sumK) \
+                    + self._over_S((b3 * c3) * (sumK / v.B)) \
+                    + (b3 * c4) * sumQ
+                # scaled by the Taylor(K0) scalars b / a at each refresh
+                st["fs_numB"] = Cmax * sumK
+                st["fs_denK"] = Cmax * (v.K0 * sumK)
+                st["fs_denQ"] = (b3 * c4) * self._sum_Kn2_eps()
+            else:
+                st["overM_head"] = const(b1 * c1, v.n)
+                st["mid"] = b2 * c2 * (v.T2 ** 2) \
+                    + self._over_S((b3 * c3) / v.B)
+                st["overM_tail"] = b3 * c4 * sumQ
         elif self.m is Objective.EXPONENTIAL:               # (31)-(33)
             g, rho = self.gamma, self.rho
             a1 = (1.0 - rho) / g
@@ -325,13 +462,19 @@ class ParamOptProblem:
             X0 = v.extra
             st["num"] = const(a1 * c1, v.n) \
                 + (a2 * c2) * (v.T2 ** 2) * sumK \
-                + (a3 * c3) * (sumK / v.B) \
+                + self._over_S((a3 * c3) * (sumK / v.B)) \
                 + Cmax * (X0 * sumK) \
                 + a3 * c4 * sumQ
             st["den"] = Cmax * sumK \
                 + (a2 * c2) * (v.T2 ** 2) * (X0 ** 3) * sumK \
-                + (a3 * c3) * ((X0 ** 2) * sumK / v.B) \
+                + self._over_S((a3 * c3) * ((X0 ** 2) * sumK / v.B)) \
                 + (a3 * c4) * (X0 ** 2) * sumQ
+            if fs:
+                # exact inflated q-block: the -sum (eps K)^2 parts of num
+                # and den each move across the inequality to stay posynomial
+                sumQm = self._sum_Kn2_eps()
+                st["num"] = st["num"] + (a3 * c4) * ((X0 ** 2) * sumQm)
+                st["den"] = st["den"] + (a3 * c4) * sumQm
             lam = float(np.log(1.0 / rho))
             st["lam"] = lam
             st["lam_X0K0"] = lam * (X0 * v.K0)
@@ -346,6 +489,22 @@ class ParamOptProblem:
         v = self.vmap
         Cmax = self.C_max
         st = self._conv_static
+        fs = self._i_S is not None
+
+        if fs and self.m in (Objective.CONSTANT, Objective.JOINT):
+            con = ratio_to_posy(st["fs_num"], st["fs_den"], z_prev)
+            return [con] if self.m is Objective.CONSTANT \
+                else [con, st["gamma_cap"]]
+        if fs and self.m is Objective.DIMINISHING:
+            rho = self.rho
+            K0_prev = float(np.exp(z_prev @ v.K0.A[0]) * v.K0.c[0])
+            a = float(np.log((K0_prev + rho + 1.0) / (rho + 1.0))
+                      + K0_prev / (K0_prev + rho + 1.0))
+            b = float(K0_prev**2 / (K0_prev + rho + 1.0))
+            num = st["fs_num"] + b * st["fs_numB"]
+            den = a * st["fs_denK"] + st["fs_denQ"]
+            return [ratio_to_posy(num, den, z_prev)]
+
         if self.m is not Objective.EXPONENTIAL:
             M = amgm_monomial(st["sumK"], z_prev)  # condensed sum_n K_n
 
@@ -464,15 +623,17 @@ class ParamOptProblem:
         return cls._K0_LADDER
 
     def _grid_CTE(self, ks: np.ndarray, Kn: np.ndarray, B: np.ndarray,
-                  gam_arr: Optional[np.ndarray]):
+                  gam_arr: Optional[np.ndarray],
+                  S0: Optional[float] = None):
         """C/T/E surfaces over (grid point, K0 ladder) — evaluated with the
         very same :mod:`repro.core` closed forms :meth:`evaluate` uses
         (they broadcast over the ladder axis), so the feasibility search
-        can never drift from the true cost model."""
+        can never drift from the true cost model.  ``S0`` prices the
+        surfaces at a concrete cohort size (free-S problems only)."""
         from ..core import convergence as conv
         from ..core.cost import energy_cost, time_cost
-        c = self._c_eff
-        qp = self.sys.q_pairs
+        c, qp = self._conv_coeffs(S0)
+        pi = self._pi_at(S0)
         eps = self._agg_eps
         G, L = Kn.shape[0], ks.shape[0]
         C = np.empty((G, L))
@@ -490,7 +651,7 @@ class ParamOptProblem:
                        else self.gamma)
                 C[g] = conv.c_constant(ks, Kn[g], B[g], gam, c, qp, eps)
             T[g] = time_cost(self.sys, ks, Kn[g], B[g])
-            E[g] = energy_cost(self.sys, ks, Kn[g], B[g])
+            E[g] = energy_cost(self.sys, ks, Kn[g], B[g], pi=pi)
         return C, T, E
 
     def z_init(self) -> np.ndarray:
@@ -529,25 +690,48 @@ class ParamOptProblem:
         gam_arr = (np.array([g for g, _, _ in combos])
                    if self.m is Objective.JOINT else None)
         ks = self._k0_ladder()                                     # (L,)
-        C, T, E = self._grid_CTE(ks, Kn, B, gam_arr)               # (G, L)
         L = ks.shape[0]
-        c_ok = C <= self.C_max * (1 - 1e-3)                        # (G, L)
-        t_viol = T > self.T_max
-        first_c = np.where(c_ok.any(axis=1), c_ok.argmax(axis=1), L)
-        first_t = np.where(t_viol.any(axis=1), t_viol.argmax(axis=1), L)
-        # the ladder walk stops at whichever comes first; C wins ties (the
-        # loop checked C before the time break at each rung)
-        hit = (first_c < L) & (first_c <= first_t)
-        idx = np.where(hit, np.minimum(first_c, L - 1), 0)
-        ok = hit & (T[np.arange(G), idx] <= self.T_max * (1 - 1e-3))
-        if ok.any():
-            E_hit = np.where(ok, E[np.arange(G), idx], np.inf)
-            g_best = int(E_hit.argmin())               # first-wins ties
+        # free-S problems search a halving ladder of cohort sizes too: the
+        # local GIA polishes within the basin this seed lands in, so the
+        # seed must compare S levels globally (the energy-optimal cohort
+        # can sit far below the cap)
+        if self._i_S is None:
+            S_levels = [None]
+        else:
+            cap = max(1.0, float(np.floor(
+                self.sampling.s_cap(self.sys.N) + 1e-9)))
+            S_levels, sv = [], cap
+            while True:
+                S_levels.append(sv)
+                if sv <= 1.0:
+                    break
+                sv = float(np.ceil(sv / 2.0))
+        best = None                    # (E, g, first_c rung, S level)
+        for S0 in S_levels:
+            C, T, E = self._grid_CTE(ks, Kn, B, gam_arr, S0)       # (G, L)
+            c_ok = C <= self.C_max * (1 - 1e-3)                    # (G, L)
+            t_viol = T > self.T_max
+            first_c = np.where(c_ok.any(axis=1), c_ok.argmax(axis=1), L)
+            first_t = np.where(t_viol.any(axis=1), t_viol.argmax(axis=1), L)
+            # the ladder walk stops at whichever comes first; C wins ties
+            # (the loop checked C before the time break at each rung)
+            hit = (first_c < L) & (first_c <= first_t)
+            idx = np.where(hit, np.minimum(first_c, L - 1), 0)
+            ok = hit & (T[np.arange(G), idx] <= self.T_max * (1 - 1e-3))
+            if ok.any():
+                E_hit = np.where(ok, E[np.arange(G), idx], np.inf)
+                g_best = int(E_hit.argmin())           # first-wins ties
+                if best is None or E_hit[g_best] < best[0]:
+                    best = (float(E_hit[g_best]), g_best,
+                            int(first_c[g_best]), S0)
+        if best is not None:
+            _, g_best, rung, S_sel = best
             gam, Bv, Kv = combos[g_best]
-            K0 = int(self._k0_ladder()[first_c[g_best]])
+            K0 = int(ks[rung])
         else:  # no feasible grid point; fall back to a benign interior guess
             K0, Kv, Bv, gam = 64, 4, 4, (0.1 / self.consts.L
                                          if self.m is Objective.JOINT else None)
+            S_sel = S_levels[0]
         for i, nm in enumerate(names):
             if nm == "K0":
                 z[i] = np.log(float(K0))
@@ -557,6 +741,8 @@ class ParamOptProblem:
                 z[i] = np.log(float(Bv))
             elif nm == "extra" and self.m is Objective.JOINT:
                 z[i] = np.log(gam)
+        if self._i_S is not None:          # seed at the grid-best cohort size
+            z[self._i_S] = np.log(float(S_sel))
         Kn = np.array([float(np.exp(k.logvalue(z))) for k in v.Kn])
         ct = self.sys.comp_time_coeff
         if "T1" in names:  # keep (22)/(23) strictly slack at the start
@@ -567,11 +753,14 @@ class ParamOptProblem:
 
     # -- true (non-approximate) evaluation ------------------------------------
     def evaluate(self, K0: float, Kn: np.ndarray, B: float,
-                 extra: Optional[float] = None) -> Dict[str, float]:
+                 extra: Optional[float] = None,
+                 S: Optional[float] = None) -> Dict[str, float]:
+        """Closed-form (C, T, E) at a concrete point.  ``S`` is required
+        (and only meaningful) when the cohort size is a free variable;
+        ``E`` is then the *expected* energy over cohort draws."""
         from ..core import convergence as conv
         from ..core.cost import energy_cost, time_cost
-        c = self._c_eff
-        qp = self.sys.q_pairs
+        c, qp = self._conv_coeffs(S)
         eps = self._agg_eps
         if self.m is Objective.CONSTANT:
             C = conv.c_constant(K0, Kn, B, self.gamma, c, qp, eps)
@@ -585,13 +774,15 @@ class ParamOptProblem:
             assert extra is not None
             C = conv.c_constant(K0, Kn, B, extra, c, qp, eps)
         return {
-            "E": energy_cost(self.sys, K0, Kn, B),
+            "E": energy_cost(self.sys, K0, Kn, B, pi=self._pi_at(S)),
             "T": time_cost(self.sys, K0, Kn, B),
             "C": C,
         }
 
-    def feasible(self, K0, Kn, B, extra=None, rtol: float = 1e-6) -> bool:
-        ev = self.evaluate(K0, np.asarray(Kn, dtype=np.float64), B, extra)
+    def feasible(self, K0, Kn, B, extra=None, rtol: float = 1e-6,
+                 S: Optional[float] = None) -> bool:
+        ev = self.evaluate(K0, np.asarray(Kn, dtype=np.float64), B, extra,
+                           S=S)
         ok = (ev["T"] <= self.T_max * (1 + rtol)
               and ev["C"] <= self.C_max * (1 + rtol))
         if self.m is Objective.JOINT and extra is not None:

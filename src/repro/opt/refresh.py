@@ -25,6 +25,19 @@ the plan handles with one padded slot):
   J:  [ head/M | mid | tail/M ] [ gamma_cap ]
   D:  [ (head/M | mid | tail/M | b·C_max) / (C_max·a·K0) ]   a,b Taylor(K0)
   E:  [ num/M_den ] [ (32) 2-slot branch ] [ (33) ] [ x0_cap ]
+
+Free-cohort sampling (``sampled=True``, repro.sampling models with the "S"
+variable) replaces the C/J/D layouts with the exact ratio form built by
+``problems._conv_static`` — the whole constraint multiplied through by
+sum_n eps_n K_n, the participation penalty's negative part in the
+denominator:
+
+  C:  [ fs_num / AM-GM(fs_den) ]
+  J:  [ fs_num / AM-GM(fs_den) ] [ gamma_cap ]
+  D:  [ (fs_num | b·fs_numB) / AM-GM(a·fs_denK | fs_denQ) ]  a,b Taylor(K0)
+
+m=E is untouched: its num/den ratio absorbs the extra static terms and the
+existing refresh is term-count-agnostic.
 """
 from __future__ import annotations
 
@@ -74,6 +87,7 @@ class RefreshPlan:
     skel_logc: np.ndarray       # (B, T_common) z-independent constraints
     skel_A: np.ndarray          # (B, T_common, n)
     arrays: Dict[str, np.ndarray]   # m-specific refresh coefficients
+    sampled: bool = False       # free-cohort (ratio-form) C/J/D conv block
 
     @property
     def batch(self) -> int:
@@ -83,7 +97,7 @@ class RefreshPlan:
     def signature_key(self) -> tuple:
         """Hashable static layout — one compiled fused program per value."""
         return (self.m.value, self.n, self.m_cons, self.caps,
-                self.seg.tobytes(), self.i_x0)
+                self.seg.tobytes(), self.i_x0, self.sampled)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -108,6 +122,36 @@ class RefreshPlan:
         common_sizes = [c.n_terms for c in p0.skeleton[1]]
 
         a: Dict[str, np.ndarray] = {}
+        sampled = "fs_num" in st0
+        if sampled:
+            a["fsnum_c"], a["fsnum_A"] = _terms([st["fs_num"] for st in sts])
+            if m is Objective.DIMINISHING:
+                a["fsnumB_c"], a["fsnumB_A"] = _terms(
+                    [st["fs_numB"] for st in sts])
+                a["fsdenK_c"], a["fsdenK_A"] = _terms(
+                    [st["fs_denK"] for st in sts])
+                a["fsdenQ_c"], a["fsdenQ_A"] = _terms(
+                    [st["fs_denQ"] for st in sts])
+                a["rho"] = np.array([p.rho for p in problems],
+                                    dtype=np.float64)
+                a["K0_c"], a["K0_A"] = _row([p.vmap.K0 for p in problems])
+                caps = (st0["fs_num"].n_terms + st0["fs_numB"].n_terms,)
+            else:
+                fsden_c, a["fsden_A"] = _terms([st["fs_den"] for st in sts])
+                a["fsden_logc"] = np.log(fsden_c)
+                if m is Objective.JOINT:
+                    gcap_c, a["gcap_A"] = _terms(
+                        [st["gamma_cap"] for st in sts])
+                    a["gcap_logc"] = np.log(gcap_c)
+                    caps = (st0["fs_num"].n_terms, 1)
+                else:
+                    caps = (st0["fs_num"].n_terms,)
+            sizes = np.asarray(common_sizes + list(caps), dtype=np.int64)
+            seg = np.repeat(np.arange(sizes.size, dtype=np.int32), sizes)
+            return cls(m=m, n=v.n, m_cons=int(sizes.size), caps=caps,
+                       seg=seg, i_x0=-1, obj_logc=np.log(obj_c), obj_A=obj_A,
+                       skel_logc=skel_logc, skel_A=skel_A, arrays=a,
+                       sampled=True)
         if m is Objective.EXPONENTIAL:
             a["num_c"], a["num_A"] = _terms([st["num"] for st in sts])
             den_c, a["den_A"] = _terms([st["den"] for st in sts])
@@ -177,15 +221,51 @@ def _amgm_jnp(logc, A, z):
     return logc_m, A_m
 
 
-def make_refresh(m: Objective, n: int, caps: Tuple[int, ...]):
+def make_refresh(m: Objective, n: int, caps: Tuple[int, ...],
+                 sampled: bool = False):
     """The per-instance coefficient refresh ``(z, arrays) -> (logc, A)`` for
     one conv block, as pure jnp (vmapped/jitted by the fused solver).
 
     Output shapes are ``(sum(caps),)`` / ``(sum(caps), n)`` — the conv
     segment of the packed constraint tensors; unused slots carry
-    :data:`~repro.opt.structure.PAD_LOGC`.
+    :data:`~repro.opt.structure.PAD_LOGC`.  ``sampled`` selects the
+    free-cohort ratio-form C/J/D refresh (m=E needs no variant).
     """
     import jax.numpy as jnp
+
+    if sampled and m in (Objective.CONSTANT, Objective.JOINT):
+
+        def refresh(z, a):
+            # mirror of ratio_to_posy(fs_num, fs_den, z): num coefficients
+            # divided by the AM-GM-condensed denominator monomial
+            logc_d, A_d = _amgm_jnp(a["fsden_logc"], a["fsden_A"], z)
+            logc = jnp.log(a["fsnum_c"] * (1.0 / jnp.exp(logc_d)))
+            A = a["fsnum_A"] - A_d
+            if m is Objective.JOINT:
+                logc = jnp.concatenate([logc, a["gcap_logc"]])
+                A = jnp.concatenate([A, a["gcap_A"]])
+            return logc, A
+
+        return refresh
+
+    if sampled and m is Objective.DIMINISHING:
+
+        def refresh(z, a):
+            rho = a["rho"]
+            k0 = jnp.exp(z @ a["K0_A"]) * a["K0_c"]
+            # same Taylor lower bound of phi(K0) as the pinned branch
+            at = (jnp.log((k0 + rho + 1.0) / (rho + 1.0))
+                  + k0 / (k0 + rho + 1.0))
+            bt = k0 ** 2 / (k0 + rho + 1.0)
+            den_logc = jnp.log(jnp.concatenate(
+                [a["fsdenK_c"] * at, a["fsdenQ_c"]]))
+            den_A = jnp.concatenate([a["fsdenK_A"], a["fsdenQ_A"]])
+            logc_d, A_d = _amgm_jnp(den_logc, den_A, z)
+            num_c = jnp.concatenate([a["fsnum_c"], a["fsnumB_c"] * bt])
+            num_A = jnp.concatenate([a["fsnum_A"], a["fsnumB_A"]])
+            return (jnp.log(num_c * (1.0 / jnp.exp(logc_d))), num_A - A_d)
+
+        return refresh
 
     if m in (Objective.CONSTANT, Objective.JOINT):
 

@@ -37,17 +37,23 @@ def structure_signature(problem: ParamOptProblem) -> tuple:
     """Hashable key identifying the fixed GP layout of a problem instance.
 
     Instances with equal signatures (same objective m, same variable map
-    shape, same worker count, same algorithm-family key) produce GPs of
-    identical constraint counts and can be stacked into one
-    :class:`PackedBatch`; budgets, step-size parameters, and system
-    constants only change coefficients.  The family key is part of the
-    signature even though families never change the packed *shapes*
+    shape, same worker count, same algorithm-family key, same sampling
+    model) produce GPs of identical constraint counts and can be stacked
+    into one :class:`PackedBatch`; budgets, step-size parameters, and
+    system constants only change coefficients.  The family key is part of
+    the signature even though families never change the packed *shapes*
     (:mod:`repro.families` hooks are coefficient-only) so sweep grouping
-    and the fused-program trace counters stay per-family.
+    and the fused-program trace counters stay per-family.  The sampling
+    element works the same way for pinned-cohort models (coefficient-only
+    inflation — shapes match the unsampled problem, but a full-
+    participation plan must never key a sampled scenario's cache pool);
+    free-``S`` models also grow the varmap, so they differ in shape too.
+    Neutral sampling (full participation, ``uniform(S=N)``) reports
+    ``("full",)`` and shares the default problems' pools.
     """
     v = problem.vmap
     return (problem.m, v.n, tuple(v.names), problem.sys.N,
-            problem.family.key)
+            problem.family.key, problem.sampling.signature(problem.sys.N))
 
 
 @dataclasses.dataclass

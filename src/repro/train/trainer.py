@@ -13,6 +13,7 @@ from typing import Callable, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ArchConfig
 from ..core.step_rules import StepRule
@@ -21,10 +22,15 @@ from ..fed.runtime import FedConfig, make_round_fn
 from . import checkpoint as CKPT
 
 
-def round_comm_bits(fed: FedConfig, dim: int) -> float:
-    """Wire bits one round moves: N worker uploads + the server multicast,
-    priced by the same codec table the cost-layer optimizer uses."""
-    up = sum(c.wire_bits(dim) for c in fed.codecs())
+def round_comm_bits(fed: FedConfig, dim: int, cohort=None) -> float:
+    """Wire bits one round moves: worker uploads + the server multicast,
+    priced by the same codec table the cost-layer optimizer uses.
+
+    ``cohort`` (an index array, only under client sampling) restricts the
+    upload sum to the workers that actually participated this round."""
+    codecs = fed.codecs()
+    idx = range(fed.n_workers) if cohort is None else cohort
+    up = sum(codecs[int(i)].wire_bits(dim) for i in idx)
     return up + fed.server_codec().wire_bits(dim)
 
 __all__ = ["TrainState", "GenQSGDTrainer", "round_comm_bits"]
@@ -62,12 +68,27 @@ class GenQSGDTrainer:
         gammas = self.rule.sequence(state.round + n_rounds)
         dim = sum(int(l.size) for l in jax.tree.leaves(state.params))
         comm_mbits = round_comm_bits(self.fed, dim) / 1e6
+        fed = self.fed
+        rng = (np.random.default_rng(fed.seed)
+               if fed.sampling_S is not None else None)
+        self.cohort_trace = []
         for r in range(state.round, state.round + n_rounds):
             key, rkey = jax.random.split(key)
             batch = next(batches)
             t0 = time.time()
-            state.params, metrics = self._round(
-                state.params, batch, rkey, jnp.float32(gammas[r]))
+            if rng is not None:
+                from ..sampling.base import draw_cohort_weights  # cycle
+                idx, u = draw_cohort_weights(rng, fed.n_workers,
+                                             fed.sampling_S, fed.sampling_p,
+                                             fed.agg_weights)
+                self.cohort_trace.append(idx)
+                comm_mbits = round_comm_bits(fed, dim, cohort=idx) / 1e6
+                state.params, metrics = self._round(
+                    state.params, batch, rkey, jnp.float32(gammas[r]),
+                    jnp.asarray(u, jnp.float32))
+            else:
+                state.params, metrics = self._round(
+                    state.params, batch, rkey, jnp.float32(gammas[r]))
             if r % log_every == 0 or r == state.round + n_rounds - 1:
                 rec = {"round": r, "gamma": float(gammas[r]),
                        "loss": float(metrics["loss"]),

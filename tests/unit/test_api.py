@@ -50,7 +50,7 @@ def test_z_init_and_plan_feasibility_grid(family, m):
     prob = scn.problem()
     z = prob.z_init()
     assert z.shape == (prob.vmap.n,) and np.all(np.isfinite(z))
-    K0, Kn, B, extra = _extract(prob, z)
+    K0, Kn, B, extra, _S = _extract(prob, z)
     init_feasible = prob.feasible(
         K0, Kn, B, extra if m is Objective.JOINT else None)
     if (family, m) not in INFEASIBLE and m is not Objective.JOINT:

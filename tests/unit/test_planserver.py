@@ -188,3 +188,32 @@ def test_stream_mixed_signatures_and_joint_warm():
     st = srv.stats()
     assert st["signatures"] == 3
     assert all(c <= 1 for c in srv.compile_counts().values())
+
+
+# ---------------------------------------------------------------------------
+# client sampling: sampled and full plans never share a pool
+# ---------------------------------------------------------------------------
+def test_sampled_and_full_scenarios_key_separate_pools():
+    """A sampled Scenario (same m/family/N) must get its own signature,
+    queue, and cache pool: identical budgets on a full and a uniform(S=2)
+    scenario may NOT cross-serve each other's cached plans."""
+    from repro.api import uniform
+    from repro.opt.structure import structure_signature
+
+    full = _scenario(C_max=0.25)
+    samp = dataclasses.replace(full, sampling=uniform(S=2))
+    sig_f = structure_signature(full.problem())
+    sig_s = structure_signature(samp.problem())
+    assert sig_f != sig_s
+    # the fingerprints live in different pools, so no exact-hit crossover
+    with _server(backend="numpy") as srv:
+        p_full = srv.solve(full)
+        h = srv.submit(samp)                 # same budgets, sampled model
+        p_samp = h.result(timeout=300)
+        assert h.source == "cold"            # NOT served from the full pool
+        assert p_full.cohort_S is None and p_samp.cohort_S == 2
+        st = srv.stats()
+        assert st["signatures"] == 2 and st["hits"] == 0
+    # neutral uniform(S=N) folds back into the full pool (("full",) key)
+    neut = dataclasses.replace(full, sampling=uniform(S=4))
+    assert structure_signature(neut.problem()) == sig_f

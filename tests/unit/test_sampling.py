@@ -1,0 +1,275 @@
+"""repro.sampling: client sampling / partial participation, end-to-end.
+
+Covers the ISSUE-7 acceptance bar:
+
+  * **S=N reduction** — routing a neutral model (``full`` /
+    ``uniform(S=N)``) through the sampling interface is *bit-identical*
+    to the historical pipeline across an (m, family) grid: structure
+    signature, z_init, conv-block coefficients, the whole GIA history,
+    and the reference RunReport;
+  * **S < N wins** — in a high-compute-energy regime the free-``S`` GP
+    picks a strict sub-cohort with strictly lower expected energy than
+    full participation, on both the scalar reference and the fused
+    backend (which must agree exactly);
+  * **closed loop** — a sampled reference run's realized per-round comm
+    bits equal the Plan's expected bits (uniform cohorts, homogeneous
+    quantizers), and same-seed runs reproduce bit-identical reports;
+  * the runtime draw (systematic PPS) hits its inclusion probabilities,
+    the Horvitz-Thompson reweighting is unbiased, and malformed models /
+    configs fail loudly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (ConstantRule, DiminishingRule, EdgeSystem,
+                       ExponentialRule, MLProblemConstants, QuadraticTask,
+                       Scenario, uniform, importance)
+from repro.core.genqsgd import GenQSGDConfig
+from repro.opt import solve_param_opt, structure_signature
+from repro.opt.gia import solve_param_opt_batched
+from repro.sampling import (SamplingModel, check_probs, cohort_weights,
+                            draw_cohort, draw_cohort_weights, get_sampling,
+                            sampling_names)
+
+pytestmark = pytest.mark.sampling
+
+N = 4
+CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=N)
+#: the paper's Sec.-VII system — the regime where full participation wins
+SYS = EdgeSystem.paper_sec_vii(dim=64, N=N)
+#: homogeneous workers with 10x the paper's compute energy coefficient —
+#: per-step energy is high enough that K-amortization stops paying and a
+#: sub-cohort strictly lowers expected energy (the sampling-wins regime)
+SYS_HOT = dataclasses.replace(
+    EdgeSystem.paper_sec_vii(dim=64, N=N, F_ratio=1.0),
+    alphan=np.full(N, 2e-27))
+
+_STEP = {"C": dict(step=ConstantRule(0.01)),
+         "J": dict(step=None),
+         "E": dict(step=ExponentialRule(0.05, 0.9995)),
+         "D": dict(step=DiminishingRule(0.02, 600.0))}
+
+
+def _scenario(m="C", family="genqsgd", sampling="full", sys_=SYS,
+              T_max=1e5, C_max=0.25):
+    return Scenario(system=sys_, consts=CONSTS, T_max=T_max, C_max=C_max,
+                    family=family, sampling=sampling, **_STEP[m])
+
+
+def _hot(sampling="full", m="C"):
+    kw = dict(_STEP[m])
+    if m == "C":
+        kw = dict(step=ConstantRule(3e-4))
+    return Scenario(system=SYS_HOT, consts=CONSTS, T_max=1e7, C_max=0.25,
+                    sampling=sampling, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_contents():
+    assert set(sampling_names()) >= {"full", "uniform"}
+    assert get_sampling("full").is_neutral(N)
+    assert isinstance(get_sampling("uniform"), SamplingModel)
+    with pytest.raises(ValueError, match="unknown sampling model"):
+        get_sampling("nope")
+
+
+# ---------------------------------------------------------------------------
+# S=N reduction: bit-identical to the historical pipeline
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,family", [
+    ("C", "genqsgd"), ("J", "genqsgd"), ("E", "genqsgd"), ("D", "genqsgd"),
+    ("C", "gqfedwavg"), ("J", "gqfedwavg")])
+def test_neutral_reduction_bitwise(m, family):
+    pf = _scenario(m, family).problem()
+    pn = _scenario(m, family, sampling=uniform(S=N)).problem()
+    assert structure_signature(pf) == structure_signature(pn)
+    zf, zn = pf.z_init(), pn.z_init()
+    assert np.array_equal(zf, zn)
+    for cf, cn in zip(pf.conv_block(zf), pn.conv_block(zn)):
+        assert np.array_equal(cf.c, cn.c) and np.array_equal(cf.A, cn.A)
+    rf = solve_param_opt(pf, verbose=False)
+    rn = solve_param_opt(pn, verbose=False)
+    assert rf.K0 == rn.K0 and np.array_equal(rf.Kn, rn.Kn)
+    assert rf.B == rn.B and rf.E == rn.E and rf.C == rn.C
+    assert rf.history == rn.history       # every GIA iterate, bitwise
+    assert rn.S is None
+
+
+def test_neutral_plan_and_runreport_identical():
+    full = _scenario("C").optimize()
+    neut = _scenario("C", sampling=uniform(S=N)).optimize()
+    assert neut == full                   # including sampling="full" fields
+    task = QuadraticTask(dim=16)
+    r_full = _scenario("C").run(full, task=task, seed=7, max_rounds=4)
+    r_neut = _scenario("C", sampling=uniform(S=N)).run(
+        neut, task=task, seed=7, max_rounds=4)
+    norm = lambda r: dataclasses.replace(r, wall_time_s=0.0)  # noqa: E731
+    assert norm(r_full) == norm(r_neut)
+    assert r_neut.round_bits_trace == ()  # neutral = the historical path
+
+
+# ---------------------------------------------------------------------------
+# free S: the GP picks a strict sub-cohort where sampling wins
+# ---------------------------------------------------------------------------
+def test_free_S_picks_smaller_cohort_with_lower_energy():
+    full = _hot().optimize()
+    samp = _hot(sampling=uniform()).optimize()
+    assert samp.feasible and samp.converged
+    assert samp.cohort_S is not None and samp.cohort_S < N
+    assert samp.predicted_E < full.predicted_E
+    # the reported bound is the exact inflated one at the integer cohort
+    prob = _hot(sampling=uniform()).problem()
+    assert samp.predicted_C <= _hot().C_max + 1e-9
+    assert prob.feasible(samp.K0, np.asarray(samp.Kn), samp.B,
+                         S=samp.cohort_S)
+
+
+@pytest.mark.parametrize("samp", [uniform(), uniform(S=2),
+                                  importance((0.4, 0.3, 0.2, 0.1))])
+def test_fused_backend_matches_reference(samp):
+    p_ref = _hot(sampling=samp).problem()
+    r_ref = solve_param_opt(p_ref, verbose=False)
+    p_fused = _hot(sampling=samp).problem()
+    r_fused = solve_param_opt_batched([p_fused], backend="jnp-fused")[0]
+    assert r_ref.K0 == r_fused.K0 and np.array_equal(r_ref.Kn, r_fused.Kn)
+    assert r_ref.B == r_fused.B and r_ref.S == r_fused.S
+    assert np.isclose(r_ref.E, r_fused.E, rtol=1e-9)
+    assert r_ref.feasible == r_fused.feasible
+
+
+def test_sweep_N_axis_with_free_S():
+    base = _hot(sampling=uniform())
+    rep = base.sweep(over={"N": [4, 8]}, backend="numpy")
+    assert [r["N"] for r in rep.rows] == [4, 8]
+    for r in rep.rows:
+        assert r["feasible"] and r["S"] is not None and r["S"] < r["N"]
+
+
+# ---------------------------------------------------------------------------
+# closed loop: plan bits == realized run bits, seeded reproducibility
+# ---------------------------------------------------------------------------
+def test_reference_run_realizes_expected_comm_bits():
+    scn = _hot(sampling=uniform())
+    plan = scn.optimize()
+    task = QuadraticTask(dim=16)
+    rep = scn.run(plan, task=task, seed=11, max_rounds=8)
+    assert len(rep.round_bits_trace) == 8
+    # uniform cohorts over homogeneous quantizers: realized == expected,
+    # exactly, every round — so the whole-run bits close the loop too
+    exp = plan.expected_round_bits(dim=rep.model_dim)
+    assert all(b == exp for b in rep.round_bits_trace)
+    assert rep.comm_bits == 8 * exp
+    # and the Plan's own prediction uses the same expectation
+    assert plan.predicted_comm_bits == plan.K0 * plan.expected_round_bits()
+
+
+def test_same_seed_runs_are_identical():
+    scn = _hot(sampling=uniform())
+    plan = scn.optimize()
+    task = QuadraticTask(dim=16)
+    norm = lambda r: dataclasses.replace(r, wall_time_s=0.0)  # noqa: E731
+    r1 = scn.run(plan, task=task, seed=5, max_rounds=6)
+    r2 = scn.run(plan, task=task, seed=5, max_rounds=6)
+    assert norm(r1) == norm(r2)
+    # the cohort draws themselves are the seeded part: same seed, same
+    # cohorts; different seed, (almost surely) different cohorts
+    cfg1 = plan.to_genqsgd_config(max_K0=1, seed=5)
+    rng_a = np.random.default_rng(cfg1.seed)
+    rng_b = np.random.default_rng(cfg1.seed)
+    a = [draw_cohort(rng_a, N, cfg1.sampling_S)[0] for _ in range(20)]
+    b = [draw_cohort(rng_b, N, cfg1.sampling_S)[0] for _ in range(20)]
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+def test_plan_expected_and_cohort_bits():
+    scn = _hot(sampling=uniform())
+    plan = scn.optimize()
+    S = plan.cohort_S
+    ups, down = plan._up_down()
+    assert plan.expected_round_bits() == S * sum(ups) / N + down
+    assert plan.cohort_round_bits(range(S)) == sum(ups[:S]) + down
+    # full participation: expected bits ARE the historical round bits
+    full = _hot().optimize()
+    assert full.expected_round_bits() == full.round_bits()
+    assert full.predicted_comm_bits == full.K0 * full.round_bits()
+
+
+# ---------------------------------------------------------------------------
+# runtime draw: inclusion probabilities + unbiased reweighting
+# ---------------------------------------------------------------------------
+def test_systematic_pps_hits_inclusion_probabilities():
+    rng = np.random.default_rng(0)
+    p = np.array([0.4, 0.3, 0.2, 0.1])
+    S, trials = 2, 4000
+    counts = np.zeros(N)
+    for _ in range(trials):
+        idx, pi = draw_cohort(rng, N, S, p)
+        assert len(idx) == S and len(set(idx.tolist())) == S
+        counts[idx] += 1
+    assert np.allclose(counts / trials, S * p, atol=0.03)
+
+
+def test_horvitz_thompson_unbiased():
+    rng = np.random.default_rng(1)
+    d = np.array([3.0, -1.0, 2.0, 5.0])        # per-worker "deltas"
+    w = np.array([0.1, 0.2, 0.3, 0.4])         # family aggregation weights
+    target = float(np.sum(w * d))
+    acc = 0.0
+    trials = 6000
+    for _ in range(trials):
+        idx, u = draw_cohort_weights(rng, N, 2, p=None, agg_weights=w)
+        acc += float(np.sum(u * d))
+    assert acc / trials == pytest.approx(target, abs=0.05)
+    # the weight vector masks exactly the cohort
+    idx, u = draw_cohort_weights(rng, N, 2)
+    assert np.count_nonzero(u) == 2 and set(np.flatnonzero(u)) == set(idx)
+
+
+def test_reference_runtime_cohort_trace_and_unbiased_full_S():
+    """sampling_S=N with uniform p gives pi_n=1 and u_n=w_n — the sampled
+    round computes the exact full aggregation."""
+    idx, u = draw_cohort_weights(np.random.default_rng(0), N, N)
+    assert np.array_equal(np.sort(idx), np.arange(N))
+    assert np.allclose(u, 1.0 / N)
+
+
+# ---------------------------------------------------------------------------
+# validation: malformed models / configs fail loudly
+# ---------------------------------------------------------------------------
+def test_validation_errors():
+    with pytest.raises(ValueError, match="sum to 1"):
+        importance((0.5, 0.2, 0.2, 0.2))
+    with pytest.raises(ValueError, match="positive"):
+        importance((1.2, -0.2, 0.0, 0.0))
+    with pytest.raises(ValueError, match="outside"):
+        _scenario("C", sampling=uniform(S=9))
+    with pytest.raises(ValueError, match="probabilities"):
+        _scenario("C", sampling=importance((0.5, 0.5)))
+    with pytest.raises(ValueError, match="above 1"):
+        _scenario("C", sampling=importance((0.7, 0.1, 0.1, 0.1), S=2))
+    with pytest.raises(ValueError, match="sampling_p"):
+        GenQSGDConfig(K0=1, Kn=(1,) * N, B=1, step_rule=ConstantRule(0.01),
+                      sampling_p=(0.25,) * N)
+    with pytest.raises(ValueError, match="outside"):
+        GenQSGDConfig(K0=1, Kn=(1,) * N, B=1, step_rule=ConstantRule(0.01),
+                      sampling_S=9)
+
+
+def test_fed_config_wire_compat():
+    from repro.fed.runtime import FedConfig
+    ok = FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="f32",
+                   sampling_S=2, seed=0)
+    assert ok.sampling_S == 2
+    # bucketed level wires aggregate outside shard_map: supported
+    FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="int8", bucket=16,
+              sampling_S=2)
+    with pytest.raises(ValueError, match="sampling"):
+        FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="rs_ag",
+                  sampling_S=2)
+    with pytest.raises(ValueError, match="sampling"):
+        FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="int8",
+                  sampling_S=2)           # non-bucketed int8: inside shard_map
