@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Optional, Tuple
 
-from ..compress import RUNTIME_WIRES, make_codec, wire_max_s
+from ..compress import RUNTIME_WIRES, elias, make_codec, wire_max_s
 from ..core.genqsgd import GenQSGDConfig
 from ..core.step_rules import StepRule
 from ..opt.problems import Objective
@@ -253,6 +253,10 @@ class Plan:
             raise ValueError(f"wire must be one of {RUNTIME_WIRES}, "
                              f"got {wire!r}")
         cap = wire_max_s(wire)
+        if wire == "elias":
+            # elias *pricing* is unbounded in s, but the runtime coder reads
+            # levels from an int8 container like the other level transports
+            cap = elias.MAX_RUNTIME_S
         for role, s in [("s0", self.s0)] + [(f"sn[{i}]", s)
                                             for i, s in enumerate(self.sn)]:
             if s is not None and cap is not None and s > cap:

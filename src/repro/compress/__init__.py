@@ -16,8 +16,15 @@ concrete home.  It splits the concern into three orthogonal axes:
             kernels from :mod:`repro.kernels.qsgd`, interchangeable per call
             and verified bit-identical;
   wire      (*how* it travels / what it costs) — "packed" | "f32" | "int8" |
-            "int4" | "rs_ag" formats with the bit accounting in
-            :mod:`repro.compress.wire`.
+            "int4" | "rs_ag" | "elias" formats with the bit accounting in
+            :mod:`repro.compress.wire` (the Elias-omega gap coder itself
+            lives in :mod:`repro.compress.elias`).
+
+The encode side is a *one-pass pipeline*: ``Codec.encode_payload`` goes
+straight from gradient to wire payload — fused norm+quantize+pack Pallas
+kernel for "int4" (``encode_fused``, with a rotate-fused variant for the
+Hadamard-preconditioned codec), omega-coded words for "elias" — instead
+of separate norm / quantize / pack sweeps over HBM.
 
 Consumers:
   * :mod:`repro.core.genqsgd` — Algorithm 1 reference, via ``make_codec``;
@@ -28,7 +35,9 @@ Consumers:
     bytes the runtime sends;
   * :mod:`repro.train.trainer` and ``benchmarks/kernel_bench.py``.
 """
-from .backends import (default_interpret, decode_tensor, encode_tensor,
+from . import elias
+from .backends import (default_interpret, decode_tensor, encode_fused,
+                       encode_fused_jnp, encode_rotated_fused, encode_tensor,
                        level_dtype, qsgd_levels)
 from .codec import (CODEC_KINDS, Codec, ErrorFeedbackCodec, IdentityCodec,
                     QSGDCodec, RotatedQSGDCodec, bits_per_message,
@@ -41,8 +50,9 @@ __all__ = [
     "Codec", "QSGDCodec", "IdentityCodec", "RotatedQSGDCodec",
     "ErrorFeedbackCodec", "CODEC_KINDS", "make_codec",
     "encode_tensor", "decode_tensor", "qsgd_levels", "level_dtype",
+    "encode_fused", "encode_fused_jnp", "encode_rotated_fused",
     "variance_bound", "bits_per_message", "q_pair",
     "WIRE_FORMATS", "RUNTIME_WIRES", "wire_bits", "level_bits",
     "wire_max_s", "pack_int4", "unpack_int4", "default_interpret",
-    "rotate", "unrotate", "fwht", "next_pow2",
+    "rotate", "unrotate", "fwht", "next_pow2", "elias",
 ]

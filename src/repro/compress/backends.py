@@ -29,18 +29,16 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import qsgd as _K
+from ..kernels.qsgd import default_interpret
+from . import rotation as R
 
 __all__ = [
     "qsgd_levels", "encode_jnp", "decode_jnp", "encode_pallas",
     "decode_apply_pallas", "encode_tensor", "decode_tensor",
     "encode_bucketed", "decode_bucketed", "to_buckets",
     "tensor_norm_pallas", "default_interpret", "level_dtype",
+    "encode_fused", "encode_fused_jnp", "encode_rotated_fused",
 ]
-
-
-def default_interpret() -> bool:
-    """Pallas kernels run under the interpreter off-TPU (semantics identical)."""
-    return jax.default_backend() != "tpu"
 
 
 def level_dtype(s: int):
@@ -127,6 +125,79 @@ def tensor_norm_pallas(y: jax.Array, interpret: Optional[bool] = None):
     itp = default_interpret() if interpret is None else interpret
     y2d, _ = _to_grid2d(y.reshape(-1).astype(jnp.float32))
     return jnp.sqrt(_K.sumsq_kernel_call(y2d, interpret=itp))
+
+
+# ---------------------------------------------------------------------------
+# one-pass fused encode (the encode pipeline's kernel entry points)
+# ---------------------------------------------------------------------------
+def _check_fused_s(s: int, pack: bool):
+    if s > 127:
+        raise ValueError(f"the fused encode stores levels as int8 "
+                         f"(s <= 127), got {s}")
+    if pack and s > 7:
+        raise ValueError(f"int4 nibble packing carries s <= 7, got {s}")
+
+
+def encode_fused(y: jax.Array, s: int, u: jax.Array, *, pack: bool = False,
+                 interpret: Optional[bool] = None):
+    """One-pass kernel encode: norm + quantize (+ int4 pack) in a single
+    pallas_call — bit-identical to ``encode_pallas`` followed by
+    ``wire.pack_int4`` but without the int8 level round-trip through HBM.
+
+    -> ``(payload, norm)``: packed int4 bytes of length ceil(n/2) when
+    ``pack`` (the padded tail quantizes to level 0, so slicing the packed
+    grid reproduces ``pack_int4`` exactly, odd lengths included), else int8
+    levels shaped like ``y``.
+    """
+    _check_fused_s(int(s), pack)
+    itp = default_interpret() if interpret is None else interpret
+    y2d, n = _to_grid2d(y.reshape(-1).astype(jnp.float32))
+    u2d, _ = _to_grid2d(u.reshape(-1).astype(jnp.float32))
+    out2d, norm = _K.fused_encode_call(y2d, u2d, s, pack=pack, interpret=itp)
+    if pack:
+        return out2d.reshape(-1)[:(n + 1) // 2], norm
+    return out2d.reshape(-1)[:n].reshape(y.shape), norm
+
+
+def encode_fused_jnp(y: jax.Array, s, u: jax.Array, *, pack: bool = False):
+    """The reference backend's one-pass pipeline: ``encode_jnp`` + nibble
+    pack as ONE jittable expression (XLA fuses the quantize and pack,
+    skipping the int8 materialization the staged path pays).  Same payload
+    contract as :func:`encode_fused`; ``s`` may be traced (pack needs
+    static s <= 7, which the codec layer validates)."""
+    from .wire import pack_int4
+    lvl, norm = encode_jnp(y, s, u)
+    if pack:
+        n = y.size
+        return pack_int4(lvl.astype(jnp.int8))[:(n + 1) // 2], norm
+    return lvl.astype(jnp.int8), norm
+
+
+def encode_rotated_fused(y: jax.Array, s: int, u: jax.Array, seed: int,
+                         *, pack: bool = False,
+                         interpret: Optional[bool] = None):
+    """One-pass rotated encode: randomized-Hadamard rotation + norm +
+    quantize (+ pack) without a separate rotation pass.  Messages whose
+    pow2-padded dimension fits one VMEM block run entirely in-kernel
+    (:func:`repro.kernels.qsgd.fused_rotate_encode_call`); larger ones
+    rotate via the jnp FWHT and fuse the remaining norm+quantize+pack.
+
+    ``u`` must have the padded length ``next_pow2(y.size)`` (the rotated
+    message's length — same contract as ``RotatedQSGDCodec.encode``).
+    -> ``(payload, norm)`` with payload of the *padded* length d (levels)
+    or d/2 (packed bytes): the padded message IS what travels.
+    """
+    _check_fused_s(int(s), pack)
+    itp = default_interpret() if interpret is None else interpret
+    n = y.size
+    d = R.next_pow2(n)
+    if d <= _K.FUSED_ROTATE_MAX_DIM:
+        ypad = jnp.pad(y.reshape(-1).astype(jnp.float32), (0, d - n))
+        return _K.fused_rotate_encode_call(ypad, u, s, seed, pack=pack,
+                                           interpret=itp)
+    r = R.rotate(y, seed)
+    out, norm = encode_fused(r, s, u, pack=pack, interpret=itp)
+    return out.reshape(-1)[:(d // 2 if pack else d)], norm
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from . import backends as B
+from . import elias as E
 from . import rotation as R
 from . import wire as W
 
@@ -94,6 +95,31 @@ class Codec:
         lvl, norm = self.encode(y, u)
         return self.decode(lvl, norm, dtype=y.dtype)
 
+    # -- the one-pass encode pipeline -----------------------------------
+    def encode_payload(self, y: jax.Array, u: jax.Array):
+        """Encode straight to the *wire payload* of ``self.wire`` in one
+        pass: -> (payload, norm, nbits).
+
+          wire "int4"  — packed nibble bytes (fused Pallas kernel on the
+                         pallas backend; single-jit-fusable jnp otherwise);
+          wire "elias" — Elias-omega coded ``uint32`` words (payload is
+                         backend-independent: levels are bit-identical
+                         across backends and the coder is shared), nbits =
+                         the realized stream length (traced);
+          otherwise    — the levels themselves in their wire container.
+
+        ``nbits`` is the payload's realized size on the wire (container
+        bits; excludes the 32-bit norm words).  ``decode_payload`` is the
+        exact inverse back to the dequantized tensor.
+        """
+        raise NotImplementedError
+
+    def decode_payload(self, payload: jax.Array, norm: jax.Array, n: int,
+                       dtype=jnp.float32):
+        """Inverse of :meth:`encode_payload`: payload -> dequantized tensor
+        of ``n`` flat coordinates."""
+        raise NotImplementedError
+
 
 @dataclasses.dataclass(frozen=True)
 class IdentityCodec(Codec):
@@ -117,6 +143,12 @@ class IdentityCodec(Codec):
 
     def quantize_dequantize(self, y, key):
         return y
+
+    def encode_payload(self, y, u):
+        return y, jnp.float32(1.0), 32 * y.size
+
+    def decode_payload(self, payload, norm, n, dtype=jnp.float32):
+        return payload.reshape(-1)[:n].astype(dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,6 +220,40 @@ class QSGDCodec(Codec):
                                          gamma, self.interpret)
         upd = gamma * self.decode(levels, norm)
         return (x.astype(jnp.float32) + upd).astype(x.dtype)
+
+    # -- the one-pass encode pipeline ------------------------------------
+    def encode_payload(self, y: jax.Array, u: jax.Array):
+        if self.wire == "int4":
+            if self.backend == "pallas":
+                packed, norm = B.encode_fused(y, self.s_levels, u, pack=True,
+                                              interpret=self.interpret)
+            elif self.bucket is not None:
+                lvl, norm = B.encode_bucketed(y, self.s_levels, u,
+                                              self.bucket)
+                packed = W.pack_int4(lvl.astype(jnp.int8))[:(y.size + 1) // 2]
+            else:
+                packed, norm = B.encode_fused_jnp(y, self.s_levels, u,
+                                                  pack=True)
+            return packed, norm, 8 * packed.size
+        lvl, norm = self.encode(y, u)
+        if self.wire == "elias":
+            words, nbits = E.encode_levels(lvl.astype(jnp.int8))
+            return words, norm, nbits
+        return lvl, norm, int(W.level_bits(self.s_levels, self.wire)
+                              * lvl.size)
+
+    def decode_payload(self, payload: jax.Array, norm: jax.Array, n: int,
+                       dtype=jnp.float32):
+        if self.wire == "int4":
+            lvl = W.unpack_int4(payload, n)
+        elif self.wire == "elias":
+            lvl = E.decode_levels(payload, n)
+        else:
+            lvl = payload.reshape(-1)[:n]
+        if self.bucket is not None and norm.ndim == 1:
+            return B.decode_bucketed(lvl, norm, self.s_levels, dtype,
+                                     self.bucket)
+        return B.decode_jnp(lvl, norm, self.s_levels, dtype)
 
     # -- cost-layer views ------------------------------------------------
     def wire_bits(self, dim: int) -> float:
@@ -262,6 +328,39 @@ class RotatedQSGDCodec(QSGDCodec):
         lvl, norm = self.encode(y, u)
         out = self.decode(lvl, norm)
         return out[:y.size].reshape(y.shape).astype(y.dtype)
+
+    # -- the one-pass encode pipeline ------------------------------------
+    def encode_payload(self, y: jax.Array, u: jax.Array):
+        """Same contract as the base, on the *rotated padded* message: the
+        fused rotate+encode kernel folds the Hadamard preconditioner into
+        the quantize pass, so the rotation costs no extra memory sweep."""
+        if self.wire == "int4":
+            if self.backend == "pallas":
+                packed, norm = B.encode_rotated_fused(
+                    y, self.s_levels, u, self.seed, pack=True,
+                    interpret=self.interpret)
+            else:
+                packed, norm = B.encode_fused_jnp(
+                    R.rotate(y, self.seed), self.s_levels, u, pack=True)
+            return packed, norm, 8 * packed.size
+        lvl, norm = self.encode(y, u)
+        if self.wire == "elias":
+            words, nbits = E.encode_levels(lvl.astype(jnp.int8))
+            return words, norm, nbits
+        return lvl, norm, int(W.level_bits(self.s_levels, self.wire)
+                              * lvl.size)
+
+    def decode_payload(self, payload: jax.Array, norm: jax.Array, n: int,
+                       dtype=jnp.float32):
+        """``n`` is the rotated message length (``padded_dim`` of the
+        original); returns the unrotated padded vector like :meth:`decode`."""
+        if self.wire == "int4":
+            lvl = W.unpack_int4(payload, n)
+        elif self.wire == "elias":
+            lvl = E.decode_levels(payload, n)
+        else:
+            lvl = payload.reshape(-1)[:n]
+        return self.decode(lvl, norm, dtype)
 
     # -- cost-layer views ------------------------------------------------
     def wire_bits(self, dim: int) -> float:

@@ -1,0 +1,326 @@
+"""Elias-omega entropy coding for QSGD levels — the "elias" wire format.
+
+QSGD's communication theorem (arXiv 1610.02132, Thm 3.2) prices messages
+with a *universal* integer code over the levels, not a fixed-width
+container: the expected message length is O(s(s + sqrt(d)) log(..)) bits,
+far below 32d for sparse low-s messages — the bound GenQSGD
+(arXiv 2110.12987) and GQFedWAvg (arXiv 2306.07497) both assume for
+their convergence-vs-cost trade-offs.  The bound is only reachable with
+*positional* (gap) coding — most levels are zero, and spending even one
+bit per zero coordinate already costs d bits — so this module implements
+QSGD's actual scheme end to end:
+
+  stream := [ omega(gap) omega(|level|) sign ]*  omega(terminal-gap)
+
+one triple per **nonzero** level, where ``gap`` is the distance to the
+previous nonzero coordinate (>= 1) and the terminal gap points one past
+the end of the vector, which makes the stream self-delimiting given d.
+Everything is Elias-omega coded; zeros cost no codewords of their own.
+
+Pricing (used by ``wire.wire_bits(..., wire="elias")``):
+  * :func:`expected_code_bits` — Thm 3.2's closed-form expected payload;
+  * :func:`omega_max_bits` — worst-case bits per coordinate (unit gap +
+    largest magnitude codeword + sign), monotone in s;
+  * :func:`payload_bits` — min of the two total bounds.  The realized
+    stream provably fits the worst-case bound; the expected bound holds
+    in expectation (tests pin both).
+
+Bit layout: the stream is a little-endian bit sequence — transmitted bit
+``j`` of a codeword lands at stream bit ``offset + j`` (omega groups
+MSB-first within the codeword), stream bit ``b`` lives in
+``words[b >> 5]`` at bit ``b & 31``.  The payload is a plain jnp
+``uint32`` vector, so it is identical no matter which codec *backend*
+(jnp or Pallas) produced the levels: the backends are level-bit-identical
+and the coder below is shared — asserted in ``tests/unit/test_elias.py``.
+All arithmetic is pure uint32 (x64 is off by default, so uint64 would
+silently downcast).
+
+The encoder is fully vectorized (cummax gaps + cumsum offsets + three
+scatter-adds); the decoder is a ``lax.scan`` over nonzero slots with an
+unrolled omega-group walk per codeword — fine for the reference
+transport and tests; a lane-parallel Pallas decode is future work
+(variable-length codes do not block-decompose).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+__all__ = [
+    "MAX_COORD_BITS", "MAX_RUNTIME_S", "omega_length", "omega_max_bits",
+    "expected_code_bits", "payload_bits", "encode_levels", "decode_levels",
+    "stream_bits", "word_capacity",
+]
+
+#: worst-case stream bits one coordinate can cost at the runtime cap
+#: (unit gap = 1 bit, |level| <= 127 -> <= 13-bit magnitude, sign = 1)
+MAX_COORD_BITS = 15
+#: the runtime coder reads levels from an int8 container, like every other
+#: level transport (pricing via :func:`payload_bits` is unbounded in s)
+MAX_RUNTIME_S = 127
+#: any terminal-gap codeword for vectors below 2^24 coordinates fits this
+_TERM_BITS = 36
+
+
+# ---------------------------------------------------------------------------
+# pricing (pure python; the jnp coder below realizes these bounds)
+# ---------------------------------------------------------------------------
+def _omega_bits(n: int):
+    """Elias-omega codeword of n >= 1, in transmission order."""
+    if n < 1:
+        raise ValueError(f"omega codes positive integers, got {n}")
+    bits = [0]
+    while n > 1:
+        group = [int(c) for c in bin(n)[2:]]
+        bits = group + bits
+        n = len(group) - 1
+    return bits
+
+
+def omega_length(n: int) -> int:
+    """Codeword length (bits) of the Elias-omega code of n >= 1."""
+    return len(_omega_bits(n))
+
+
+@functools.lru_cache(maxsize=None)
+def omega_max_bits(s: int) -> int:
+    """Worst-case stream bits one coordinate costs at quantizer s: a unit
+    gap (1 bit) + the largest magnitude codeword over |level| in [1, s]
+    (omega length is not monotone — powers of two jump — so take the max)
+    + the sign bit.  Monotone in s, like every fixed-length wire's
+    bits/coordinate."""
+    if s <= 0:
+        raise ValueError(f"quantization parameter s must be positive, got {s}")
+    return 2 + max(omega_length(m) for m in range(1, s + 1))
+
+
+def expected_code_bits(s: int, d: int) -> float:
+    """QSGD Thm 3.2's closed-form expected payload (bits, excluding the norm
+    word): at most s(s + sqrt(d)) nonzero levels travel, each costing
+    O(log(d / #nonzeros)) positional+magnitude bits under a universal code:
+
+        s(s + sqrt(d)) * (3 + 1.5 * log2(2(s^2 + d) / (s(s + sqrt(d)))))
+    """
+    if s <= 0:
+        raise ValueError(f"quantization parameter s must be positive, got {s}")
+    nz = s * (s + math.sqrt(d))
+    return nz * (3.0 + 1.5 * math.log2(2.0 * (s * s + d) / nz))
+
+
+def payload_bits(s: int, d: int) -> float:
+    """min(worst-case, expected-sparse) total level bits for d coordinates —
+    both are valid message-size bounds, so the cost model prices the tighter
+    one (dense high-s messages take d * omega_max_bits; sparse low-s
+    messages the Thm-3.2 term)."""
+    return min(float(d) * omega_max_bits(s) + _TERM_BITS,
+               expected_code_bits(s, d))
+
+
+def word_capacity(d: int) -> int:
+    """Static uint32 word count that always holds d coded levels (the
+    realized stream fits ``MAX_COORD_BITS * d + _TERM_BITS``; +2 words of
+    slack so the 3-word scatter / 2-word gather never run off the end)."""
+    return (MAX_COORD_BITS * d + _TERM_BITS + 31) // 32 + 2
+
+
+# ---------------------------------------------------------------------------
+# vectorized bit plumbing (everything uint32)
+# ---------------------------------------------------------------------------
+def _bitlen(v):
+    """Bit length of uint32 v >= 1 (branch-free)."""
+    import jax.numpy as jnp
+    ln = jnp.zeros_like(v)
+    x = v
+    for k in (16, 8, 4, 2, 1):
+        t = x >> jnp.uint32(k)
+        big = t > 0
+        ln = ln + jnp.where(big, jnp.uint32(k), jnp.uint32(0))
+        x = jnp.where(big, t, x)
+    return ln + jnp.uint32(1)
+
+
+def _rev32(x):
+    """Bit-reversal of uint32 (group value <-> MSB-first transmission)."""
+    import jax.numpy as jnp
+    u = jnp.uint32
+    x = ((x & u(0x55555555)) << u(1)) | ((x >> u(1)) & u(0x55555555))
+    x = ((x & u(0x33333333)) << u(2)) | ((x >> u(2)) & u(0x33333333))
+    x = ((x & u(0x0F0F0F0F)) << u(4)) | ((x >> u(4)) & u(0x0F0F0F0F))
+    x = ((x & u(0x00FF00FF)) << u(8)) | ((x >> u(8)) & u(0x00FF00FF))
+    return (x << u(16)) | (x >> u(16))
+
+
+def _or_at(lo, hi, off, g):
+    """OR a <=25-bit group ``g`` into the 64-bit register (lo, hi) at bit
+    ``off`` (total register use stays < 64 bits by construction)."""
+    import jax.numpy as jnp
+    u = jnp.uint32
+    sh = off & u(31)
+    spill = jnp.where(sh > 0, g >> ((u(32) - sh) & u(31)), u(0))
+    in_lo = off < u(32)
+    lo = lo | jnp.where(in_lo, g << sh, u(0))
+    hi = hi | jnp.where(in_lo, spill, g << sh)
+    return lo, hi
+
+
+def _omega_parts(v):
+    """Vectorized Elias-omega codeword of uint32 v in [1, 2^25):
+    -> (lo, hi, nbits) with transmitted bit j at register bit j."""
+    import jax.numpy as jnp
+    u = jnp.uint32
+    v = v.astype(jnp.uint32)
+    chain = [v]
+    for _ in range(4):  # values < 2^25 terminate in <= 4 length steps
+        p = chain[-1]
+        chain.append(jnp.where(p > 1, _bitlen(p) - u(1), u(1)))
+    lo = jnp.zeros_like(v)
+    hi = jnp.zeros_like(v)
+    off = jnp.zeros_like(v)
+    for grp_val in reversed(chain):  # outermost length group transmits first
+        valid = grp_val > u(1)
+        ln = jnp.where(valid, _bitlen(grp_val), u(0))
+        grp = jnp.where(valid,
+                        _rev32(grp_val) >> ((u(32) - ln) & u(31)), u(0))
+        lo, hi = _or_at(lo, hi, off, grp)
+        off = off + ln
+    return lo, hi, off + u(1)  # terminal zero bit (value 0: no data change)
+
+
+def _gaps(flat):
+    """-> (nz mask, per-coordinate gap to the previous nonzero, terminal
+    gap) for int32 levels; gaps are uint32 >= 1."""
+    import jax
+    import jax.numpy as jnp
+    d = flat.shape[0]
+    nz = flat != 0
+    pos = jnp.arange(d, dtype=jnp.int32)
+    tagged = jnp.where(nz, pos, -1)
+    run = jax.lax.associative_scan(jnp.maximum, tagged)
+    prev = jnp.concatenate([jnp.full((1,), -1, jnp.int32), run[:-1]])
+    gap = (pos - prev).astype(jnp.uint32)
+    tgap = (jnp.int32(d) - run[-1]).astype(jnp.uint32)
+    return nz, gap, tgap
+
+
+# ---------------------------------------------------------------------------
+# the runtime coder
+# ---------------------------------------------------------------------------
+def encode_levels(levels) -> Tuple["object", "object"]:
+    """levels (any shape, int in [-127, 127]) -> (words, nbits).
+
+    ``words`` is a ``uint32`` vector of the *static* capacity
+    :func:`word_capacity` (jit-friendly); ``nbits`` the realized stream
+    length in bits (traced int32 scalar) — the payload on the wire is the
+    first ceil(nbits/32) words.  Fully vectorized: per-nonzero codewords
+    assembled in 64-bit registers, cumsum offsets, three scatter-adds.
+    """
+    import jax.numpy as jnp
+    u = jnp.uint32
+    flat = levels.reshape(-1).astype(jnp.int32)
+    d = flat.shape[0]
+    if d >= (1 << 24):
+        raise ValueError(f"elias runtime coder handles < 2^24 coords, "
+                         f"got {d}")
+    if d == 0:
+        # just the terminal gap omega(1) = a single 0 bit
+        return jnp.zeros(word_capacity(0), jnp.uint32), jnp.int32(1)
+    nz, gap, tgap = _gaps(flat)
+    glo, ghi, gn = _omega_parts(gap)
+    mlo, _, mn = _omega_parts(jnp.maximum(jnp.abs(flat), 1).astype(u))
+    lo, hi = _or_at(glo, ghi, gn, mlo)   # magnitude <= 127: <= 13 bits
+    nb = gn + mn
+    lo, hi = _or_at(lo, hi, nb, (flat < 0).astype(u))
+    nb = nb + u(1)
+    lo = jnp.where(nz, lo, u(0))
+    hi = jnp.where(nz, hi, u(0))
+    nb = jnp.where(nz, nb, u(0))
+    ends = jnp.cumsum(nb)
+    tlo, thi, tn = _omega_parts(tgap[None])
+    lo = jnp.concatenate([lo, tlo])
+    hi = jnp.concatenate([hi, thi])
+    offs = jnp.concatenate([ends - nb, ends[-1:]])
+    total = ends[-1] + tn[0]
+    # each 64-bit register spans at most three 32-bit words; pure u32
+    widx = (offs >> u(5)).astype(jnp.int32)
+    sh = offs & u(31)
+    carry = (u(32) - sh) & u(31)
+    w0 = lo << sh
+    w1 = jnp.where(sh > 0, lo >> carry, u(0)) | (hi << sh)
+    w2 = jnp.where(sh > 0, hi >> carry, u(0))
+    words = jnp.zeros(word_capacity(d), jnp.uint32)
+    words = words.at[widx].add(w0).at[widx + 1].add(w1).at[widx + 2].add(w2)
+    return words, total.astype(jnp.int32)
+
+
+def decode_levels(words, d: int):
+    """Inverse of :func:`encode_levels`: -> int8 levels of length ``d``
+    (sequential prefix-code walk; ``d`` must be static)."""
+    import jax
+    import jax.numpy as jnp
+    u = jnp.uint32
+    if d == 0:
+        return jnp.zeros(0, jnp.int8)
+    wpad = jnp.concatenate([words.astype(jnp.uint32), jnp.zeros(2, u)])
+
+    def window(p):
+        """32 stream bits at bit position p, little-endian."""
+        wi = (p >> u(5)).astype(jnp.int32)
+        b = p & u(31)
+        hi = jnp.where(b > 0, wpad[wi + 1] << ((u(32) - b) & u(31)), u(0))
+        return (wpad[wi] >> b) | hi
+
+    def omega_decode(p):
+        n = u(1)
+        done = jnp.bool_(False)
+        for _ in range(6):  # covers values < 2^25 (4 groups + stop + slack)
+            win = window(p)
+            stop = jnp.logical_and(~done, (win & u(1)) == 0)
+            go = jnp.logical_and(~done, (win & u(1)) == 1)
+            ln = jnp.minimum(n + u(1), u(25))
+            grp = win & ((u(1) << ln) - u(1))
+            val = _rev32(grp) >> ((u(32) - ln) & u(31))
+            p = jnp.where(stop, p + u(1), jnp.where(go, p + ln, p))
+            n = jnp.where(go, val, n)
+            done = jnp.logical_or(done, stop)
+        return n, p
+
+    def step(carry, _):
+        # carry stays scalar-only: emitting (index, value) pairs as scan
+        # outputs instead of scattering into a d-sized carry keeps the
+        # per-step state tiny (an in-carry scatter degrades to a full
+        # buffer copy per step under the SPMD partitioner — O(d^2)).
+        p, pos, done = carry
+        g, p1 = omega_decode(p)
+        npos = pos + g.astype(jnp.int32)
+        fin = npos >= d
+        m, p2 = omega_decode(p1)     # junk when fin/done: gated below
+        neg = (window(p2) & u(1)) == 1
+        val = jnp.where(neg, -m.astype(jnp.int32), m.astype(jnp.int32))
+        live = jnp.logical_and(~done, ~fin)
+        p = jnp.where(done, p, jnp.where(fin, p1, p2 + u(1)))
+        pos = jnp.where(live, npos, pos)
+        done = jnp.logical_or(done, fin)
+        return (p, pos, done), (jnp.where(live, npos, jnp.int32(d)),
+                                jnp.where(live, val, jnp.int32(0)))
+
+    carry = (u(0), jnp.int32(-1), jnp.bool_(False))
+    _, (idxs, vals) = jax.lax.scan(step, carry, None, length=d)
+    out = jnp.zeros(d + 1, jnp.int32).at[idxs].set(vals)  # slot d: dead 0s
+    return out[:d].astype(jnp.int8)
+
+
+def stream_bits(levels):
+    """Realized stream length (bits, traced int32) without materializing
+    the words — the runtime's per-round payload metric."""
+    import jax.numpy as jnp
+    flat = levels.reshape(-1).astype(jnp.int32)
+    if flat.shape[0] == 0:
+        return jnp.int32(1)
+    nz, gap, tgap = _gaps(flat)
+    _, _, gn = _omega_parts(gap)
+    _, _, mn = _omega_parts(jnp.maximum(jnp.abs(flat), 1)
+                            .astype(jnp.uint32))
+    nb = jnp.where(nz, gn + mn + jnp.uint32(1), jnp.uint32(0))
+    _, _, tn = _omega_parts(tgap[None])
+    return (jnp.sum(nb) + tn[0]).astype(jnp.int32)

@@ -20,6 +20,16 @@ Formats:
   "int8"   — raw int8 levels + f32 norms; s <= 127.
   "int4"   — two levels packed per byte + f32 norms; s <= 7 (the paper's
              low-s regime), 2x fewer aggregation bytes than int8.
+  "elias"  — Elias-omega gap-coded levels + f32 norms
+             (:mod:`repro.compress.elias`): one omega(gap) + omega(|level|)
+             + sign triple per *nonzero* level, so the message costs
+             min(d * omega_max_bits(s) + term, QSGD-Thm-3.2 expected bits)
+             — the paper's tighter M_s bound.  Unbounded s for *pricing*
+             (worst-case cost grows with log s, e.g. 24 bits/coordinate at
+             s = 2^14); the *runtime* coder reads levels from an int8
+             container, so the fed transport carries s <= 127 (validated
+             by FedConfig, not here).  An exact (s = None) message rides
+             raw f32, like every non-packing wire.
 """
 from __future__ import annotations
 
@@ -29,19 +39,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from . import elias as E
+
 __all__ = [
     "WIRE_FORMATS", "RUNTIME_WIRES", "wire_max_s", "level_bits",
     "wire_bits", "pack_int4", "unpack_int4",
 ]
 
 #: every format the bit model prices
-WIRE_FORMATS = ("packed", "f32", "int8", "int4", "rs_ag")
+WIRE_FORMATS = ("packed", "f32", "int8", "int4", "rs_ag", "elias")
 #: the subset the fed runtime accepts as aggregation transports
-RUNTIME_WIRES = ("f32", "int8", "int4", "rs_ag")
+RUNTIME_WIRES = ("f32", "int8", "int4", "rs_ag", "elias")
 
 #: largest s each format can carry (None = unbounded)
 _WIRE_MAX_S = {"packed": None, "f32": 127, "rs_ag": 127,
-               "int8": 127, "int4": 7}
+               "int8": 127, "int4": 7, "elias": None}
 
 
 def wire_max_s(wire: str) -> Optional[int]:
@@ -57,7 +69,10 @@ def wire_max_s(wire: str) -> Optional[int]:
 
 
 def level_bits(s: Optional[int], wire: str) -> float:
-    """Bits one coordinate occupies on the wire."""
+    """Bits one coordinate occupies on the wire.  For the variable-length
+    "elias" format this is the *worst-case* per-coordinate cost (unit gap
+    + largest magnitude codeword + sign); :func:`wire_bits` prices the
+    tighter min(worst-case, expected) total."""
     if s is None or wire in ("f32", "rs_ag"):
         return 32.0
     if wire == "packed":
@@ -66,6 +81,8 @@ def level_bits(s: Optional[int], wire: str) -> float:
         return 8.0
     if wire == "int4":
         return 4.0
+    if wire == "elias":
+        return float(E.omega_max_bits(s))
     raise ValueError(f"unknown wire format {wire!r}")
 
 
@@ -93,6 +110,16 @@ def wire_bits(s: Optional[int], dim: int, wire: str = "packed",
     if wire in ("f32", "rs_ag"):
         return 32.0 * dim        # values on the wire; norm already folded in
     n_buckets = 1 if bucket is None else -(-dim // bucket)
+    if wire == "elias":
+        # gap-coded levels: min(worst-case, QSGD-Thm-3.2 expected) — with
+        # bucketing the expectation applies per bucket (each bucket is
+        # normalized by its own norm), the stream itself stays one run
+        if bucket is None:
+            lvl_bits = E.payload_bits(s, dim)
+        else:
+            lvl_bits = min(float(dim) * E.omega_max_bits(s) + E._TERM_BITS,
+                           n_buckets * E.expected_code_bits(s, bucket))
+        return 32.0 * n_buckets + lvl_bits
     return 32.0 * n_buckets + dim * level_bits(s, wire)
 
 

@@ -51,7 +51,9 @@ class EdgeSystem:
     # Assumption 1 holds per bucket exactly as per tensor).  None = whole-dim.
     q_dim: Optional[int] = None
     # wire format priced by M_s ("packed" = fixed-length code, arbitrary s;
-    # "f32"/"int8"/"int4"/"rs_ag" = the runtime's aggregation transports).
+    # "f32"/"int8"/"int4"/"rs_ag"/"elias" = the runtime's aggregation
+    # transports — "elias" prices the paper's tighter Elias-coded bound,
+    # min(worst-case, QSGD-Thm-3.2 expected), unbounded in s).
     wire: str = "packed"
     # codec preconditioner kind priced by M_s / q_s: "qsgd" (the paper's
     # quantizer) or "rotated" (randomized-Hadamard preconditioning —

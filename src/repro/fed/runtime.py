@@ -36,6 +36,15 @@ of :mod:`repro.compress`:
                    (each fl member owns 1/fl of the delta): ~2x fewer wire
                    bytes than a ring all-reduce of the same payload, exact
                    f32 math.
+    wire="elias" — QSGD levels Elias-omega gap-coded per worker
+                   (:mod:`repro.compress.elias`, the paper's tighter M_s
+                   bound).  Variable-length streams cannot ride SPMD
+                   collectives, so this is a *reference* transport like
+                   "f32": each worker's levels round-trip through the real
+                   coder outside the shard_map, the realized stream
+                   lengths land in ``metrics["elias_bits"]``, and the
+                   aggregation math stays bit-identical to "f32" (the
+                   coder is lossless on levels).
 
   The cost layer (:class:`repro.core.cost.EdgeSystem`) prices ``M_s`` through
   the same ``codec.wire_bits`` table, so the (K, B, s) the optimizer picks
@@ -59,7 +68,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
-from ..compress import (RUNTIME_WIRES, decode_tensor, encode_tensor,
+from ..compress import (RUNTIME_WIRES, decode_tensor, elias, encode_tensor,
                         make_codec, pack_int4, unpack_int4, wire_max_s)
 from ..configs.base import ArchConfig
 from . import sharding as SH
@@ -130,8 +139,13 @@ class FedConfig:
         if self.bucket is not None and int(self.bucket) <= 0:
             raise ValueError(f"bucket must be positive, got {self.bucket}")
         cap = wire_max_s(self.wire)
+        if self.wire == "elias":
+            # pricing is unbounded in s (cap is None), but the runtime
+            # coder reads levels from an int8 container like every other
+            # level transport
+            cap = elias.MAX_RUNTIME_S
         for s in self.sn_tuple() + (self.s0,):
-            if s is not None and s > cap:
+            if s is not None and cap is not None and s > cap:
                 raise ValueError(
                     f"wire {self.wire!r} carries s <= {cap}, got {s}")
         sn = self.sn_tuple()
@@ -368,6 +382,36 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         return jax.tree.map(lambda d: combine_fl(d, u),
                             _decode_fl(levels_fl, norms_fl))
 
+    def _replicated(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P()))
+
+    def _elias_roundtrip(levels_fl):
+        """Reference elias transport: round-trip every worker's levels
+        through the omega gap coder (lossless, so aggregation stays
+        bit-identical to the f32 transport) and account the realized
+        stream bits.  Each worker's *whole flattened delta* is one stream
+        — exactly the d-dimensional message ``EdgeSystem.M_s`` prices, and
+        one sequential decode per worker instead of one per tensor.  Runs
+        on logical-global arrays outside shard_map — variable-length
+        streams cannot ride SPMD collectives.  The stream and decoded
+        levels are pinned fully replicated: left to itself the
+        partitioner shards the decode scan's d-length outputs, turning
+        every sequential step into cross-device traffic."""
+        leaves, treedef = jax.tree.flatten(levels_fl)
+        flat = _replicated(jnp.concatenate(
+            [l.reshape(fed.n_workers, -1) for l in leaves],
+            axis=1).astype(jnp.int8))
+        words, nb = jax.vmap(elias.encode_levels)(flat)
+        dec = _replicated(jax.vmap(
+            lambda w: elias.decode_levels(w, flat.shape[1]))(
+                _replicated(words)))
+        out, off = [], 0
+        for l in leaves:
+            n = l.size // fed.n_workers
+            out.append(dec[:, off:off + n].reshape(l.shape).astype(l.dtype))
+            off += n
+        return jax.tree.unflatten(treedef, out), jnp.sum(nb)
+
     def _agg_rs_ag_local(levels_loc, norms_loc):
         """Runs inside shard_map: dequantize locally (whole-tensor norms
         only — see :func:`_decode_fl` for why bucketed decode can't run on
@@ -484,7 +528,13 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         levels_fl, norms_fl = jax.vmap(worker_quantize)(deltas, wkeys,
                                                         s_dummy)
 
+        elias_bits = None
         if fed.wire == "f32":
+            delta_hat = agg_f32(levels_fl, norms_fl, u)
+        elif fed.wire == "elias":
+            # exact workers (s=None) ride raw f32, exactly as priced
+            if not fed.sn_exact:
+                levels_fl, elias_bits = _elias_roundtrip(levels_fl)
             delta_hat = agg_f32(levels_fl, norms_fl, u)
         elif bucket is None:
             body = {"int8": _agg_int8_local, "int4": _agg_int4_local,
@@ -507,10 +557,28 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
         # (3): server quantization of the averaged update, applied everywhere
         leaves, treedef = jax.tree.flatten(delta_hat)
         new_leaves = []
-        for i, (leaf, xh) in enumerate(zip(leaves, jax.tree.leaves(x_hat))):
+        lvls, nrms = [], []
+        for i, leaf in enumerate(leaves):
             u = uniform_like(leaf, _seed_from(skey, 1000 + i))
             lvl, nrm = encode_tensor(leaf, fed.s0, u, bucket=bucket)
-            dq = decode_tensor(lvl, nrm, fed.s0, bucket=bucket)
+            lvls.append(lvl)
+            nrms.append(nrm)
+        if fed.wire == "elias" and fed.s0 is not None:
+            # the server multicast rides the same coder: one stream over
+            # the whole flattened update (lossless on levels)
+            flat = _replicated(jnp.concatenate(
+                [l.reshape(-1) for l in lvls]).astype(jnp.int8))
+            words, nb = elias.encode_levels(flat)
+            dec = _replicated(elias.decode_levels(_replicated(words),
+                                                  flat.size))
+            off = 0
+            for i, l in enumerate(lvls):
+                lvls[i] = (dec[off:off + l.size].reshape(l.shape)
+                           .astype(l.dtype))
+                off += l.size
+            elias_bits = (nb if elias_bits is None else elias_bits + nb)
+        for leaf_l, leaf_n, xh in zip(lvls, nrms, jax.tree.leaves(x_hat)):
+            dq = decode_tensor(leaf_l, leaf_n, fed.s0, bucket=bucket)
             new_leaves.append((xh.astype(jnp.float32)
                                + gamma * dq).astype(xh.dtype))
         x_new = jax.tree.unflatten(treedef, new_leaves)
@@ -518,6 +586,8 @@ def make_round_fn(api, cfg: ArchConfig, fed: FedConfig, mesh: Mesh,
                    "delta_norm": jnp.sqrt(sum(
                        jnp.sum(jnp.square(l.astype(jnp.float32)))
                        for l in leaves))}
+        if elias_bits is not None:
+            metrics["elias_bits"] = elias_bits
         return x_new, metrics
 
     return genqsgd_round

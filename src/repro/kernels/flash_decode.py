@@ -64,11 +64,16 @@ def _flash_decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
 
 
 def flash_decode_call(q: jax.Array, k: jax.Array, v: jax.Array,
-                      valid: jax.Array, *, interpret: bool = True):
+                      valid: jax.Array, *, interpret=None):
     """q: (B, KV, G, dh); k/v: (B, C, KV, dh); valid: (B, C) in {0,1}.
 
     Returns (B, KV, G, dh).  C must be a multiple of BLOCK_C.
+    ``interpret=None`` auto-selects the interpreter only when no
+    Pallas-capable backend is present (see :func:`qsgd.default_interpret`).
     """
+    from .qsgd import default_interpret
+    if interpret is None:
+        interpret = default_interpret()
     B, KV, G, dh = q.shape
     C = k.shape[1]
     assert C % BLOCK_C == 0, (C, BLOCK_C)

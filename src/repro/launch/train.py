@@ -32,7 +32,7 @@ def main():
     # literal list (== compress.RUNTIME_WIRES): importing repro here would
     # pull in jax before XLA_FLAGS is set below; FedConfig re-validates
     ap.add_argument("--wire", default="f32",
-                    choices=["f32", "int8", "int4", "rs_ag"])
+                    choices=["f32", "int8", "int4", "rs_ag", "elias"])
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--devices", type=int, default=None,
                     help="host-platform device count (default fl*fsdp*tp)")

@@ -22,7 +22,8 @@ import re
 from typing import Dict, Optional
 
 __all__ = ["HW", "TPU_V5E", "cost_summary", "collective_bytes",
-           "roofline_terms", "extrapolate"]
+           "roofline_terms", "extrapolate", "encode_bytes",
+           "achieved_bandwidth", "host_peak_bandwidth"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +106,67 @@ def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
     total = max(compute, memory, collective)
     terms["bound_s"] = total
     return terms
+
+
+_PAYLOAD_BYTES = {"int4": 0.5, "int8": 1.0}
+
+
+def encode_bytes(n: int, wire: str = "int4",
+                 pipeline: str = "fused") -> Dict:
+    """Bytes moved through HBM by one QSGD tensor encode of ``n`` f32
+    coordinates, attributed per pass — the roofline model the kernel CI
+    gates on (``benchmarks/kernel_bench.py``).
+
+    ``pipeline="multipass"`` is the staged reference pipeline (what the
+    codec ran before the fused kernel): a sumsq pass (read y), a quantize
+    pass (read y + noise, materialize f32 levels — the reference
+    backend's contract), and a pack pass (re-read the levels, write the
+    wire container).  ``pipeline="fused"`` is the one-pass kernel
+    (``repro.kernels.qsgd.fused_encode_call``): a norm grid phase (read
+    y) and a quantize+pack phase (read y + noise, write the container
+    straight from VMEM) — the f32 level round-trip disappears.
+
+    In the memory-bound regime time ~ bytes / HBM_bw, so the model
+    throughput ratio multipass/fused (~1.6x for both int wires) is the
+    speedup floor the bench asserts.
+    """
+    if wire not in _PAYLOAD_BYTES:
+        raise ValueError(f"encode_bytes models the packed level wires "
+                         f"{sorted(_PAYLOAD_BYTES)}, got {wire!r}")
+    out_b = _PAYLOAD_BYTES[wire] * n
+    if pipeline == "multipass":
+        passes = {"sumsq": {"read": 4.0 * n, "write": 0.0},
+                  "quantize": {"read": 8.0 * n, "write": 4.0 * n},
+                  "pack": {"read": 4.0 * n, "write": out_b}}
+    elif pipeline == "fused":
+        passes = {"norm_phase": {"read": 4.0 * n, "write": 0.0},
+                  "quantize_pack_phase": {"read": 8.0 * n, "write": out_b}}
+    else:
+        raise ValueError(f"unknown pipeline {pipeline!r}")
+    total = sum(p["read"] + p["write"] for p in passes.values())
+    return {"passes": passes, "total_bytes": total}
+
+
+def achieved_bandwidth(nbytes: float, seconds: float) -> float:
+    """bytes/s actually sustained moving ``nbytes`` in ``seconds``."""
+    return nbytes / max(seconds, 1e-12)
+
+
+def host_peak_bandwidth(mib: int = 256, reps: int = 5) -> float:
+    """Measured peak memory bandwidth of *this* host (bytes/s): the best
+    of ``reps`` large numpy copies — the denominator for achieved-vs-peak
+    on CPU runs, where ``HW.hbm_bw`` describes a TPU we are not on."""
+    import time
+
+    import numpy as np
+    src = np.ones(mib * (1 << 20) // 8, np.float64)
+    dst = np.empty_like(src)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.copyto(dst, src)
+        best = min(best, time.perf_counter() - t0)
+    return 2.0 * src.nbytes / best  # read + write
 
 
 def extrapolate(cost1: Dict, cost2: Dict, reps: float) -> Dict:

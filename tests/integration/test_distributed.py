@@ -93,6 +93,65 @@ def test_distributed_round_8dev():
     assert "DISTRIBUTED_OK" in r.stdout, r.stdout + r.stderr
 
 
+_ELIAS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.compat import make_mesh
+    from repro.models.registry import get_config, model_api
+    from repro.fed.runtime import FedConfig, make_round_fn
+    from repro.fed import sharding as SH
+    from repro.compress import elias as E
+
+    devs = np.array(jax.devices()).reshape(2, 2, 2)
+    mesh = make_mesh(devs, ("fl", "fsdp", "tp"))
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    api = model_api(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(key, cfg)
+    FL, K, B, S = 2, 2, 4, 32
+    batch = {"tokens": jax.random.randint(key, (FL, K, B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (FL, K, B, S), 0, cfg.vocab)}
+    outs = {}
+    for wire in ("f32", "elias"):
+        fed = FedConfig(n_workers=FL, Kn=(1, 2), s0=7, sn=(5, 7), wire=wire)
+        rnd = make_round_fn(api, cfg, fed, mesh)
+        pshard = SH.shardings(SH.param_specs(params, mesh), mesh)
+        bshard = SH.shardings(SH.batch_specs(batch, mesh, "fl_train"), mesh)
+        pp = jax.device_put(params, pshard)
+        bb = jax.device_put(batch, bshard)
+        f = jax.jit(rnd, in_shardings=(pshard, bshard, None, None),
+                    out_shardings=(pshard, None))
+        x_new, m = f(pp, bb, jax.random.PRNGKey(1), jnp.float32(0.05))
+        flat = np.concatenate([np.asarray(l).reshape(-1)
+                               for l in jax.tree.leaves(x_new)])
+        outs[wire] = (flat, {k: np.asarray(v) for k, v in m.items()})
+
+    # the gap coder is lossless on levels, so the elias transport's
+    # aggregation is BIT-identical to the f32 wire's
+    assert np.array_equal(outs["f32"][0], outs["elias"][0])
+    assert "elias_bits" not in outs["f32"][1]
+    bits = int(outs["elias"][1]["elias_bits"])
+    dim = outs["f32"][0].size
+    # 2 worker uploads + 1 server multicast, each bounded by the
+    # worst-case pricing arm at its quantizer (omega_max_bits(7) covers
+    # both s=5 and s=7 by monotonicity)
+    worst = 3 * (dim * E.omega_max_bits(7) + E._TERM_BITS)
+    assert 0 < bits < worst, (bits, worst)
+    print("ELIAS_OK")
+""")
+
+
+@pytest.mark.slow
+def test_distributed_elias_wire_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+    r = subprocess.run([sys.executable, "-c", _ELIAS_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "ELIAS_OK" in r.stdout, r.stdout + r.stderr
+
+
 _DRYRUN_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"

@@ -1,0 +1,216 @@
+"""The "elias" wire: gap-coded Elias-omega streams over QSGD levels.
+
+Covers the coder (round-trip including empty/odd/boundary inputs,
+hypothesis property tests), cross-backend payload bit-exactness (jnp and
+Pallas levels produce the same stream), the pricing contract (realized
+stream <= both wire_bits arms; omega_max_bits monotone), FedConfig
+validation, EdgeSystem/FedConfig pricing agreement, and the acceptance
+bar: GIA optimizes a Scenario priced on the elias wire end-to-end with
+the reference run's comm-bits matching the Plan's prediction exactly.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests.compat import given, settings, st
+
+from repro import compress as C
+from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants,
+                       QuadraticTask, Scenario)
+from repro.compress import elias as E
+from repro.fed.runtime import FedConfig
+from repro.train.trainer import round_comm_bits
+
+CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=10)
+
+
+def _omega_ref(n):
+    """Independent python Elias-omega reference (transmission order)."""
+    bits = [0]
+    while n > 1:
+        group = [int(c) for c in bin(n)[2:]]
+        bits = group + bits
+        n = len(group) - 1
+    return bits
+
+
+def _stream_ref(levels):
+    """Independent python reference of the gap-coded stream."""
+    bits = []
+    prev = -1
+    for i, v in enumerate(levels):
+        if v == 0:
+            continue
+        bits += _omega_ref(i - prev)
+        bits += _omega_ref(abs(int(v)))
+        bits.append(1 if v < 0 else 0)
+        prev = i
+    bits += _omega_ref(len(levels) - prev)
+    return bits
+
+
+def _words_ref(bits, cap):
+    w = np.zeros(cap, np.uint32)
+    for j, b in enumerate(bits):
+        if b:
+            w[j >> 5] |= np.uint32(1) << np.uint32(j & 31)
+    return w
+
+
+def _levels(d, pattern, rng):
+    lv = np.zeros(d, np.int8)
+    if d == 0:
+        return lv
+    if pattern == "dense":
+        lv = rng.integers(-127, 128, d).astype(np.int8)
+    elif pattern == "sparse":
+        idx = rng.choice(d, max(1, d // 40), replace=False)
+        lv[idx] = (rng.integers(1, 8, idx.size)
+                   * rng.choice([-1, 1], idx.size)).astype(np.int8)
+    elif pattern == "ends":
+        lv[0], lv[-1] = 7, -7
+    elif pattern == "boundary":
+        lv[: min(d, 4)] = [127, -127, 1, -1][: min(d, 4)]
+    return lv
+
+
+# ---------------------------------------------------------------------------
+# coder round-trip + reference bit-exactness
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("d", [0, 1, 2, 7, 63, 64, 4097])
+@pytest.mark.parametrize("pattern",
+                         ["zeros", "dense", "sparse", "ends", "boundary"])
+def test_roundtrip_and_reference_bits(d, pattern):
+    rng = np.random.default_rng(d * 31 + hash(pattern) % 997)
+    lv = _levels(d, pattern, rng)
+    words, nbits = jax.jit(E.encode_levels)(jnp.asarray(lv))
+    back = jax.jit(lambda w: E.decode_levels(w, d))(words)
+    assert np.array_equal(np.asarray(back), lv)
+    ref_bits = _stream_ref(lv)
+    assert int(nbits) == len(ref_bits)
+    assert int(nbits) == int(E.stream_bits(jnp.asarray(lv)))
+    assert np.array_equal(np.asarray(words),
+                          _words_ref(ref_bits, E.word_capacity(d)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(min_value=-127, max_value=127), max_size=257))
+def test_roundtrip_property(levels):
+    lv = np.asarray(levels, np.int8)
+    words, nbits = E.encode_levels(jnp.asarray(lv))
+    back = E.decode_levels(words, lv.size)
+    assert np.array_equal(np.asarray(back), lv)
+    assert int(nbits) == len(_stream_ref(lv))
+
+
+def test_vmap_jit_compose():
+    rng = np.random.default_rng(0)
+    lv = np.stack([_levels(300, "sparse", rng) for _ in range(3)])
+    words, nbits = jax.jit(jax.vmap(E.encode_levels))(jnp.asarray(lv))
+    back = jax.vmap(lambda w: E.decode_levels(w, 300))(words)
+    assert np.array_equal(np.asarray(back), lv)
+    assert nbits.shape == (3,)
+
+
+def test_payload_bit_exact_across_backends():
+    """jnp- and Pallas-quantized levels feed the shared coder: the wire
+    payload must be bit-identical word for word."""
+    key = jax.random.PRNGKey(5)
+    y = jax.random.normal(key, (40_000,))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (40_000,))
+    lvl_j, _ = C.backends.encode_jnp(y, 7, u)
+    lvl_p, _ = C.backends.encode_pallas(y, 7, u, interpret=True)
+    w_j, n_j = E.encode_levels(lvl_j.astype(jnp.int8))
+    w_p, n_p = E.encode_levels(lvl_p.astype(jnp.int8))
+    assert int(n_j) == int(n_p)
+    assert np.array_equal(np.asarray(w_j), np.asarray(w_p))
+
+
+# ---------------------------------------------------------------------------
+# pricing
+# ---------------------------------------------------------------------------
+def test_omega_lengths_known_values():
+    assert [E.omega_length(n) for n in (1, 2, 3, 4, 7, 8, 15, 16)] == \
+        [1, 3, 3, 6, 6, 7, 7, 11]
+
+
+def test_omega_max_bits_monotone():
+    vals = [E.omega_max_bits(s) for s in range(1, 200)]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert E.omega_max_bits(7) == 8     # unit gap + omega(<=7) + sign
+    assert E.omega_max_bits(127) == 15  # == MAX_COORD_BITS
+
+
+@pytest.mark.parametrize("d,s", [(257, 1), (16387, 5), (65536, 7)])
+def test_realized_bits_bounded_by_pricing(d, s):
+    """Realized stream <= the worst-case arm always, and (on these seeds)
+    <= the priced min(worst, expected) that wire_bits charges."""
+    key = jax.random.PRNGKey(d + s)
+    y = jax.random.normal(key, (d,))
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (d,))
+    lvl, _ = C.encode_tensor(y, s, u)
+    bits = int(E.stream_bits(lvl))
+    worst = d * E.omega_max_bits(s) + E._TERM_BITS
+    assert bits <= worst
+    assert bits <= E.payload_bits(s, d)
+    # and the pricing itself is the documented closed form
+    assert C.wire_bits(s, d, "elias") == 32.0 + E.payload_bits(s, d)
+
+
+def test_wire_caps_and_exact_fallthrough():
+    assert C.wire_max_s("elias") is None          # pricing unbounded in s
+    # sparse low-s messages price via Thm 3.2, far under any fixed width
+    assert C.wire_bits(5, 10**6, "elias") < 0.1 * C.wire_bits(
+        5, 10**6, "packed")
+    # dense high-s messages fall back to the worst-case omega arm
+    assert (C.wire_bits(2**14, 10**6, "elias")
+            == 32.0 + 24.0 * 10**6 + E._TERM_BITS)
+    assert C.wire_bits(None, 100, "elias") == 32.0 * 101  # exact rides f32
+
+
+# ---------------------------------------------------------------------------
+# FedConfig / EdgeSystem agreement
+# ---------------------------------------------------------------------------
+def test_fedconfig_elias_validation():
+    FedConfig(n_workers=2, Kn=(1, 1), s0=127, sn=64, wire="elias")
+    with pytest.raises(ValueError, match="127"):
+        FedConfig(n_workers=2, Kn=(1, 1), s0=128, sn=64, wire="elias")
+    with pytest.raises(ValueError, match="127"):
+        FedConfig(n_workers=2, Kn=(1, 1), s0=7, sn=200, wire="elias")
+    # exact (s=None) workers are allowed: they ride raw f32, as priced
+    FedConfig(n_workers=2, Kn=(1, 1), s0=None, sn=None, wire="elias")
+
+
+def test_round_comm_bits_matches_edge_system_elias():
+    dim = 100_000
+    fed = FedConfig(n_workers=4, Kn=(1,) * 4, s0=64, sn=16, wire="elias")
+    sys_ = EdgeSystem(F0=1.0, C0=1.0, p0=1.0, r0=1.0, s0=64, alpha0=1.0,
+                      Fn=np.ones(4), Cn=np.ones(4), pn=np.ones(4),
+                      rn=np.ones(4), sn=[16] * 4, alphan=np.ones(4),
+                      dim=dim, wire="elias")
+    assert np.allclose([c.wire_bits(dim) for c in fed.codecs()], sys_.M_sn)
+    assert fed.server_codec().wire_bits(dim) == sys_.M_s0
+    assert round_comm_bits(fed, dim) == float(np.sum(sys_.M_sn) + sys_.M_s0)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance bar: GIA end-to-end on a Scenario priced on elias
+# ---------------------------------------------------------------------------
+def test_gia_optimizes_elias_scenario_end_to_end():
+    task = QuadraticTask(dim=8)
+    sys_ = dataclasses.replace(EdgeSystem.paper_sec_vii(dim=task.dim),
+                               wire="elias")
+    scn = Scenario(system=sys_, consts=CONSTS, T_max=1e5, C_max=0.25)
+    plan = scn.optimize()
+    assert plan.feasible and plan.wire == "elias"
+    report = scn.run(plan, task=task)
+    assert report.rounds == plan.K0
+    # measured comm-bits == K0 * (sum_n M_sn + M_s0), priced on elias
+    assert report.comm_bits == plan.K0 * (float(np.sum(sys_.M_sn))
+                                          + sys_.M_s0)
+    assert report.comm_bits == report.predicted_comm_bits
+    assert report.comm_bits_match
+    assert report.final_metrics["err"] < 0.05
