@@ -40,12 +40,21 @@ same way (:mod:`repro.sampling`): ``Scenario(sampling=uniform())`` makes
 the per-round cohort size ``S`` a GP decision variable (``uniform(S=k)``
 pins it), the frozen Plan carries the cohort decision, and both runtimes
 draw seeded cohorts with unbiased Horvitz-Thompson reweighting.
+
+Fault models (``none`` | ``edge``) complete the robustness loop
+(:mod:`repro.faults`): ``Scenario(faults=edge_faults(...))`` makes the
+optimizer plan for per-worker availability and worst-case capability
+margins, the frozen Plan carries the fault contract (deadline, delivery
+probabilities), and both runtimes inject seeded faults — stragglers,
+multi-round crashes, corrupted payloads — aggregating the survivors of
+each round's deadline with unbiased HT reweighting.
 """
 from ..core.convergence import MLProblemConstants
 from ..core.cost import EdgeSystem
 from ..core.step_rules import (ConstantRule, DiminishingRule, ExponentialRule,
                                StepRule, make_rule)
 from ..families import AlgorithmFamily, GQFedWAvgFamily, get_family
+from ..faults import FaultModel, FaultTrace, edge_faults
 from ..opt.problems import Objective
 from ..sampling import SamplingModel, importance, uniform
 from .plan import Plan, RunReport
@@ -64,6 +73,7 @@ __all__ = [
     "STEP_RULES", "FAMILIES", "register_step_rule", "register_family",
     "family_names", "AlgorithmFamily", "GQFedWAvgFamily", "get_family",
     "SamplingModel", "uniform", "importance",
+    "FaultModel", "FaultTrace", "edge_faults",
     "MNISTTask", "QuadraticTask", "SpmdTask",
     "GenQSGDTrainer", "round_comm_bits", "PlanServer",
 ]

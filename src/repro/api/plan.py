@@ -60,6 +60,11 @@ class Plan:
     sampling: str = "full"               # participation-model key
     cohort_S: Optional[int] = None       # per-round cohort size (None = full)
     sampling_p: Optional[Tuple[float, ...]] = None  # base probs (None = unif)
+    # fault injection (repro.faults), frozen into the Plan so both runtimes
+    # draw the faults — and divide by the delivery probabilities — the
+    # optimizer planned for.  A FaultSpec (model + per-worker nominal round
+    # times + deadline tau + delivery probabilities); None = fault-free.
+    faults: Optional[object] = None
     # predictions at (K0, Kn, B) — NaN for manual plans
     predicted_E: float = float("nan")    # energy (J), eq. (18)
     predicted_T: float = float("nan")    # time (s), eq. (17)
@@ -105,6 +110,17 @@ class Plan:
                         f"inclusion probability S*max(p)={S * max(p):.4g} "
                         f"exceeds 1")
                 object.__setattr__(self, "sampling_p", p)
+        if self.faults is not None:
+            from ..faults import FaultSpec
+            if not isinstance(self.faults, FaultSpec):
+                raise TypeError(
+                    f"Plan.faults must be a repro.faults.FaultSpec (built by "
+                    f"Scenario from the fault model + the plan's round "
+                    f"times), got {type(self.faults)}")
+            if self.faults.N != self.N:
+                raise ValueError(
+                    f"FaultSpec describes {self.faults.N} workers, plan "
+                    f"has {self.N}")
 
     # ------------------------------------------------------------------
     @classmethod
@@ -113,7 +129,7 @@ class Plan:
                q_dim: Optional[int] = None, wire: str = "packed",
                family: str = "genqsgd", codec_kind: str = "qsgd",
                agg_weights=None, momentum: float = 0.0,
-               normalize: bool = False) -> "Plan":
+               normalize: bool = False, faults=None) -> "Plan":
         """A Plan not produced by the optimizer (predictions are NaN)."""
         Kn = tuple(int(k) for k in Kn)
         if isinstance(sn, (int, type(None))):
@@ -127,7 +143,7 @@ class Plan:
                    s0=s0, sn=tuple(sn), dim=int(dim), q_dim=q_dim, wire=wire,
                    objective=obj, family=family, codec_kind=codec_kind,
                    agg_weights=agg_weights, momentum=momentum,
-                   normalize=normalize)
+                   normalize=normalize, faults=faults)
 
     @property
     def N(self) -> int:
@@ -227,7 +243,8 @@ class Plan:
                              normalize=self.normalize,
                              codec_kind=self.codec_kind,
                              sampling_S=self.cohort_S,
-                             sampling_p=self.sampling_p, seed=seed)
+                             sampling_p=self.sampling_p, seed=seed,
+                             faults=self.faults)
 
     def to_fed_config(self, wire: str = "f32", microbatch: int = 1,
                       aux_weight: float = 0.01,
@@ -270,13 +287,18 @@ class Plan:
                          agg_weights=self.agg_weights,
                          momentum=self.momentum, normalize=self.normalize,
                          sampling_S=self.cohort_S,
-                         sampling_p=self.sampling_p, seed=seed)
+                         sampling_p=self.sampling_p, seed=seed,
+                         faults=self.faults)
 
     def describe(self) -> str:
         sn = set(self.sn)
         sn_txt = str(next(iter(sn))) if len(sn) == 1 else str(list(self.sn))
         samp = ("" if self.cohort_S is None
                 else f" S={self.cohort_S}/{self.N} ({self.sampling})")
+        if self.faults is not None:
+            dl = self.faults.deadline
+            samp += (f" faults={self.faults.model.key}"
+                     f"(tau={'inf' if dl == float('inf') else f'{dl:.3g}s'})")
         return (f"Plan[{self.family}/{self.objective.value}]{samp} "
                 f"K0={self.K0} Kn={list(self.Kn)} B={self.B} "
                 f"gamma={self.gamma:.4g} s0={self.s0} sn={sn_txt} | "
@@ -308,6 +330,8 @@ class RunReport:
     history: tuple = ()
     round_bits_trace: tuple = ()     # per-round realized wire bits (sampled
                                      # runs only; empty = uniform K0 rounds)
+    fault_trace: Optional[object] = None  # repro.faults.FaultTrace (faulted
+                                          # runs only; None = fault-free)
 
     @property
     def predicted_comm_bits(self) -> float:
@@ -336,6 +360,14 @@ class RunReport:
             f"  time:      modeled {self.measured_T:.4g} s vs predicted "
             f"{p.predicted_T:.4g} s",
         ]
+        ft = self.fault_trace
+        if ft is not None and len(ft):
+            pred_round = p.predicted_T / p.K0
+            lines.append(
+                f"  faults:    {ft.rounds_degraded}/{len(ft)} rounds "
+                f"degraded, {ft.workers_dropped} worker-rounds dropped, "
+                f"realized {ft.mean_round_time:.4g} s/round vs predicted "
+                f"{pred_round:.4g} s/round")
         if self.final_metrics:
             kv = " ".join(f"{k}={v:.4g}" if isinstance(v, float)
                           else f"{k}={v}" for k, v in

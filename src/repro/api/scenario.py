@@ -54,10 +54,12 @@ class Scenario:
     step: Optional[StepRule] = None       # None -> jointly optimized (m=J)
     samples_per_worker: float = 6000.0    # I_n (FedAvg's epoch tie)
     sampling: object = "full"             # repro.sampling key or model
+    faults: object = "none"               # repro.faults key or model
 
     def __post_init__(self):
         resolve(self.family)              # unknown names fail here, loudly
         self.sampling_obj.validate(self.system.N)
+        self.faults_obj.validate(self.system.N)
         if self.consts.N != self.system.N:
             raise ValueError(
                 f"consts describe N={self.consts.N} workers but the system "
@@ -76,6 +78,12 @@ class Scenario:
         return resolve_sampling(self.sampling)
 
     @property
+    def faults_obj(self):
+        """The resolved :class:`~repro.faults.FaultModel`."""
+        from ..faults import resolve as resolve_faults
+        return resolve_faults(self.faults)
+
+    @property
     def family_key(self) -> str:
         return self.family_obj.key
 
@@ -86,12 +94,25 @@ class Scenario:
         the same bytes through the same quantizer.  A rotated family on a
         bucketed system drops ``q_dim``: rotation isotropizes the whole
         message, so per-bucket norms are redundant (and the codec rejects
-        the combination)."""
+        the combination).  A non-neutral fault model additionally stamps
+        its availability / worst-case margins, so the GP plans for the
+        fleet the runtime will actually face — neutral fault models leave
+        the system object untouched (bitwise)."""
         fam = self.family_obj
-        if fam.codec_kind == self.system.codec_kind:
-            return self.system
-        q_dim = None if fam.codec_kind == "rotated" else self.system.q_dim
-        return dataclasses.replace(self.system, codec_kind=fam.codec_kind,
+        sys = self.system
+        fm = self.faults_obj
+        if not fm.is_neutral(sys.N):
+            an = fm.availability(sys.N) if sys.an is None else sys.an
+            fmg = max(float(sys.freq_margin), float(fm.freq_margin))
+            rmg = max(float(sys.rate_margin), float(fm.rate_margin))
+            if an is not None or fmg != sys.freq_margin \
+                    or rmg != sys.rate_margin:
+                sys = dataclasses.replace(sys, an=an, freq_margin=fmg,
+                                          rate_margin=rmg)
+        if fam.codec_kind == sys.codec_kind:
+            return sys
+        q_dim = None if fam.codec_kind == "rotated" else sys.q_dim
+        return dataclasses.replace(sys, codec_kind=fam.codec_kind,
                                    q_dim=q_dim)
 
     # ------------------------------------------------------------------
@@ -132,7 +153,8 @@ class Scenario:
         return ParamOptProblem(sys=self._priced_system, consts=self.consts,
                                T_max=self.T_max, C_max=self.C_max, m=m,
                                gamma=gamma, rho=rho, vmap=vmap, family=fam,
-                               sampling=self.sampling_obj)
+                               sampling=self.sampling_obj,
+                               faults=self.faults_obj)
 
     # ------------------------------------------------------------------
     def _plan_from_result(self, m: Objective, r) -> Plan:
@@ -149,6 +171,7 @@ class Scenario:
         else:
             cohort_S = samp.pinned_S(sys.N)   # None for full / neutral
         sampling_p = samp.plan_p(sys.N) if cohort_S is not None else None
+        fault_spec = self._fault_spec(tuple(int(k) for k in r.Kn), int(r.B))
         return Plan(K0=int(r.K0), Kn=tuple(int(k) for k in r.Kn), B=int(r.B),
                     step_rule=step, s0=sys.s0, sn=tuple(sys.sn), dim=sys.dim,
                     q_dim=sys.q_dim, wire=sys.wire, objective=m,
@@ -157,9 +180,31 @@ class Scenario:
                     momentum=fam.momentum, normalize=fam.normalize,
                     sampling=samp.key if cohort_S is not None else "full",
                     cohort_S=cohort_S, sampling_p=sampling_p,
+                    faults=fault_spec,
                     predicted_E=r.E, predicted_T=r.T,
                     predicted_C=r.C, feasible=bool(r.feasible),
                     converged=bool(r.converged))
+
+    def _fault_spec(self, Kn, B):
+        """The frozen per-plan fault contract (None when the fault model
+        has no runtime behavior): nominal per-worker round times from the
+        cost model, deadline ``tau = slack x predicted round time``, and
+        the exact delivery probabilities the HT reweighting divides by."""
+        fm = self.faults_obj
+        sys = self._priced_system
+        if not fm.runtime_active(sys.N):
+            return None
+        from ..faults import FaultSpec
+        Kn = np.asarray(Kn, np.float64)
+        # worker n's nominal time in one round: compute + its own upload
+        wt = B * sys.comp_time_coeff * Kn + sys.M_sn / sys.rn
+        # the Plan's predicted round time (eq. 17's per-round bracket)
+        round_t = B * float(np.max(sys.comp_time_coeff * Kn)) + sys.comm_time
+        deadline = float(fm.deadline_slack) * round_t
+        dp = fm.deliver_prob(wt, deadline)
+        return FaultSpec(model=fm, worker_times=tuple(float(t) for t in wt),
+                         deadline=deadline,
+                         deliver_p=tuple(float(p) for p in dp))
 
     def optimize(self, m=None, z0=None, tol: float = 1e-4,
                  max_iter: int = 60, verbose: bool = False,
@@ -226,7 +271,8 @@ class Scenario:
 
     def _report(self, plan: Plan, backend: str, rounds: int, model_dim: int,
                 wall: float, final_metrics: dict, history,
-                wire: Optional[str] = None, cohort_trace=None) -> RunReport:
+                wire: Optional[str] = None, cohort_trace=None,
+                fault_trace=None) -> RunReport:
         # wire=None prices at the Plan's wire (the reference backend has no
         # transport); the spmd path passes the transport it actually used.
         # Cost-model measurements evaluate on the *priced* system — the one
@@ -257,7 +303,7 @@ class Scenario:
             measured_T=time_cost(sys, rounds, np.asarray(plan.Kn),
                                  plan.B),
             final_metrics=dict(final_metrics), history=tuple(history),
-            round_bits_trace=trace)
+            round_bits_trace=trace, fault_trace=fault_trace)
 
     def _run_reference(self, plan, task, seed, max_rounds, eval_every):
         import jax
@@ -278,7 +324,8 @@ class Scenario:
         final = task.metrics(pf) if hasattr(task, "metrics") else {}
         return self._report(plan, "reference", cfg.K0, model_dim, wall,
                             final, hist,
-                            cohort_trace=getattr(alg, "cohort_trace", None))
+                            cohort_trace=getattr(alg, "cohort_trace", None),
+                            fault_trace=getattr(alg, "fault_trace", None))
 
     def _run_spmd(self, plan, task, seed, max_rounds, wire, log_every):
         import jax
@@ -306,4 +353,6 @@ class Scenario:
         return self._report(plan, "spmd", rounds, model_dim, wall, final,
                             state.history, wire=wire,
                             cohort_trace=getattr(trainer, "cohort_trace",
-                                                 None))
+                                                 None),
+                            fault_trace=getattr(trainer, "fault_trace",
+                                                None))

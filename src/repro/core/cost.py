@@ -61,6 +61,17 @@ class EdgeSystem:
     # Scenario derives this from the algorithm family so the optimizer
     # provably prices the codec the runtime runs.
     codec_kind: str = "qsgd"
+    # per-worker availability a_n in (0, 1]: the probability an attempted
+    # update is usable (crash / corruption survival).  Inflates the
+    # convergence variance blocks exactly like client sampling with
+    # pi_n -> a_n pi_n.  None = the historical always-available arithmetic.
+    # Scenario stamps this from the fault model (repro.faults).
+    an: Optional[np.ndarray] = None
+    # worst-case uncertainty margins: the time constraint prices
+    # F_n (1 - freq_margin) and r_n (1 - rate_margin) — worst case over
+    # the capability box (still posynomial: T is monotone in F_n, r_n).
+    freq_margin: float = 0.0
+    rate_margin: float = 0.0
 
     def __post_init__(self):
         for name in ("Fn", "Cn", "pn", "rn", "alphan"):
@@ -68,6 +79,12 @@ class EdgeSystem:
         n = self.Fn.shape[0]
         assert all(getattr(self, k).shape == (n,) for k in ("Cn", "pn", "rn", "alphan"))
         assert len(self.sn) == n
+        if self.an is not None:
+            object.__setattr__(self, "an", np.asarray(self.an, np.float64))
+            assert self.an.shape == (n,)
+            assert np.all((self.an > 0.0) & (self.an <= 1.0)), self.an
+        assert 0.0 <= self.freq_margin < 1.0, self.freq_margin
+        assert 0.0 <= self.rate_margin < 1.0, self.rate_margin
 
     @property
     def N(self) -> int:
@@ -118,6 +135,25 @@ class EdgeSystem:
                      + self.C0 / self.F0)
 
     @functools.cached_property
+    def comp_time_coeff_wc(self) -> np.ndarray:
+        """Worst-case ``C_n / (F_n (1 - freq_margin))``.  At zero margin
+        this IS ``comp_time_coeff`` (same object — zero-margin problems
+        stay bitwise identical to the historical arithmetic)."""
+        if self.freq_margin == 0.0:
+            return self.comp_time_coeff
+        return self.Cn / (self.Fn * (1.0 - self.freq_margin))
+
+    @functools.cached_property
+    def comm_time_wc(self) -> float:
+        """Worst-case ``comm_time`` with worker uplink rates derated by
+        ``rate_margin`` (server multicast/compute terms stay nominal —
+        the uncertainty box covers worker capabilities)."""
+        if self.rate_margin == 0.0:
+            return self.comm_time
+        return float(np.max(self.M_sn / (self.rn * (1.0 - self.rate_margin)))
+                     + self.M_s0 / self.r0 + self.C0 / self.F0)
+
+    @functools.cached_property
     def comp_energy_coeff(self) -> np.ndarray:
         """alpha_n C_n F_n^2 — per-sample-per-local-iteration compute energy."""
         return self.alphan * self.Cn * self.Fn**2
@@ -153,7 +189,8 @@ class EdgeSystem:
             Fn=np.tile(self.Fn, reps)[:N], Cn=np.tile(self.Cn, reps)[:N],
             pn=np.tile(self.pn, reps)[:N], rn=np.tile(self.rn, reps)[:N],
             sn=(list(self.sn) * reps)[:N],
-            alphan=np.tile(self.alphan, reps)[:N])
+            alphan=np.tile(self.alphan, reps)[:N],
+            an=None if self.an is None else np.tile(self.an, reps)[:N])
 
     # --- canonical instantiations ---------------------------------------
     @staticmethod
@@ -207,10 +244,17 @@ class EdgeSystem:
             dim=dim, q_dim=4096)
 
 
-def time_cost(sys: EdgeSystem, K0, Kn, B):
-    """T(K, B) — eq. (17).  Broadcasts over an ndarray ``K0``."""
+def time_cost(sys: EdgeSystem, K0, Kn, B, worst_case: bool = False):
+    """T(K, B) — eq. (17).  Broadcasts over an ndarray ``K0``.
+
+    ``worst_case=True`` prices the derated worker capabilities
+    ``F_n (1 - freq_margin)`` / ``r_n (1 - rate_margin)`` — identical to
+    the nominal arithmetic when the system carries zero margins.
+    """
     Kn = np.asarray(Kn, dtype=np.float64)
-    out = K0 * (B * np.max(sys.comp_time_coeff * Kn) + sys.comm_time)
+    ct = sys.comp_time_coeff_wc if worst_case else sys.comp_time_coeff
+    tau = sys.comm_time_wc if worst_case else sys.comm_time
+    out = K0 * (B * np.max(ct * Kn) + tau)
     return out if np.ndim(K0) else float(out)
 
 

@@ -79,7 +79,9 @@ class GenQSGDConfig:
     codec_kind: str = "qsgd"     # repro.compress.make_codec kind
     sampling_S: Optional[int] = None  # per-round cohort size (None = full)
     sampling_p: Optional[Tuple[float, ...]] = None  # base probs (None = unif)
-    seed: Optional[int] = None   # cohort-draw rng seed (None = OS entropy)
+    seed: Optional[int] = None   # cohort/fault rng seed (None = OS entropy)
+    faults: Optional[object] = None  # repro.faults.FaultSpec (None = no
+                                     # faults — the historical path, bitwise)
 
     def __post_init__(self):
         from ..families import check_agg_weights, check_momentum  # cycle
@@ -103,6 +105,14 @@ class GenQSGDConfig:
                         f"inclusion probability S*max(p)={S * max(p):.4g} "
                         f"exceeds 1")
                 object.__setattr__(self, "sampling_p", p)
+        if self.faults is not None:
+            from ..faults import FaultSpec  # cycle
+            if not isinstance(self.faults, FaultSpec):
+                raise TypeError(f"faults must be a repro.faults.FaultSpec, "
+                                f"got {type(self.faults)}")
+            if self.faults.N != self.N:
+                raise ValueError(f"FaultSpec describes {self.faults.N} "
+                                 f"workers, config has {self.N}")
 
     @property
     def N(self) -> int:
@@ -256,23 +266,41 @@ class GenQSGD:
         Under client sampling (``cfg.sampling_S``) each round draws a
         seeded cohort (``cfg.seed``) and aggregates it with unbiased
         Horvitz-Thompson weights; ``self.cohort_trace`` records the drawn
-        cohort indices per round.  Unsampled configs take the historical
-        path verbatim.
+        cohort indices per round.  Under fault injection (``cfg.faults``)
+        each round additionally draws seeded faults from a *separate* rng
+        stream (so the cohort sequence is unchanged by the fault model),
+        excludes crashed / timed-out / corrupted workers, and divides the
+        survivors' weights by their delivery probabilities — deadline-HT
+        aggregation; ``self.fault_trace`` is the per-round
+        :class:`~repro.faults.FaultTrace`.  Unsampled, unfaulted configs
+        take the historical path verbatim.
         """
         cfg = self.cfg
         gammas = cfg.step_rule.sequence(cfg.K0)
         x = x0
         history = []
         self.cohort_trace = []
+        self.fault_trace = None
         rng = (np.random.default_rng(cfg.seed)
                if cfg.sampling_S is not None else None)
+        fdrv = None
+        if cfg.faults is not None:
+            from ..faults import FaultDriver, fault_rng  # cycle
+            fdrv = FaultDriver(cfg.faults, cfg.N, cfg.agg_weights)
+            frng = fault_rng(cfg.seed)
         for k0 in range(cfg.K0):
             key, rkey = jax.random.split(key)
+            idx = pi = u = None
             if rng is not None:
-                from ..sampling.base import draw_cohort_weights  # cycle
-                idx, u = draw_cohort_weights(rng, cfg.N, cfg.sampling_S,
-                                             cfg.sampling_p, cfg.agg_weights)
+                from ..sampling.base import cohort_weights, draw_cohort
+                idx, pi = draw_cohort(rng, cfg.N, cfg.sampling_S,
+                                      cfg.sampling_p)
                 self.cohort_trace.append(idx)
+            if fdrv is not None:
+                u = fdrv.step(frng, k0, idx, pi)
+            elif idx is not None:   # sampling only: the historical HT path
+                u = cohort_weights(idx, pi, cfg.N, cfg.agg_weights)
+            if u is not None:
                 x, m = self._round(x, data, rkey, jnp.float32(gammas[k0]),
                                    jnp.asarray(u, jnp.float32))
             else:
@@ -282,4 +310,6 @@ class GenQSGD:
                 e.update({k: float(v) for k, v in m.items()})
                 e["k0"] = k0
                 history.append(e)
+        if fdrv is not None:
+            self.fault_trace = fdrv.trace()
         return x, history

@@ -96,7 +96,9 @@ class FedConfig:
     sampling_S: object = None            # per-round cohort size (None = full)
     sampling_p: object = None            # per-worker base probabilities
                                          # (tuple, len fl; None = uniform)
-    seed: object = None                  # cohort-draw rng seed (trainer side)
+    seed: object = None                  # cohort/fault rng seed (trainer side)
+    faults: object = None                # repro.faults.FaultSpec (None = no
+                                         # faults — the historical path)
 
     def __post_init__(self):
         if self.wire not in RUNTIME_WIRES:
@@ -133,6 +135,24 @@ class FedConfig:
                         and self.wire in ("int8", "int4"))):
                 raise ValueError(
                     f"client sampling is not supported on wire="
+                    f"{self.wire!r}" + ("" if self.bucket is not None
+                                        else " without bucketing")
+                    + "; use wire='f32' or a bucketed int8/int4 wire")
+        if self.faults is not None:
+            from ..faults import FaultSpec  # cycle
+            if not isinstance(self.faults, FaultSpec):
+                raise TypeError(f"faults must be a repro.faults.FaultSpec, "
+                                f"got {type(self.faults)}")
+            if self.faults.N != self.n_workers:
+                raise ValueError(f"FaultSpec describes {self.faults.N} "
+                                 f"workers, config has {self.n_workers}")
+            # deadline-HT aggregation rides the same traced per-round u
+            # vector as client sampling, with the same wire restriction
+            if not (self.wire == "f32"
+                    or (self.bucket is not None
+                        and self.wire in ("int8", "int4"))):
+                raise ValueError(
+                    f"fault injection is not supported on wire="
                     f"{self.wire!r}" + ("" if self.bucket is not None
                                         else " without bucketing")
                     + "; use wire='f32' or a bucketed int8/int4 wire")

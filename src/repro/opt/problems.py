@@ -188,15 +188,19 @@ class ParamOptProblem:
     vmap: Optional[VarMap] = None
     family: object = "genqsgd"           # repro.families key or instance
     sampling: object = "full"            # repro.sampling key or instance
+    faults: object = "none"              # repro.faults key or instance
 
     def __post_init__(self):
         from ..families import resolve   # lazy: families imports this module
         from ..sampling import resolve as resolve_sampling   # ditto
+        from ..faults import resolve as resolve_faults       # ditto
         self.m = Objective.coerce(self.m)
         self.family = resolve(self.family)
         self.family.agg_eps(self.sys.N)  # N-mismatched weights fail loudly
         self.sampling = resolve_sampling(self.sampling)
         self.sampling.validate(self.sys.N)
+        self.faults = resolve_faults(self.faults)
+        self.faults.validate(self.sys.N)
         if self.vmap is None:
             self.vmap = identity_varmap(
                 self.sys.N,
@@ -220,20 +224,47 @@ class ParamOptProblem:
         """Effective aggregation weights eps_n = N w_n (None = uniform)."""
         return self.family.agg_eps(self.sys.N)
 
+    # -- fault hooks (repro.faults): availability as coefficients -----------
+    # Per-worker availability a_n composes with sampling exactly as
+    # pi_n -> a_n pi_n: the same ratio-form machinery carries the joint
+    # coefficient, so faulted problems batch and fuse unchanged.  a_n = None
+    # leaves every branch below on the historical code path, bitwise.
+    @functools.cached_property
+    def _an(self) -> Optional[np.ndarray]:
+        """Per-worker availability (None = always available, bitwise).
+        ``sys.an`` (stamped by Scenario or set directly) wins; otherwise
+        the fault model's stationary availability."""
+        if self.sys.an is not None:
+            return self.sys.an
+        return self.faults.availability(self.sys.N)
+
     @functools.cached_property
     def _c_eff(self):
         """Theorem-1 coefficients with the family's (c2, c3) scales *and*
-        the sampling model's c3 inflation folded in; scales of exactly 1.0
-        leave the floats bitwise untouched."""
+        the sampling/fault models' c3 inflation folded in; scales of
+        exactly 1.0 leave the floats bitwise untouched."""
         c1, c2, c3, c4 = self.consts.c
         c2s, c3s = self.family.c_scales(self.sys.N)
         if c2s != 1.0:
             c2 = c2 * c2s
         if c3s != 1.0:
             c3 = c3 * c3s
-        s3 = self.sampling.c3_scale(self.sys.N)
-        if s3 != 1.0:
-            c3 = c3 * s3
+        an = self._an
+        if an is None:
+            s3 = self.sampling.c3_scale(self.sys.N)
+            if s3 != 1.0:
+                c3 = c3 * s3
+        else:
+            # joint exact scale (1/N) sum 1/(a_n pi_n) — the sampling form
+            # with pi_n -> a_n pi_n (free-S: its S-independent part
+            # (1/N) sum 1/(a_n p_n); the caller multiplies by S^{-1})
+            N = self.sys.N
+            if self.sampling.free_S:
+                pe = an * self.sampling.base_p(N)
+            else:
+                pi = self.sampling.pi(N)
+                pe = an if pi is None else an * pi
+            c3 = c3 * float(np.sum(1.0 / pe) / N)
         return c1, c2, c3, c4
 
     # -- sampling hooks (repro.sampling): participation as coefficients ------
@@ -271,20 +302,33 @@ class ParamOptProblem:
         so the surrogate steers and the closed form validates — the same
         split the m=E Taylor constraints already follow.  The ``c3``
         variance-mean scale has no such slack: ``(1/N) sum 1/pi_n`` equals
-        the relaxed-part/``S`` exactly, for every builtin model."""
+        the relaxed-part/``S`` exactly, for every builtin model.
+
+        Under availability ``a_n`` (repro.faults) the effective inclusion
+        probability is ``a_n pi_n`` and the same exact forms apply with
+        that substitution."""
         c = self._c_eff
         qp = self.sys.q_pairs
+        an = self._an
         if self._i_S is not None:
             if S is None:
                 raise ValueError("free-S sampling problem: pass the cohort "
                                  "size S to evaluate the bound")
             Sf = float(S)
             c = (c[0], c[1], c[2] / Sf, c[3])
-            qp = self.sampling.q_coeffs_at(qp, self.sys.N, Sf)
-        else:
+            if an is None:
+                qp = self.sampling.q_coeffs_at(qp, self.sys.N, Sf)
+            else:
+                pe = an * self.sampling.pi_at(self.sys.N, Sf)
+                qp = (np.asarray(qp, np.float64) + 1.0 - pe) / pe
+        elif an is None:
             sq = self.sampling.q_coeffs(qp, self.sys.N)
             if sq is not None:
                 qp = sq
+        else:
+            pi = self.sampling.pi(self.sys.N)
+            pe = an if pi is None else an * pi
+            qp = (np.asarray(qp, np.float64) + 1.0 - pe) / pe
         return c, qp
 
     # -- shared pieces ------------------------------------------------------
@@ -315,12 +359,14 @@ class ParamOptProblem:
     def _common_constraints(self) -> List[Posy]:
         v, s = self.vmap, self.sys
         cons: List[Posy] = []
-        ct = s.comp_time_coeff
+        # worst-case-over-the-box capabilities (repro.faults margins);
+        # identical objects — bitwise — at zero margins
+        ct = s.comp_time_coeff_wc
         for i in range(s.N):                       # (22)
             cons.append(float(ct[i]) * v.Kn[i] / v.T1)
         for i in range(s.N):                       # (23)
             cons.append(v.Kn[i] / v.T2)
-        tau = s.comm_time                          # (24)
+        tau = s.comm_time_wc                       # (24)
         cons.append((tau / self.T_max) * v.K0
                     + (1.0 / self.T_max) * (v.K0 * v.B * v.T1))
         # box bounds on the actual variables
@@ -351,11 +397,23 @@ class ParamOptProblem:
         ``(q_n+1)/p_n * S^{-1}`` (returned here, divided by the S monomial)
         minus 1; the negative part (:meth:`_sum_Kn2_eps`) moves to the
         ratio denominator in :meth:`_conv_constraint`, so the GP encodes
-        the exact bound — no relaxation slack."""
+        the exact bound — no relaxation slack.  Availability composes as
+        ``pi_n -> a_n pi_n`` throughout (the numerator picks up a
+        ``1/a_n``; the ``-1`` part is availability-independent)."""
         qp = self.sys.q_pairs
-        sq = self.sampling.q_coeffs(qp, self.sys.N)
-        if sq is not None:
-            qp = sq
+        an = self._an
+        if an is None:
+            sq = self.sampling.q_coeffs(qp, self.sys.N)
+            if sq is not None:
+                qp = sq
+        elif self._i_S is not None:
+            # free S: exact numerator (q+1)/(a_n p_n); the caller's S^{-1}
+            # and the -1 denominator part complete the exact joint form
+            qp = self.sampling.q_coeffs(qp, self.sys.N) / an
+        else:
+            pi = self.sampling.pi(self.sys.N)
+            pe = an if pi is None else an * pi
+            qp = (np.asarray(qp, np.float64) + 1.0 - pe) / pe
         eps = self._agg_eps
         v = self.vmap
         out = None
@@ -650,7 +708,7 @@ class ParamOptProblem:
                 gam = (gam_arr[g] if self.m is Objective.JOINT
                        else self.gamma)
                 C[g] = conv.c_constant(ks, Kn[g], B[g], gam, c, qp, eps)
-            T[g] = time_cost(self.sys, ks, Kn[g], B[g])
+            T[g] = time_cost(self.sys, ks, Kn[g], B[g], worst_case=True)
             E[g] = energy_cost(self.sys, ks, Kn[g], B[g], pi=pi)
         return C, T, E
 
@@ -744,7 +802,7 @@ class ParamOptProblem:
         if self._i_S is not None:          # seed at the grid-best cohort size
             z[self._i_S] = np.log(float(S_sel))
         Kn = np.array([float(np.exp(k.logvalue(z))) for k in v.Kn])
-        ct = self.sys.comp_time_coeff
+        ct = self.sys.comp_time_coeff_wc
         if "T1" in names:  # keep (22)/(23) strictly slack at the start
             z[names.index("T1")] = float(np.log(np.max(ct * Kn) * 1.5))
         if "T2" in names:
@@ -775,7 +833,7 @@ class ParamOptProblem:
             C = conv.c_constant(K0, Kn, B, extra, c, qp, eps)
         return {
             "E": energy_cost(self.sys, K0, Kn, B, pi=self._pi_at(S)),
-            "T": time_cost(self.sys, K0, Kn, B),
+            "T": time_cost(self.sys, K0, Kn, B, worst_case=True),
             "C": C,
         }
 

@@ -49,11 +49,16 @@ def structure_signature(problem: ParamOptProblem) -> tuple:
     participation plan must never key a sampled scenario's cache pool);
     free-``S`` models also grow the varmap, so they differ in shape too.
     Neutral sampling (full participation, ``uniform(S=N)``) reports
-    ``("full",)`` and shares the default problems' pools.
+    ``("full",)`` and shares the default problems' pools.  The fault
+    element (repro.faults) follows the sampling pattern: coefficient-only
+    (availability / worst-case margins never change packed shapes), but a
+    faulted plan must never key an unfaulted scenario's cache pool;
+    neutral fault models report ``("none",)`` and share the default pools.
     """
     v = problem.vmap
     return (problem.m, v.n, tuple(v.names), problem.sys.N,
-            problem.family.key, problem.sampling.signature(problem.sys.N))
+            problem.family.key, problem.sampling.signature(problem.sys.N),
+            problem.faults.signature(problem.sys.N))
 
 
 @dataclasses.dataclass

@@ -29,6 +29,14 @@ Requests return :class:`PlanHandle`\\ s; ``handle.result()`` blocks until
 the frozen :class:`~repro.api.plan.Plan` is ready.  ``Scenario.optimize(
 server=...)`` routes through a server transparently.
 
+Failure isolation: a *poison* request (corrupt warm seed, pathological
+coefficients) that makes the fused solver raise no longer takes its
+micro-batch peers down — the dispatcher bisects the failing batch so every
+healthy row re-converges, quarantines the poison row for solo retries with
+capped exponential backoff, and only then errors its handle
+(``stats()["bisections"/"quarantined"/"poisoned"]``).  Queued requests can
+be withdrawn with ``PlanHandle.cancel()``.
+
     with PlanServer(max_batch=16, window_s=0.02) as srv:
         handles = [srv.submit(s) for s in scenarios]   # open-loop stream
         plans = [h.result() for h in handles]
@@ -155,7 +163,9 @@ class PlanHandle:
 
     ``source`` records how it was served: ``"hit"`` (exact fingerprint —
     cached solution, no solve), ``"warm"`` (solved, seeded from the nearest
-    cached neighbor), or ``"cold"`` (solved from ``z_init``).
+    cached neighbor), or ``"cold"`` (solved from ``z_init``).  After
+    resolution ``converged`` mirrors the GIA verdict (exact hits are
+    converged by construction — only converged results are cached).
     """
 
     def __init__(self, scenario, m, problem, sig, vec, fp):
@@ -170,6 +180,8 @@ class PlanHandle:
         self.source: Optional[str] = None
         self.warm_dist: Optional[float] = None
         self.batch_size: Optional[int] = None
+        self.converged: Optional[bool] = None
+        self.cancelled = False
         self.t_submit = time.perf_counter()
         self.t_done: Optional[float] = None
         self.z0: Optional[np.ndarray] = None
@@ -189,6 +201,22 @@ class PlanHandle:
             raise RuntimeError(self.error)
         return self.plan
 
+    def cancel(self) -> bool:
+        """Withdraw a still-pending request.
+
+        Returns True if the request was cancelled before solving began —
+        the dispatcher then drops it while popping its batch and never
+        spends solver time on it.  Returns False if the handle is already
+        resolved (best-effort: a row that was mid-solve keeps its plan).
+        A cancelled handle's ``result()`` raises ``RuntimeError``.
+        """
+        if self._event.is_set():
+            return False
+        self.cancelled = True
+        self.error = "cancelled"
+        self._resolve()
+        return True
+
     def _resolve(self):
         self.t_done = time.perf_counter()
         self._event.set()
@@ -206,8 +234,10 @@ class PlanServer:
     ``window_s`` (admission window: a batch launches when full or when its
     oldest request has waited this long), ``warm_radius`` (max relative
     fingerprint distance for warm-start seeding), ``cache_size`` (LRU
-    entries).  ``tol``/``max_iter`` are server-wide so every micro-batch of
-    a signature shares one compiled program.
+    entries), ``quarantine_retries``/``retry_base_s``/``retry_cap_s``
+    (solo-retry budget and backoff for quarantined poison rows).
+    ``tol``/``max_iter`` are server-wide so every micro-batch of a
+    signature shares one compiled program.
 
     m=J batches whose rows are *all* warm skip the Gen-C-seeded joint
     restart (``restart_warm_joint=True`` re-enables it): each warm seed is
@@ -219,7 +249,8 @@ class PlanServer:
                  backend: str = "jnp-fused", tol: float = 1e-4,
                  max_iter: int = 60, cache_size: int = 4096,
                  warm_radius: float = 0.05, restart_warm_joint: bool = False,
-                 start: bool = True):
+                 quarantine_retries: int = 2, retry_base_s: float = 0.05,
+                 retry_cap_s: float = 1.0, start: bool = True):
         self.max_batch = int(max_batch)
         self.window_s = float(window_s)
         self.backend = backend
@@ -227,6 +258,9 @@ class PlanServer:
         self.max_iter = int(max_iter)
         self.warm_radius = float(warm_radius)
         self.restart_warm_joint = bool(restart_warm_joint)
+        self.quarantine_retries = int(quarantine_retries)
+        self.retry_base_s = float(retry_base_s)
+        self.retry_cap_s = float(retry_cap_s)
         self.cache = PlanCache(maxsize=cache_size)
         self._cond = threading.Condition()
         self._queues: Dict[tuple, "collections.deque[PlanHandle]"] = {}
@@ -274,6 +308,7 @@ class PlanServer:
         hit = self.cache.get(sig, fp)
         if hit is not None:
             h.source = "hit"
+            h.converged = True          # only converged results are cached
             h.plan = scenario._plan_from_result(m, hit.result)
             with self._cond:
                 self._counts["hit"] += 1
@@ -319,7 +354,14 @@ class PlanServer:
         if ready_sig is None:
             return None
         q = self._queues[ready_sig]
-        return [q.popleft() for _ in range(min(len(q), self.max_batch))]
+        batch: List[PlanHandle] = []
+        while q and len(batch) < self.max_batch:
+            h = q.popleft()
+            if h.cancelled:             # withdrawn while queued: free slot
+                self._counts["cancelled"] += 1
+                continue
+            batch.append(h)
+        return batch or None
 
     def _next_deadline(self) -> Optional[float]:
         ts = [q[0].t_submit + self.window_s
@@ -341,33 +383,103 @@ class PlanServer:
             self._solve_batch(batch)
 
     def _solve_batch(self, batch: List[PlanHandle]):
-        problems = [h.problem for h in batch]
         sig = batch[0].sig
         if sig not in self._trace_base:
             from ..opt import gia_jax
-            key = RefreshPlan.build([problems[0]]).signature_key
+            key = RefreshPlan.build([batch[0].problem]).signature_key
             self._trace_base[sig] = (key, gia_jax.trace_count(key))
-        joint = problems[0].m is Objective.JOINT
-        all_warm = all(h.source == "warm" for h in batch)
+        self._batch_sizes.append(len(batch))
+        self._solve_rows(batch)
+
+    def _solve_rows(self, rows: List[PlanHandle]):
+        """Solve ``rows`` as one fused dispatch, bisecting on failure.
+
+        One poison row (corrupt warm seed, NaN coefficients, ...) must not
+        take its batch peers down with it: on a solver exception the rows
+        are split in half and retried, so every healthy row re-converges in
+        O(log n) re-dispatches while the poison row is isolated down to a
+        singleton and handed to :meth:`_solve_quarantined`.  Every
+        re-dispatch pads to the same ``max_batch`` device shape, so the
+        splitting never costs an extra compile.
+        """
+        joint = rows[0].problem.m is Objective.JOINT
+        all_warm = all(h.source == "warm" for h in rows)
         restart = not (joint and all_warm and not self.restart_warm_joint)
         pad = self.max_batch if self.backend == "jnp-fused" else 0
         try:
             results = solve_param_opt_batched(
-                problems, z0s=[h.z0 for h in batch], tol=self.tol,
-                max_iter=self.max_iter, backend=self.backend,
+                [h.problem for h in rows], z0s=[h.z0 for h in rows],
+                tol=self.tol, max_iter=self.max_iter, backend=self.backend,
                 joint_restart=restart, pad_to=pad)
-        except Exception as e:                      # noqa: BLE001
-            for h in batch:
-                h.error = f"{type(e).__name__}: {e}"
-                h._resolve()
+        except Exception:                           # noqa: BLE001
+            if len(rows) == 1:
+                self._solve_quarantined(rows[0])
+                return
+            with self._cond:
+                self._counts["bisections"] += 1
+            mid = len(rows) // 2
+            self._solve_rows(rows[:mid])
+            self._solve_rows(rows[mid:])
             return
-        self._batch_sizes.append(len(batch))
-        for h, r in zip(batch, results):
+        for h, r in zip(rows, results):
+            self._finish(h, r, len(rows))
+
+    def _solve_quarantined(self, h: PlanHandle):
+        """Last resort for an isolated failing row: retry it solo with
+        capped exponential backoff — transient failures (allocator
+        pressure under concurrent compiles, cache races) usually clear,
+        and the row keeps its own warm seed — then error the handle."""
+        with self._cond:
+            self._counts["quarantined"] += 1
+        joint = h.problem.m is Objective.JOINT
+        restart = not (joint and h.source == "warm"
+                       and not self.restart_warm_joint)
+        pad = self.max_batch if self.backend == "jnp-fused" else 0
+        delay, err = self.retry_base_s, None
+        for attempt in range(self.quarantine_retries + 1):
+            if attempt:
+                time.sleep(delay)
+                delay = min(delay * 2.0, self.retry_cap_s)
+            try:
+                r = solve_param_opt_batched(
+                    [h.problem], z0s=[h.z0], tol=self.tol,
+                    max_iter=self.max_iter, backend=self.backend,
+                    joint_restart=restart, pad_to=pad)[0]
+            except Exception as e:                  # noqa: BLE001
+                err = e
+                continue
+            self._finish(h, r, 1)
+            return
+        with self._cond:
+            self._counts["poisoned"] += 1
+        h.error = f"{type(err).__name__}: {err}"
+        h._resolve()
+
+    def _finish(self, h: PlanHandle, r: GIAResult, batch_size: int):
+        """Resolve one solved row: freeze its Plan, record convergence,
+        cache the converged result.  A row cancelled mid-solve is already
+        resolved with ``error="cancelled"`` — leave it alone."""
+        if h.cancelled:
+            return
+        try:
             h.plan = h.scenario._plan_from_result(h.m, r)
-            h.batch_size = len(batch)
-            if r.converged:
-                self.cache.put(sig, h.fp, _CacheEntry(h.vec, r))
+        except Exception as e:                      # noqa: BLE001
+            # a row whose *plan construction* blows up is as poisonous as
+            # one that kills the solver — contain it, don't unwind the
+            # dispatcher with sibling rows still unresolved
+            with self._cond:
+                self._counts["poisoned"] += 1
+            h.error = f"{type(e).__name__}: {e}"
             h._resolve()
+            return
+        h.batch_size = batch_size
+        h.converged = bool(r.converged)
+        if r.converged:
+            self.cache.put(h.sig, h.fp, _CacheEntry(h.vec, r))
+        else:
+            with self._cond:
+                self._counts["non_converged"] += 1
+        h._resolve()
 
     # -- introspection -------------------------------------------------
     def compile_counts(self) -> Dict[tuple, int]:
@@ -388,6 +500,11 @@ class PlanServer:
                          if self._counts["submitted"] else 0.0),
             "batches": len(sizes),
             "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
+            "cancelled": self._counts["cancelled"],
+            "bisections": self._counts["bisections"],
+            "quarantined": self._counts["quarantined"],
+            "poisoned": self._counts["poisoned"],
+            "non_converged": self._counts["non_converged"],
             "signatures": len(self._trace_base),
             "cache_entries": len(self.cache),
             "compiles": {"/".join(map(str, sig)): c

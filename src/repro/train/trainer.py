@@ -72,17 +72,36 @@ class GenQSGDTrainer:
         rng = (np.random.default_rng(fed.seed)
                if fed.sampling_S is not None else None)
         self.cohort_trace = []
+        self.fault_trace = None
+        fdrv = None
+        if fed.faults is not None:
+            # same driver + rng construction as the reference runtime, so a
+            # (seed, model) pair produces the bit-identical FaultTrace on
+            # either backend
+            from ..faults import FaultDriver, fault_rng  # cycle
+            fdrv = FaultDriver(fed.faults, fed.n_workers, fed.agg_weights)
+            frng = fault_rng(fed.seed)
         for r in range(state.round, state.round + n_rounds):
             key, rkey = jax.random.split(key)
             batch = next(batches)
             t0 = time.time()
+            idx = pi = u = None
             if rng is not None:
-                from ..sampling.base import draw_cohort_weights  # cycle
-                idx, u = draw_cohort_weights(rng, fed.n_workers,
-                                             fed.sampling_S, fed.sampling_p,
-                                             fed.agg_weights)
+                from ..sampling.base import cohort_weights, draw_cohort
+                idx, pi = draw_cohort(rng, fed.n_workers, fed.sampling_S,
+                                      fed.sampling_p)
                 self.cohort_trace.append(idx)
+            if fdrv is not None:
+                u = fdrv.step(frng, r, idx, pi)
+                # crashed workers never upload; timed-out/corrupt ones do
+                # (the server just discards them), so they still pay bits
+                rec = fdrv.last
+                uploaded = [i for i in rec.cohort if i not in rec.crashed]
+                comm_mbits = round_comm_bits(fed, dim, cohort=uploaded) / 1e6
+            elif idx is not None:   # sampling only: the historical HT path
+                u = cohort_weights(idx, pi, fed.n_workers, fed.agg_weights)
                 comm_mbits = round_comm_bits(fed, dim, cohort=idx) / 1e6
+            if u is not None:
                 state.params, metrics = self._round(
                     state.params, batch, rkey, jnp.float32(gammas[r]),
                     jnp.asarray(u, jnp.float32))
@@ -105,4 +124,6 @@ class GenQSGDTrainer:
                 CKPT.save(f"{self.ckpt_dir}/round_{r+1:06d}.ckpt",
                           state.params, {"round": r + 1})
             state.round = r + 1
+        if fdrv is not None:
+            self.fault_trace = fdrv.trace()
         return state

@@ -1,0 +1,94 @@
+"""Cross-backend fault determinism: a (seed, fault model) pair produces
+the bit-identical ``FaultTrace`` on the SPMD runtime and the reference
+runtime — the ISSUE-9 determinism bar.
+
+Both runtimes construct the same ``FaultDriver`` from the Plan's frozen
+``FaultSpec`` and the same salted ``fault_rng(seed)`` stream, so the
+per-round fault draws (straggler latencies, crash chain, corruption) are
+a pure function of (seed, model) — independent of backend, mesh shape,
+and model architecture (subprocess: the host device count is locked at
+first jax init)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants,
+                           Plan, QuadraticTask, Scenario, SpmdTask,
+                           edge_faults)
+    from repro.compat import make_mesh
+    from repro.faults import FaultSpec, FaultTrace
+    from repro.models.registry import get_config, model_api
+
+    devs = np.array(jax.devices()).reshape(2, 2, 2)
+    mesh = make_mesh(devs, ("fl", "fsdp", "tp"))
+    cfg = get_config("qwen3-1.7b", smoke=True)
+    api = model_api(cfg)
+    FL, B, S = 2, 4, 32
+    Kn = (1, 2)
+
+    fm = edge_faults(straggler_prob=0.5, straggler_factor=4.0,
+                     crash_prob=0.3, crash_rounds=1, corrupt_prob=0.1,
+                     deadline_slack=1.5)
+    wt = (0.8, 1.0)
+    deadline = 1.5 * 1.0
+    spec = FaultSpec(model=fm, worker_times=wt, deadline=deadline,
+                     deliver_p=tuple(fm.deliver_prob(np.asarray(wt),
+                                                     deadline)))
+    plan = Plan.manual(K0=4, Kn=Kn, B=B, step_rule=ConstantRule(0.01),
+                       s0=64, sn=16, dim=4096, faults=spec)
+
+    sys_ = EdgeSystem.paper_sec_vii(dim=4096, N=FL)
+    consts = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3,
+                                N=FL)
+    scn = Scenario(system=sys_, consts=consts, T_max=1e5, C_max=0.25)
+
+    def batches(key):
+        while True:
+            key, k = jax.random.split(key)
+            yield {"tokens": jax.random.randint(
+                       k, (FL, max(Kn), B, S), 0, cfg.vocab),
+                   "labels": jax.random.randint(
+                       k, (FL, max(Kn), B, S), 0, cfg.vocab)}
+
+    def spmd_run(seed):
+        task = SpmdTask(api=api, arch=cfg, mesh=mesh,
+                        batches=batches(jax.random.PRNGKey(0)))
+        return scn.run(plan, task=task, backend="spmd", wire="f32",
+                       seed=seed, log_every=1)
+
+    r1 = spmd_run(11)
+    r2 = spmd_run(11)
+    assert isinstance(r1.fault_trace, FaultTrace)
+    assert len(r1.fault_trace) == plan.K0
+    assert r1.fault_trace == r2.fault_trace       # bitwise, all records
+    assert r1.fault_trace.workers_dropped > 0     # the model really fired
+
+    # the reference runtime replays the SAME trace from the same seed —
+    # the fault stream is a pure function of (seed, model), not of the
+    # backend, the task, or the model architecture
+    ref = scn.run(plan, task=QuadraticTask(dim=8), seed=11,
+                  max_rounds=plan.K0)
+    assert ref.fault_trace == r1.fault_trace
+
+    r3 = spmd_run(12)
+    assert r3.fault_trace != r1.fault_trace       # seeds matter
+    print("SPMD_FAULTS_OK")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.faults
+def test_spmd_fault_trace_matches_reference_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert "SPMD_FAULTS_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,409 @@
+"""repro.faults: seeded fault injection + deadline-HT aggregation.
+
+Covers the ISSUE-9 acceptance bar:
+
+  * **no-fault reduction** — a neutral fault model (``none`` / an
+    all-zero ``edge_faults()``) routed through the fault interface is
+    *bit-identical* to the historical pipeline across an (m, family)
+    grid: structure signature, z_init, conv-block coefficients, the
+    whole GIA history, the frozen Plan and the reference RunReport;
+  * **determinism** — a (seed, model) pair reproduces the bit-identical
+    ``FaultTrace`` run over run; different seeds diverge;
+  * **unbiasedness** — the deadline-HT aggregation vector is an unbiased
+    estimator of the full blocking aggregate under dropout, alone and
+    composed with client sampling;
+  * **planning** — availability inflates the convergence coefficients by
+    the exact ``pi_n -> a_n pi_n`` joint form, the worst-case margins
+    derate only the time constraint (bitwise no-ops at zero margin), and
+    the frozen plan carries a correct fault contract;
+  * checksum-detected corruption, and malformed models / specs / configs
+    fail loudly.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (ConstantRule, DiminishingRule, EdgeSystem,
+                       ExponentialRule, MLProblemConstants, QuadraticTask,
+                       Scenario, edge_faults, uniform)
+from repro.core.cost import time_cost
+from repro.faults import (EdgeFaults, FaultDriver, FaultModel, FaultSpec,
+                          FaultTrace, NoFaults, fault_names, fault_rng,
+                          flip_bits, get_faults, payload_checksum)
+from repro.opt import solve_param_opt, structure_signature
+from repro.sampling.base import draw_cohort
+
+pytestmark = pytest.mark.faults
+
+N = 4
+CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63, f_gap=2.3, N=N)
+SYS = EdgeSystem.paper_sec_vii(dim=64, N=N)
+
+_STEP = {"C": dict(step=ConstantRule(0.01)),
+         "J": dict(step=None),
+         "E": dict(step=ExponentialRule(0.05, 0.9995)),
+         "D": dict(step=DiminishingRule(0.02, 600.0))}
+
+#: a genuinely faulty fleet: stragglers + 2-round crashes + corruption
+FAULTY = edge_faults(straggler_prob=0.3, straggler_factor=4.0,
+                     crash_prob=0.1, crash_rounds=2, corrupt_prob=0.05,
+                     deadline_slack=1.5)
+
+
+def _scenario(m="C", family="genqsgd", faults="none", sampling="full",
+              T_max=1e6, C_max=1.0):
+    return Scenario(system=SYS, consts=CONSTS, T_max=T_max, C_max=C_max,
+                    family=family, sampling=sampling, faults=faults,
+                    **_STEP[m])
+
+
+def _spec(model, t=1.0, slack=None):
+    """A FaultSpec over homogeneous worker times (driver-level tests)."""
+    wt = np.full(N, float(t))
+    deadline = (model.deadline_slack if slack is None else slack) * float(t)
+    return FaultSpec(model=model, worker_times=tuple(wt),
+                     deadline=float(deadline),
+                     deliver_p=tuple(model.deliver_prob(wt, deadline)))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_contents():
+    assert set(fault_names()) >= {"none", "edge"}
+    assert get_faults("none").is_neutral(N)
+    assert isinstance(get_faults("edge"), FaultModel)
+    with pytest.raises(ValueError, match="unknown fault model"):
+        get_faults("nope")
+
+
+# ---------------------------------------------------------------------------
+# no-fault reduction: bit-identical to the historical pipeline
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,family", [
+    ("C", "genqsgd"), ("J", "genqsgd"), ("E", "genqsgd"), ("D", "genqsgd"),
+    ("C", "gqfedwavg"), ("J", "gqfedwavg")])
+@pytest.mark.parametrize("neutral", [NoFaults(), edge_faults()])
+def test_neutral_reduction_bitwise(m, family, neutral):
+    assert neutral.is_neutral(N)
+    p0 = _scenario(m, family).problem()
+    pn = _scenario(m, family, faults=neutral).problem()
+    assert structure_signature(p0) == structure_signature(pn)
+    z0, zn = p0.z_init(), pn.z_init()
+    assert np.array_equal(z0, zn)
+    for c0, cn in zip(p0.conv_block(z0), pn.conv_block(zn)):
+        assert np.array_equal(c0.c, cn.c) and np.array_equal(c0.A, cn.A)
+    r0 = solve_param_opt(p0, verbose=False)
+    rn = solve_param_opt(pn, verbose=False)
+    assert r0.K0 == rn.K0 and np.array_equal(r0.Kn, rn.Kn)
+    assert r0.B == rn.B and r0.E == rn.E and r0.C == rn.C
+    assert r0.history == rn.history       # every GIA iterate, bitwise
+
+
+def test_neutral_plan_and_runreport_identical():
+    base = _scenario("C").optimize()
+    neut = _scenario("C", faults=edge_faults()).optimize()
+    assert neut == base                   # including faults=None
+    assert neut.faults is None
+    task = QuadraticTask(dim=16)
+    r_base = _scenario("C").run(base, task=task, seed=7, max_rounds=4)
+    r_neut = _scenario("C", faults=edge_faults()).run(
+        neut, task=task, seed=7, max_rounds=4)
+    norm = lambda r: dataclasses.replace(r, wall_time_s=0.0)  # noqa: E731
+    assert norm(r_base) == norm(r_neut)
+    assert r_neut.fault_trace is None     # neutral = the historical path
+
+
+def test_faulty_signature_differs_and_keys_faults():
+    p0 = _scenario("C").problem()
+    pf = _scenario("C", faults=FAULTY).problem()
+    sig0, sigf = structure_signature(p0), structure_signature(pf)
+    assert sig0 != sigf
+    assert sigf[-1] == FAULTY.signature(N) and sig0[-1] == ("none",)
+    # two different fault models never share a signature pool
+    other = dataclasses.replace(FAULTY, straggler_prob=0.4)
+    assert structure_signature(_scenario("C", faults=other).problem()) != sigf
+
+
+# ---------------------------------------------------------------------------
+# seeded determinism: same (seed, model) => bit-identical FaultTrace
+# ---------------------------------------------------------------------------
+def test_reference_run_fault_trace_deterministic():
+    scn = _scenario("C", faults=FAULTY)
+    plan = scn.optimize()
+    assert plan.faults is not None and plan.faults.model == FAULTY
+    task = QuadraticTask(dim=16)
+    r1 = scn.run(plan, task=task, seed=3, max_rounds=12)
+    r2 = scn.run(plan, task=task, seed=3, max_rounds=12)
+    assert isinstance(r1.fault_trace, FaultTrace)
+    assert len(r1.fault_trace) == 12
+    assert r1.fault_trace == r2.fault_trace          # bitwise, all records
+    norm = lambda r: dataclasses.replace(r, wall_time_s=0.0)  # noqa: E731
+    assert norm(r1) == norm(r2)                      # whole report too
+    r3 = scn.run(plan, task=task, seed=4, max_rounds=12)
+    assert r3.fault_trace != r1.fault_trace          # seeds matter
+
+
+def test_fault_rng_stream_is_salted():
+    # the fault stream must not alias the cohort stream built from the
+    # same user seed, or sampling+faults runs would correlate draws
+    a = fault_rng(7).random(8)
+    b = np.random.default_rng(7).random(8)
+    assert not np.allclose(a, b)
+    assert np.array_equal(a, fault_rng(7).random(8))
+
+
+def test_crash_markov_chain_holds_down_rounds():
+    """crash_rounds=R keeps a crashed worker down exactly R consecutive
+    rounds; the chain's realized up-fraction approaches the stationary
+    value availability() plans with."""
+    fm = edge_faults(crash_prob=0.2, crash_rounds=3)
+    drv = FaultDriver(_spec(fm), N)
+    rng = fault_rng(0)
+    rounds = 4000
+    for r in range(rounds):
+        drv.step(rng, r)
+    down = np.zeros((rounds, N), bool)
+    for r, rec in enumerate(drv.records):
+        down[r, list(rec.crashed)] = True
+    # every down-spell lasts >= min(R, remaining rounds): a worker crashed
+    # at r while up at r-1 stays down at r+1 and r+2
+    starts = down[1:] & ~down[:-1]
+    for r, n in zip(*np.nonzero(starts)):
+        spell = down[r + 1:r + 4, n]
+        assert spell[:min(3, rounds - r - 1)].all()
+    up_frac = 1.0 - down.mean()
+    assert up_frac == pytest.approx(fm._up_frac, abs=0.02)
+    assert fm.availability(N)[0] == pytest.approx(fm._up_frac)
+
+
+# ---------------------------------------------------------------------------
+# deadline-HT aggregation: exclusion + unbiasedness
+# ---------------------------------------------------------------------------
+def test_deadline_excludes_stragglers():
+    fm = edge_faults(straggler_prob=0.4, straggler_factor=4.0,
+                     deadline_slack=1.5)
+    spec = _spec(fm, t=1.0)               # deadline 1.5, straggler arrival 4
+    assert spec.deliver_p == (0.6,) * N
+    drv = FaultDriver(spec, N)
+    rng = fault_rng(1)
+    saw_straggler = False
+    for r in range(200):
+        u = drv.step(rng, r)
+        rec = drv.last
+        assert set(rec.delivered).isdisjoint(rec.straggled)
+        assert np.all(np.flatnonzero(u) == np.asarray(rec.delivered))
+        if rec.straggled:
+            saw_straggler = True
+            assert rec.t_blocking == pytest.approx(4.0)
+            assert rec.t_round == pytest.approx(1.5)   # cut at the deadline
+        else:
+            assert rec.t_round == pytest.approx(1.0)   # nominal round
+    assert saw_straggler
+
+
+def test_blocking_fallback_waits_for_stragglers():
+    # slack=inf: nobody is excluded and the round waits for the slowest
+    fm = edge_faults(straggler_prob=0.4, straggler_factor=4.0)
+    drv = FaultDriver(_spec(fm), N)
+    rng = fault_rng(1)
+    for r in range(50):
+        u = drv.step(rng, r)
+        rec = drv.last
+        assert rec.delivered == rec.cohort and not rec.n_dropped
+        assert rec.t_round == rec.t_blocking
+        assert np.allclose(u, 1.0 / N)    # deliver_p = 1: plain weights
+
+
+def test_deadline_ht_unbiased_under_dropout():
+    """E[sum_n u_n d_n] = sum_n w_n d_n over the fault draw (iid crashes
+    + corruption), the core deadline-HT guarantee."""
+    fm = edge_faults(crash_prob=0.25, corrupt_prob=0.1)
+    w = np.array([0.1, 0.2, 0.3, 0.4])
+    drv = FaultDriver(_spec(fm), N, agg_weights=w)
+    assert np.allclose(drv._dp, 0.75 * 0.9)
+    d = np.array([3.0, -1.0, 2.0, 5.0])
+    target = float(np.sum(w * d))
+    rng = fault_rng(2)
+    trials = 8000
+    acc = sum(float(np.sum(drv.step(rng, r) * d)) for r in range(trials))
+    assert acc / trials == pytest.approx(target, abs=0.05)
+
+
+def test_deadline_ht_composes_with_client_sampling():
+    """Faults x sampling: u = cohort_weights / deliver_p stays unbiased
+    over BOTH the cohort draw and the fault draw."""
+    fm = edge_faults(straggler_prob=0.3, straggler_factor=4.0,
+                     crash_prob=0.2, deadline_slack=1.5)
+    drv = FaultDriver(_spec(fm, t=1.0), N)
+    d = np.array([3.0, -1.0, 2.0, 5.0])
+    target = float(np.mean(d))
+    crng = np.random.default_rng(0)
+    frng = fault_rng(0)
+    trials = 8000
+    acc = 0.0
+    for r in range(trials):
+        idx, pi = draw_cohort(crng, N, 2)
+        u = drv.step(frng, r, idx, pi)
+        assert set(np.flatnonzero(u)) <= set(int(i) for i in idx)
+        acc += float(np.sum(u * d))
+    assert acc / trials == pytest.approx(target, abs=0.08)
+    # the attempted cohort recorded each round is the sampled one
+    assert all(len(rec.cohort) == 2 for rec in drv.records)
+
+
+# ---------------------------------------------------------------------------
+# payload corruption: checksum-detected bit flips
+# ---------------------------------------------------------------------------
+def test_checksum_detects_bit_flips():
+    rng = np.random.default_rng(0)
+    payload = rng.standard_normal(256).astype(np.float32)
+    ref = payload_checksum(payload)
+    assert ref == payload_checksum(payload.copy())   # content-addressed
+    for _ in range(20):
+        bad = flip_bits(payload, rng)
+        assert payload_checksum(bad) != ref
+    assert payload_checksum(payload) == ref          # input untouched
+    many = flip_bits(payload, rng, n_flips=8)
+    assert payload_checksum(many) != ref
+
+
+def test_corrupt_workers_are_excluded_but_recorded():
+    fm = edge_faults(corrupt_prob=0.3)
+    drv = FaultDriver(_spec(fm), N)
+    rng = fault_rng(3)
+    corrupt_seen = 0
+    for r in range(100):
+        u = drv.step(rng, r)
+        rec = drv.last
+        corrupt_seen += len(rec.corrupt)
+        assert set(rec.delivered).isdisjoint(rec.corrupt)
+        assert np.all(u[list(rec.corrupt)] == 0.0)
+        # a corrupt upload still arrives: it never inflates round time
+        assert rec.t_round == pytest.approx(1.0)
+    assert corrupt_seen > 0
+
+
+# ---------------------------------------------------------------------------
+# planning: availability coefficients + worst-case margins
+# ---------------------------------------------------------------------------
+def test_availability_inflates_conv_coeffs_exactly():
+    """Full participation with availability a: q_eff = (q+1-a)/a and
+    c3 scales by 1/a — the sampling ratio form with pi_n -> a_n."""
+    fm = edge_faults(crash_prob=0.3)      # R=1: availability is exact
+    a = fm.availability(N)[0]
+    assert a == pytest.approx(0.7)
+    p0 = _scenario("C").problem()
+    pf = _scenario("C", faults=fm).problem()
+    c0, q0 = p0._conv_coeffs()
+    cf, qf = pf._conv_coeffs()
+    assert np.allclose(np.asarray(qf), (np.asarray(q0) + 1.0 - a) / a)
+    assert cf[2] == pytest.approx(c0[2] / a)
+    assert cf[0] == c0[0] and cf[1] == c0[1] and cf[3] == c0[3]
+    # planning for dropout costs rounds: the faulted plan runs more K0
+    b0 = _scenario("C").optimize()
+    bf = _scenario("C", faults=fm).optimize()
+    assert bf.K0 > b0.K0
+    # direct EdgeSystem(an=...) is the same arithmetic, no model needed
+    sys_a = dataclasses.replace(SYS, an=np.full(N, a))
+    pa = dataclasses.replace(_scenario("C"), system=sys_a).problem()
+    ca, qa = pa._conv_coeffs()
+    assert np.array_equal(np.asarray(qa), np.asarray(qf)) and ca == cf
+
+
+def test_availability_composes_with_pinned_sampling():
+    """uniform(S=2) x availability a: q_eff = (q+1-a pi)/(a pi)."""
+    fm = edge_faults(crash_prob=0.3)
+    a = fm.availability(N)[0]
+    pi = 2.0 / N
+    p0 = _scenario("C").problem()
+    pf = _scenario("C", faults=fm, sampling=uniform(S=2)).problem()
+    _, q0 = p0._conv_coeffs()
+    cf, qf = pf._conv_coeffs()
+    assert np.allclose(np.asarray(qf),
+                       (np.asarray(q0) + 1.0 - a * pi) / (a * pi))
+    assert cf[2] == pytest.approx(p0._conv_coeffs()[0][2] / (a * pi))
+
+
+def test_worst_case_margins_derate_time_only():
+    base = _scenario("C").optimize()
+    fm = edge_faults(freq_margin=0.2, rate_margin=0.2)
+    assert not fm.is_neutral(N) and not fm.runtime_active(N)
+    marg = _scenario("C", faults=fm).optimize()
+    assert marg.faults is None            # margin-only: no runtime driver
+    # the margins price a slower fleet: predicted T at the SAME decision
+    # variables is strictly larger, energy arithmetic is untouched
+    sys_m = dataclasses.replace(SYS, freq_margin=0.2, rate_margin=0.2)
+    t_nom = time_cost(SYS, base.K0, base.Kn, base.B)
+    t_wc = time_cost(sys_m, base.K0, base.Kn, base.B, worst_case=True)
+    assert t_wc > t_nom
+    assert time_cost(sys_m, base.K0, base.Kn, base.B) == t_nom
+    # zero margins return the SAME cached objects — bitwise guarantee
+    assert SYS.comp_time_coeff_wc is SYS.comp_time_coeff
+    assert SYS.comm_time_wc == SYS.comm_time
+    assert not np.array_equal(sys_m.comp_time_coeff_wc,
+                              sys_m.comp_time_coeff)
+    assert sys_m.comm_time_wc > sys_m.comm_time
+
+
+def test_plan_carries_fault_contract():
+    scn = _scenario("C", faults=FAULTY)
+    plan = scn.optimize()
+    spec = plan.faults
+    sys = scn._priced_system
+    wt = plan.B * sys.comp_time_coeff * np.asarray(plan.Kn) \
+        + sys.M_sn / sys.rn
+    round_t = plan.B * float(np.max(sys.comp_time_coeff
+                                    * np.asarray(plan.Kn))) + sys.comm_time
+    assert spec.N == N
+    assert np.allclose(spec.worker_times, wt)
+    assert spec.deadline == pytest.approx(1.5 * round_t)
+    assert np.allclose(spec.deliver_p,
+                       FAULTY.deliver_prob(wt, spec.deadline))
+    assert "faults=edge" in plan.describe()
+    # the spec survives the runtime-config handoff (the fed-config side is
+    # covered by test_fed_config_faults_wire_compat: this plan's quantizer
+    # is too wide for the f32 wire, which is orthogonal to faults)
+    assert plan.to_genqsgd_config(seed=0).faults is spec
+
+
+# ---------------------------------------------------------------------------
+# validation: malformed models / specs / configs fail loudly
+# ---------------------------------------------------------------------------
+def test_validation_errors():
+    with pytest.raises(ValueError, match="straggler_prob"):
+        _scenario("C", faults=edge_faults(straggler_prob=1.2))
+    with pytest.raises(ValueError, match="deadline_slack"):
+        _scenario("C", faults=edge_faults(deadline_slack=0.5))
+    with pytest.raises(ValueError, match="straggler_factor"):
+        _scenario("C", faults=edge_faults(straggler_prob=0.1,
+                                          straggler_factor=0.5))
+    with pytest.raises(ValueError, match="crash_rounds"):
+        edge_faults(crash_prob=0.1, crash_rounds=0).validate(N)
+    with pytest.raises(ValueError, match="freq_margin"):
+        _scenario("C", faults=edge_faults(freq_margin=1.0))
+    with pytest.raises(ValueError, match="delivery probabilities"):
+        FaultSpec(model=EdgeFaults(), worker_times=(1.0,) * N,
+                  deadline=1.0, deliver_p=(0.0,) * N)
+    with pytest.raises(ValueError, match="delivery probabilities"):
+        FaultSpec(model=EdgeFaults(), worker_times=(1.0, 1.0),
+                  deadline=1.0, deliver_p=(0.5,))
+    with pytest.raises(ValueError, match="workers"):
+        FaultDriver(_spec(EdgeFaults()), N + 1)
+
+
+def test_fed_config_faults_wire_compat():
+    from repro.fed.runtime import FedConfig
+    spec = _spec(edge_faults(crash_prob=0.1))
+    ok = FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="f32",
+                   faults=spec, seed=0)
+    assert ok.faults is spec
+    FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="int8", bucket=16,
+              faults=spec)
+    with pytest.raises(ValueError, match="fault"):
+        FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="rs_ag",
+                  faults=spec)
+    with pytest.raises(ValueError, match="fault"):
+        FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="int8",
+                  faults=spec)            # non-bucketed: inside shard_map

@@ -160,6 +160,76 @@ def test_failed_batch_resolves_handles_with_error():
         assert bad.error is not None
 
 
+def test_poison_request_batch_resolves_healthy_peers():
+    """THE fault-isolation guarantee: one poison row in a micro-batch
+    (corrupt warm seed — the fused solver raises on it) must not take its
+    healthy batch peers down.  The dispatcher bisects the batch, every
+    healthy row solves, and the poison row is quarantined (solo retries
+    keep failing on the same bad seed) before erroring its handle."""
+    import collections
+
+    from repro.opt.structure import structure_signature
+    from repro.serve.planserver import PlanHandle
+
+    budgets = [0.22, 0.25, 0.3]
+    s = _scenario(C_max=0.27)
+    prob = s.problem(Objective.CONSTANT)
+    bad = PlanHandle(s, Objective.CONSTANT, prob,
+                     structure_signature(prob), fingerprint(prob), b"x")
+    bad.source = "warm"
+    bad.z0 = np.zeros(3)                         # wrong-shape seed: poison
+    srv = _server(window_s=0.2, retry_base_s=0.001, retry_cap_s=0.01,
+                  start=False)
+    healthy = [srv.submit(_scenario(C_max=c)) for c in budgets]
+    with srv._cond:                              # same queue, same batch
+        srv._queues[bad.sig].insert(1, bad)
+    with srv:
+        plans = [h.result(timeout=300) for h in healthy]
+        with pytest.raises(RuntimeError):
+            bad.result(timeout=300)
+    for c, p, h in zip(budgets, plans, healthy):
+        assert p.feasible and h.converged
+        ref = _scenario(C_max=c).optimize()
+        assert (p.K0, p.B, p.Kn) == (ref.K0, ref.B, ref.Kn)
+    st = srv.stats()
+    assert st["bisections"] >= 1                 # the batch was split
+    assert st["quarantined"] == 1 and st["poisoned"] == 1
+    assert bad.error is not None and not bad.converged
+
+
+def test_cancel_pending_request_skipped_and_counted():
+    srv = _server(window_s=0.2, start=False)     # dispatcher not running:
+    keep = srv.submit(_scenario(C_max=0.24))     # both requests stay queued
+    drop = srv.submit(_scenario(C_max=0.26))
+    assert drop.cancel() is True
+    assert drop.done() and drop.cancelled
+    with pytest.raises(RuntimeError, match="cancelled"):
+        drop.result()
+    with srv:
+        plan = keep.result(timeout=300)
+    assert plan.feasible and keep.cancel() is False   # too late to cancel
+    st = srv.stats()
+    assert st["cancelled"] == 1
+    assert st["batches"] == 1 and st["mean_batch"] == 1.0   # solo batch
+
+
+def test_converged_surfaces_on_handle_and_stats():
+    with _server() as srv:
+        h1 = srv.submit(_scenario(C_max=0.25))
+        h1.result(timeout=300)
+        assert h1.converged is True
+        h2 = srv.submit(_scenario(C_max=0.25))   # exact hit: cached result
+        assert h2.source == "hit" and h2.converged is True
+        assert srv.stats()["non_converged"] == 0
+    # a solve stopped before convergence is surfaced, not cached
+    with _server(max_iter=1) as srv:
+        h = srv.submit(_scenario(C_max=0.25))
+        p = h.result(timeout=300)
+        assert h.converged is False and p.converged is False
+        st = srv.stats()
+        assert st["non_converged"] == 1 and st["cache_entries"] == 0
+
+
 @pytest.mark.serve
 @pytest.mark.slow
 def test_stream_mixed_signatures_and_joint_warm():
