@@ -35,12 +35,12 @@ Results land in ``BENCH_faults.json`` at the repo root.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants,
                        QuadraticTask, Scenario, edge_faults)
+from repro.obs.bench import write_bench
 
 from .opt_bench import _enable_compilation_cache
 
@@ -111,8 +111,7 @@ def run(smoke: bool) -> dict:
           f"{tr_d.rounds_degraded}/{rounds} rounds degraded)")
     print(f"  speedup: {speedup:.2f}x wall-clock at matched convergence")
 
-    bench = {
-        "bench": "faults", "mode": "smoke" if smoke else "full",
+    bench = write_bench(BENCH_JSON, "faults", {
         "regime": f"paper_sec_vii N={N}, straggler_prob=0.3 factor=4.0, "
                   f"slack={SLACK} vs blocking, gamma=0.01, seed={SEED}",
         "rounds": rounds,
@@ -128,9 +127,7 @@ def run(smoke: bool) -> dict:
         "err_ratio": round(err_d / err_b, 4),
         "wall_s": round(wall, 2),
         "xla_cache": cache_dir,
-    }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(bench, f, indent=2)
+    }, smoke=smoke)
     print(f"wrote {BENCH_JSON} ({speedup:.2f}x speedup, "
           f"err ratio {bench['err_ratio']}, {wall:.1f}s)")
     return bench

@@ -26,7 +26,6 @@ CI perf-smoke job fails loudly:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -38,6 +37,7 @@ from repro.compress import elias as E
 from repro.compress import pack_int4, wire_bits
 from repro.kernels.flash_decode import BLOCK_C, flash_decode_call
 from repro.kernels.qsgd import default_interpret
+from repro.obs.bench import write_bench
 from repro.roofline.analysis import (achieved_bandwidth, encode_bytes,
                                      host_peak_bandwidth)
 
@@ -179,14 +179,13 @@ def run(tag="kernel_bench", smoke=False):
               "decode_us": round(_time_us(lambda: fd(q, k, v, valid),
                                           reps=reps), 1)}
 
-    out = {"schema": 1, "smoke": bool(smoke),
-           "backend": "interpret" if interp else "pallas",
-           "host_peak_bw_gbs": round(peak / 1e9, 2),
-           "speedup_floor": SPEEDUP_FLOOR,
-           "wall_floor_enforced": not interp,
-           "encode": enc_rows, "elias": el_row, "flash_decode": fd_row}
-    with open(BENCH_JSON, "w") as f:
-        json.dump(out, f, indent=2)
+    write_bench(BENCH_JSON, "kernels", {
+        "backend": "interpret" if interp else "pallas",
+        "host_peak_bw_gbs": round(peak / 1e9, 2),
+        "speedup_floor": SPEEDUP_FLOOR,
+        "wall_floor_enforced": not interp,
+        "encode": enc_rows, "elias": el_row, "flash_decode": fd_row,
+    }, smoke=smoke)
     csv_rows = enc_rows + [el_row, fd_row]
     header = ["kernel", "wire", "n", "fused_us", "multipass_us",
               "model_speedup", "measured_speedup", "achieved_bw_gbs",

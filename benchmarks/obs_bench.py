@@ -1,0 +1,269 @@
+"""Observability overhead + observer-effect gate (``repro.obs``).
+
+Two workloads, each timed with observability disabled and enabled:
+
+  * ``fig5`` — warm fused solves of a Fig.-5 (budget, algo) grid through
+    ``sweep_scenarios(backend="jnp-fused")``, the PlanServer's hot path;
+  * ``train`` — the reference training loop (``Scenario.run``) on a
+    seeded quadratic task under the edge-fleet fault model.
+
+Hard assertions (the ISSUE-10 acceptance bar):
+
+  * **<2% overhead** on both paths, measured as the median over ``reps``
+    ABBA blocks (off, on, on, off) of the per-block on/off time ratio —
+    adjacent-in-time pairing cancels machine throughput drift that
+    whole-run min-of-reps cannot (a 2 ms floor absorbs timer granularity
+    on sub-100ms paths).  **Full mode only** (the serve_bench pattern):
+    every ``Scenario.run`` pays a ~190 ms jit-trace whose run-to-run
+    jitter is several percent of a smoke-sized sample, so the smoke run
+    records the ratios (with a loose 25% sanity ceiling) instead of
+    gating them — the deterministic observer-effect assertions below
+    still run in both modes;
+  * **observer effect = none**: the Plan, the RunReport (modulo its
+    wall-clock field — real time differs between *any* two runs), and the
+    FaultTrace are bit-identical with obs enabled vs disabled, and the
+    fused engine's per-signature trace counter does not move when obs is
+    flipped on over a warm cache (zero extra compiles);
+  * the PlanServer span trace exports as Chrome-trace JSON containing the
+    queue -> batch -> solve span hierarchy (open the artifact at
+    ui.perfetto.dev).
+
+Artifacts: ``BENCH_obs.json`` at the repo root (uniform bench envelope)
+and ``trace_planserver.json`` under the obs artifact dir.
+
+    PYTHONPATH=src python -m benchmarks.obs_bench           # full reps
+    PYTHONPATH=src python -m benchmarks.obs_bench --smoke   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import gc
+import os
+import statistics
+import time
+
+from repro import obs
+from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants,
+                       QuadraticTask, Scenario, edge_faults,
+                       sweep_scenarios)
+from repro.obs.bench import write_bench
+from repro.opt import gia_jax
+from repro.serve import PlanServer
+
+from .common import get_constants, make_scenario, paper_system
+from .opt_bench import _enable_compilation_cache
+
+BENCH_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_obs.json")
+
+#: overhead gate: enabled must stay within 2% (+2ms timer floor) of disabled
+OVERHEAD_FRAC = 0.02
+OVERHEAD_ABS_S = 2e-3
+
+FULL = dict(algos=("Gen-C", "Gen-E", "Gen-D", "Gen-O"),
+            c_grid=(0.2, 0.25, 0.3, 0.4, 0.6), reps=9, rounds=300,
+            task_dim=2048, local_k=16)
+SMOKE = dict(algos=("Gen-C", "Gen-O"), c_grid=(0.25, 0.4), reps=3,
+             rounds=360, task_dim=512, local_k=8)
+
+#: smoke-mode sanity ceiling: overhead is recorded, not gated, but a
+#: blow-up past this still fails CI (catches e.g. an accidental sync)
+SMOKE_CEILING = 0.25
+
+N_TRAIN = 4
+TRAIN_CONSTS = MLProblemConstants(L=0.084, sigma=33.18, G=33.63,
+                                  f_gap=2.3, N=N_TRAIN)
+TRAIN_FAULTS = edge_faults(straggler_prob=0.3, straggler_factor=4.0,
+                           crash_prob=0.1, crash_rounds=2,
+                           corrupt_prob=0.05, deadline_slack=1.5)
+
+
+def _strip_wall(report):
+    """RunReport modulo its one genuinely non-deterministic field."""
+    return dataclasses.replace(report, wall_time_s=0.0)
+
+
+def _canon(rows):
+    """Sweep rows with numpy leaves lowered to plain lists/scalars, so
+    two row lists compare with ``==`` (ndarray __eq__ is elementwise)."""
+    return [{k: (v.tolist() if hasattr(v, "tolist") else v)
+             for k, v in r.items()} for r in rows]
+
+
+def _ab_timings(fn, reps):
+    """Drift-robust A/B timings: (min_off_s, min_on_s, median_ratio).
+
+    Each rep is one ABBA block (off, on, on, off); the block ratio
+    ``(on1+on2) / (off1+off2)`` cancels linear throughput drift (thermal,
+    noisy neighbours) to first order because both modes sample the same
+    window.  The gate runs on the **median** block ratio — robust to a
+    single slow block in either direction — while the min timings are
+    reported for context."""
+    t_off, t_on, ratios = [], [], []
+    for _ in range(reps):
+        block = {False: [], True: []}
+        for on in (False, True, True, False):
+            obs.enable() if on else obs.disable()
+            gc.collect()             # keep GC pauses out of both samples
+            t0 = time.perf_counter()
+            fn()
+            block[on].append(time.perf_counter() - t0)
+        t_off += block[False]
+        t_on += block[True]
+        ratios.append(sum(block[True]) / sum(block[False]))
+    obs.disable()
+    return min(t_off), min(t_on), statistics.median(ratios)
+
+
+def _gate(name, off_s, on_s, ratio, smoke):
+    overhead = ratio - 1.0
+    mode = "recorded, smoke" if smoke else "gated"
+    print(f"  {name:6s} off {off_s * 1e3:8.1f}ms  on {on_s * 1e3:8.1f}ms  "
+          f"overhead {overhead:+.2%} (median block ratio, {mode})")
+    if smoke:
+        # smoke samples are dominated by per-run jit-trace jitter (see
+        # module docstring): record the ratio, only catch blow-ups
+        assert overhead <= SMOKE_CEILING, \
+            f"{name}: obs overhead {overhead:.2%} past even the smoke " \
+            f"sanity ceiling ({SMOKE_CEILING:.0%})"
+    else:
+        assert overhead <= OVERHEAD_FRAC + OVERHEAD_ABS_S / off_s, \
+            f"{name}: obs overhead {overhead:.2%} breaches the " \
+            f"{OVERHEAD_FRAC:.0%} gate (off {off_s:.4f}s, on {on_s:.4f}s)"
+    return overhead
+
+
+def _fig5_overhead(cfg, smoke):
+    consts = get_constants()
+    sys_ = paper_system()
+    scns = [make_scenario(a, sys_, consts, T_max=1e5, C_max=c)[0]
+            for c in cfg["c_grid"] for a in cfg["algos"]]
+
+    sweep = lambda: sweep_scenarios(scns, backend="jnp-fused")
+    sweep()                                    # pay every compile up front
+    traces_warm = sum(gia_jax.TRACE_COUNTS.values())
+
+    off_s, on_s, ratio = _ab_timings(sweep, cfg["reps"])
+
+    # observer effect on the engine: flipping obs on over a warm cache
+    # must not re-trace anything (zero extra compiles)
+    new_traces = sum(gia_jax.TRACE_COUNTS.values()) - traces_warm
+    assert new_traces == 0, \
+        f"enabling obs re-traced the fused engine ({new_traces} new)"
+
+    # observer effect on results: identical plans either way
+    obs.disable()
+    rows_off = sweep_scenarios(scns, backend="jnp-fused").rows
+    obs.enable(reset=True)
+    rows_on = sweep_scenarios(scns, backend="jnp-fused").rows
+    obs.disable()
+    assert _canon(rows_on) == _canon(rows_off), \
+        "observer effect on sweep rows"
+
+    return {"points": len(scns), "reps": cfg["reps"],
+            "off_s": round(off_s, 4), "on_s": round(on_s, 4),
+            "overhead": round(_gate("fig5", off_s, on_s, ratio, smoke), 4),
+            "new_fused_traces": new_traces}
+
+
+def _train_overhead(cfg, smoke):
+    # gamma small enough that Kn local steps on the task stay finite — a
+    # diverged run reports err=NaN and NaN breaks the == identity checks
+    scn = Scenario(system=EdgeSystem.paper_sec_vii(dim=64, N=N_TRAIN),
+                   consts=TRAIN_CONSTS, T_max=1e6, C_max=1.0,
+                   step=ConstantRule(0.001), faults=TRAIN_FAULTS)
+    # a realistically-sized round: the GP picks Kn=1 for this toy system,
+    # which makes every round a single ~0.5ms dispatch — a degenerate
+    # denominator that grades us-scale instrumentation as percent-scale
+    # overhead.  Grade against a round that does real local work instead
+    # (paper regimes run tens-to-hundreds of local steps per round).
+    plan = dataclasses.replace(scn.optimize("C"),
+                               Kn=(cfg["local_k"],) * N_TRAIN)
+    task = QuadraticTask(dim=cfg["task_dim"], per_worker=256)
+    rounds = cfg["rounds"]
+    run = lambda: scn.run(plan, task=task, seed=3, max_rounds=rounds)
+    run()                                                        # warm-up
+
+    off_s, on_s, ratio = _ab_timings(run, cfg["reps"])
+
+    # bit-identity: report + fault trace modulo the wall-clock field
+    obs.disable()
+    rep_off = run()
+    obs.enable(reset=True)
+    rep_on = run()
+    obs.disable()
+    assert _strip_wall(rep_on) == _strip_wall(rep_off), \
+        "observer effect on RunReport/FaultTrace"
+    drift = rep_on.drift()
+    assert drift == rep_off.drift() and len(drift.rows) == rep_on.rounds
+
+    return {"rounds": rep_on.rounds, "reps": cfg["reps"],
+            "off_s": round(off_s, 4), "on_s": round(on_s, 4),
+            "overhead": round(_gate("train", off_s, on_s, ratio, smoke), 4),
+            "cumulative_drift": drift.cumulative()}
+
+
+def _planserver_trace(cfg):
+    """One obs-enabled serving burst -> Chrome-trace artifact with the
+    queue -> batch -> solve span hierarchy."""
+    consts = get_constants()
+    sys_ = paper_system()
+    scns = [make_scenario(a, sys_, consts, T_max=1e5, C_max=c)[0]
+            for c in cfg["c_grid"] for a in cfg["algos"]]
+    obs.enable(reset=True)
+    try:
+        with PlanServer(max_batch=8, window_s=0.02) as srv:
+            handles = [srv.submit(s) for s in scns + scns]  # repeats -> hits
+            for h in handles:
+                h.result(timeout=600)
+            stats = srv.stats()
+    finally:
+        obs.disable()
+
+    events = obs.TRACER.to_chrome()["traceEvents"]
+    names = {e["name"] for e in events}
+    for want in ("planserver.queue", "planserver.solve", "planserver.batch",
+                 "gia.fused_dispatch"):
+        assert want in names, f"missing span {want!r} in {sorted(names)}"
+    # async queue/solve pairs must be balanced or Perfetto drops the track
+    for nm in ("planserver.queue", "planserver.solve"):
+        b = sum(1 for e in events if e["name"] == nm and e["ph"] == "b")
+        e_ = sum(1 for e in events if e["name"] == nm and e["ph"] == "e")
+        assert b == e_ > 0, (nm, b, e_)
+
+    path = obs.artifact_path("trace_planserver.json")
+    obs.TRACER.save(path)
+    print(f"  planserver trace: {len(events)} events -> {path} "
+          f"(open at ui.perfetto.dev)")
+    return {"events": len(events), "path": path,
+            "requests": len(handles), "hit_rate": stats["hit_rate"],
+            "queue_depth": stats["queue_depth"],
+            "inflight": stats["inflight"]}
+
+
+def run(smoke=False):
+    cfg = SMOKE if smoke else FULL
+    _enable_compilation_cache()
+    obs.disable()                    # measure from a known-off baseline
+    t0 = time.time()
+    fig5 = _fig5_overhead(cfg, smoke)
+    train = _train_overhead(cfg, smoke)
+    trace = _planserver_trace(cfg)
+    bench = write_bench(BENCH_JSON, "obs", {
+        "overhead_gate": {"frac": OVERHEAD_FRAC, "abs_s": OVERHEAD_ABS_S},
+        "fig5": fig5,
+        "train": train,
+        "planserver_trace": trace,
+        "wall_s": round(time.time() - t0, 2),
+    }, smoke=smoke)
+    print(f"wrote {BENCH_JSON} (fig5 {fig5['overhead']:+.2%}, "
+          f"train {train['overhead']:+.2%}"
+          + (", recorded only" if smoke
+             else f", both under {OVERHEAD_FRAC:.0%}") + ")")
+    return bench
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized run")
+    print_keys = run(ap.parse_args().smoke)

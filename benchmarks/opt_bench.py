@@ -27,11 +27,12 @@ solves/sec, compile time).
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import numpy as np
+
+from repro.obs.bench import write_bench
 
 from .common import RESULTS, get_constants, make_scenario, paper_system, \
     write_csv
@@ -181,17 +182,12 @@ def run(tag="opt_bench", smoke=False):
                      ["grid_points", "mode", "wall_s", "solves_per_s",
                       "speedup_vs_seq", "compile_s"])
 
-    bench = {
-        "schema": 2,
-        "smoke": bool(smoke),
+    write_bench(BENCH_JSON, "opt", {
         "fig5_grid": {"grid_points": rows[0]["grid_points"],
                       "backends": rows},
         "sweep": sweep,
         "compilation_cache_dir": cache_dir,
-    }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(bench, f, indent=2)
-        f.write("\n")
+    }, smoke=smoke)
     fused = rows[-1]
     return {"rows": len(rows), "csv": path, "json": BENCH_JSON,
             "derived": f"{fused['speedup_vs_seq']}x_fig5_"

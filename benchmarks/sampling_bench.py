@@ -31,13 +31,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 
 import numpy as np
 
 from repro.api import (ConstantRule, EdgeSystem, MLProblemConstants,
                        Scenario, sweep_scenarios, uniform)
+from repro.obs.bench import write_bench
 from repro.opt import gia_jax
 
 from .opt_bench import _enable_compilation_cache
@@ -98,17 +98,14 @@ def run(smoke: bool) -> dict:
               f"S={rs['S']} E={rs['E']:.5g} (K0={rs['K0']}) "
               f"-> {rows[-1]['saving_pct']}% saved")
 
-    bench = {
-        "bench": "sampling", "mode": "smoke" if smoke else "full",
+    bench = write_bench(BENCH_JSON, "sampling", {
         "regime": "paper_sec_vii(F_ratio=1) + alpha_n=2e-27, "
                   "gamma=3e-4, C_max=0.25, T_max=1e7",
         "grid": list(grid), "frontier": rows,
         "wall_s": round(wall, 2), "n_groups": rep.n_groups,
         "new_fused_traces": new_traces, "backend": rep.backend,
         "xla_cache": cache_dir,
-    }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(bench, f, indent=2)
+    }, smoke=smoke)
     print(f"wrote {BENCH_JSON} ({rep.n_groups} signatures, "
           f"{new_traces} new fused traces, {wall:.1f}s)")
     return bench

@@ -21,9 +21,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
 import time
+
+from repro.obs.bench import write_bench
 
 from .common import RESULTS, get_constants, make_scenario, paper_system, \
     write_csv
@@ -114,9 +115,7 @@ def run(tag="table_families", smoke=False):
     path = write_csv(f"{RESULTS}/benchmarks/{tag}.csv", csv_rows,
                      ["name", "family", "m", "C_max", "K0", "Kn", "B",
                       "gamma", "E", "T", "C", "feasible", "iterations"])
-    bench = {
-        "schema": 1,
-        "smoke": bool(smoke),
+    write_bench(BENCH_JSON, "families", {
         "grid": {"points": n, "families": list(FAMILY_GRID),
                  "algos": list(algos), "c_grid": list(c_grid)},
         "backend": {"name": "jnp-fused", "structure_groups": rep.n_groups,
@@ -125,10 +124,7 @@ def run(tag="table_families", smoke=False):
         "families": families,
         "min_E_ratio_gqfedwavg_over_genqsgd": ratios,
         "compilation_cache_dir": cache_dir,
-    }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(bench, f, indent=2)
-        f.write("\n")
+    }, smoke=smoke)
     return {"rows": n, "csv": path, "json": BENCH_JSON,
             "derived": "_".join(f"{f}:{families[f]['feasible']}/"
                                 f"{families[f]['points']}"

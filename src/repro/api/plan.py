@@ -346,6 +346,15 @@ class RunReport:
         exact for uniform cohorts over homogeneous quantizers)."""
         return self.comm_bits == self.predicted_comm_bits
 
+    def drift(self):
+        """The per-round predicted-vs-measured timeline for energy, time
+        and comm-bits: a :class:`~repro.obs.ledger.RunLedger` with one row
+        per executed round and running cumulative drift ratios.  A pure
+        function of this frozen report — identical whether ``repro.obs``
+        is enabled or not."""
+        from ..obs.ledger import RunLedger
+        return RunLedger.from_report(self)
+
     def summary(self) -> str:
         p = self.plan
         lines = [

@@ -23,6 +23,7 @@ from typing import Optional, Union
 
 import numpy as np
 
+from .. import obs as _obs
 from ..core.cost import EdgeSystem, energy_cost, time_cost
 from ..core.convergence import MLProblemConstants
 from ..core.genqsgd import GenQSGD
@@ -226,15 +227,17 @@ class Scenario:
         if server is not None:
             return server.solve(self, m=m)
         m = self._resolve(m)
-        prob = self.problem(m)
-        if backend == "numpy":
-            r = solve_param_opt(prob, z0=z0, tol=tol, max_iter=max_iter,
-                                verbose=verbose)
-        else:
-            r = solve_param_opt_batched(
-                [prob], z0s=None if z0 is None else [z0], tol=tol,
-                max_iter=max_iter, backend=backend, verbose=verbose)[0]
-        return self._plan_from_result(m, r)
+        with _obs.trace.span("scenario.optimize", m=str(m.value),
+                             family=str(self.family), backend=backend):
+            prob = self.problem(m)
+            if backend == "numpy":
+                r = solve_param_opt(prob, z0=z0, tol=tol, max_iter=max_iter,
+                                    verbose=verbose)
+            else:
+                r = solve_param_opt_batched(
+                    [prob], z0s=None if z0 is None else [z0], tol=tol,
+                    max_iter=max_iter, backend=backend, verbose=verbose)[0]
+            return self._plan_from_result(m, r)
 
     def sweep(self, over, names=None, backend: str = "auto",
               tol: float = 1e-4, max_iter: int = 60, parallel: bool = True):
@@ -260,14 +263,24 @@ class Scenario:
         the distributed runtime on an :class:`~repro.api.tasks.SpmdTask`,
         moving the Plan's quantized levels over the ``wire`` transport.
         """
-        if backend == "reference":
-            return self._run_reference(plan, task, seed, max_rounds,
-                                       eval_every)
-        if backend == "spmd":
-            return self._run_spmd(plan, task, seed, max_rounds, wire,
-                                  log_every)
-        raise ValueError(f"unknown backend {backend!r}; "
-                         f"expected 'reference' or 'spmd'")
+        with _obs.trace.span("scenario.run", backend=backend,
+                             family=plan.family, rounds=plan.K0):
+            if backend == "reference":
+                report = self._run_reference(plan, task, seed, max_rounds,
+                                             eval_every)
+            elif backend == "spmd":
+                report = self._run_spmd(plan, task, seed, max_rounds, wire,
+                                        log_every)
+            else:
+                raise ValueError(f"unknown backend {backend!r}; "
+                                 f"expected 'reference' or 'spmd'")
+        if _obs.enabled():
+            # the drift ledger artifact: a pure function of the report (the
+            # report itself is bit-identical with obs off; only this file
+            # write is added)
+            report.drift().to_jsonl(_obs.artifact_path(
+                f"ledger_{plan.family}_{backend}_seed{seed}.jsonl"))
+        return report
 
     def _report(self, plan: Plan, backend: str, rounds: int, model_dim: int,
                 wall: float, final_metrics: dict, history,

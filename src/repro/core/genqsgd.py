@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -31,6 +32,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compress import make_codec
+from ..obs import REGISTRY as _METRICS
+from ..obs.metrics import GLOBAL_SWITCH as _OBS_ON
 from .step_rules import StepRule
 
 __all__ = ["GenQSGDConfig", "GenQSGD", "flatten_like", "unflatten_like"]
@@ -288,7 +291,26 @@ class GenQSGD:
             from ..faults import FaultDriver, fault_rng  # cycle
             fdrv = FaultDriver(cfg.faults, cfg.N, cfg.agg_weights)
             frng = fault_rng(cfg.seed)
+        # round metrics (repro.obs): priced from static config + host-side
+        # fault/cohort records only, so the jitted round is untouched and
+        # disabled runs pay one boolean check per round
+        obs_on = _OBS_ON.on
+        if obs_on:
+            _dim = int(sum(int(np.prod(l.shape)) if l.shape else 1
+                           for l in jax.tree.leaves(x0)))
+            _up_bits = [make_codec(s, bucket=cfg.bucket,
+                                   kind=cfg.codec_kind).wire_bits(_dim)
+                        for s in cfg.worker_s()]
+            _down_bits = make_codec(cfg.s0, bucket=cfg.bucket,
+                                    kind=cfg.codec_kind).wire_bits(_dim)
+            _round_h = _METRICS.histogram("run.round_s", backend="reference")
+            _htvar_h = _METRICS.histogram("run.ht_weight_var",
+                                          backend="reference")
+            _bits_c = _METRICS.counter("run.wire_bits", backend="reference",
+                                       codec=cfg.codec_kind)
+            _rounds_c = _METRICS.counter("run.rounds", backend="reference")
         for k0 in range(cfg.K0):
+            _t0 = time.perf_counter() if obs_on else 0.0
             key, rkey = jax.random.split(key)
             idx = pi = u = None
             if rng is not None:
@@ -305,6 +327,29 @@ class GenQSGD:
                                    jnp.asarray(u, jnp.float32))
             else:
                 x, m = self._round(x, data, rkey, jnp.float32(gammas[k0]))
+            if obs_on:
+                # dispatch is async: this is the host loop time per round
+                # (exact where eval or metric reads force a sync), never an
+                # added block_until_ready — observing must not serialize
+                _round_h.observe(time.perf_counter() - _t0)
+                _rounds_c.inc()
+                if u is not None:
+                    # plain-python variance: np.var costs ~15us of ufunc
+                    # dispatch for a length-N vector, which at edge-scale N
+                    # would be most of the round's observability budget
+                    _ul = u.tolist()
+                    _mu = sum(_ul) / len(_ul)
+                    _htvar_h.observe(
+                        sum((v - _mu) ** 2 for v in _ul) / len(_ul))
+                if fdrv is not None:
+                    rec = fdrv.last   # crashed workers never reach the wire
+                    senders = (rec.cohort if not rec.crashed
+                               else set(rec.cohort) - set(rec.crashed))
+                elif idx is not None:
+                    senders = set(int(i) for i in idx)
+                else:
+                    senders = range(cfg.N)
+                _bits_c.inc(sum(_up_bits[i] for i in senders) + _down_bits)
             if eval_fn is not None and (k0 % eval_every == 0 or k0 == cfg.K0 - 1):
                 e = eval_fn(x)
                 e.update({k: float(v) for k, v in m.items()})

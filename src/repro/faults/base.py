@@ -61,6 +61,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from ..obs import REGISTRY as _METRICS
+from ..obs.metrics import GLOBAL_SWITCH as _OBS_ON
 from ..sampling.base import cohort_weights
 
 __all__ = ["FaultModel", "RoundFaults", "RoundFaultRecord", "FaultTrace",
@@ -190,6 +192,16 @@ class FaultModel:
     freq_margin: float = 0.0
     #: ditto for worker uplink rates r_n
     rate_margin: float = 0.0
+    #: how the runtime sets each round's tau: ``"frozen"`` keeps the plan's
+    #: ``tau = slack x predicted round time`` for every round (the
+    #: historical path, bitwise); ``"adaptive"`` re-estimates tau from an
+    #: EMA of *realized* round times — ``tau_k = slack x ema_{k-1}``, with
+    #: the per-round delivery probabilities recomputed at tau_k so the HT
+    #: reweighting stays unbiased (tau_k depends only on past rounds, so
+    #: conditional on them round k's aggregate is still unbiased)
+    deadline: str = "frozen"
+    #: EMA weight on the newest realized round time (adaptive mode only)
+    ema_alpha: float = 0.25
 
     # -- identity --------------------------------------------------------
     def validate(self, N: int) -> None:
@@ -204,6 +216,17 @@ class FaultModel:
             v = getattr(self, name)
             if not 0.0 <= v < 1.0:
                 raise ValueError(f"{name}={v} outside [0, 1)")
+        if self.deadline not in ("frozen", "adaptive"):
+            raise ValueError(
+                f"deadline={self.deadline!r} must be 'frozen' or 'adaptive'")
+        if not 0.0 < self.ema_alpha <= 1.0:
+            raise ValueError(f"ema_alpha={self.ema_alpha} outside (0, 1]")
+        if self.deadline == "adaptive" and not np.isfinite(
+                self.deadline_slack):
+            raise ValueError(
+                "deadline='adaptive' needs a finite deadline_slack — the "
+                "adaptive tau is slack x the realized-round-time EMA, and "
+                "an infinite slack is blocking sync with nothing to adapt")
 
     def is_neutral(self, N: int) -> bool:
         """True when the model is a fault-free fleet in disguise — every
@@ -318,6 +341,22 @@ class FaultDriver:
     7's Horvitz-Thompson weights divided by the delivery probability, so
     ``E[sum_n u_n d_n] = sum_n w_n d_n`` over both the cohort draw and
     the fault draw.
+
+    **Adaptive deadline** (``model.deadline == "adaptive"``): tau is
+    re-estimated each round as ``slack x ema`` of the *realized* round
+    times, seeded at the plan's predicted round time (so round 0 is
+    bitwise the frozen tau) and floored at the nominal blocking time
+    ``max_n t_n`` — the floor keeps every attempted worker's delivery
+    probability positive, which the HT reweighting needs (the same
+    invariant FaultSpec validates for the frozen tau).  The delivery
+    probabilities are recomputed at each round's tau; since tau_k is a
+    function of rounds < k only, round k's aggregate stays conditionally
+    unbiased.  Note the EMA averages *censored* times (``t_round <=
+    tau``): rounds that finish early pull tau down toward ``slack x``
+    the typical round time (floored as above), while rounds cut at the
+    deadline feed ``t_round = tau`` back in, growing the EMA by
+    ``1 + alpha (slack - 1)`` per cut round until tau covers the typical
+    blocking time — tau tracks the realized regime in both directions.
     """
 
     def __init__(self, spec: FaultSpec, N: int, agg_weights=None):
@@ -331,6 +370,25 @@ class FaultDriver:
         self.records = []
         self._t = np.asarray(spec.worker_times, np.float64)
         self._dp = np.asarray(spec.deliver_p, np.float64)
+        # instruments are cheap switch-gated handles: resolve them once
+        # here so the per-round cost is one attribute check, not three
+        # registry lookups
+        self._m_round_s = _METRICS.histogram("faults.round_s",
+                                             model=spec.model.key)
+        self._m_dropped = _METRICS.counter("faults.dropped",
+                                           model=spec.model.key)
+        self._m_cuts = _METRICS.counter("faults.deadline_cuts",
+                                        model=spec.model.key)
+        self._adaptive = getattr(spec.model, "deadline", "frozen") \
+            == "adaptive"
+        if self._adaptive:
+            self._slack = float(spec.model.deadline_slack)
+            self._alpha = float(spec.model.ema_alpha)
+            # seeded at the plan's prediction: spec.deadline / slack is the
+            # predicted round time, so the first adaptive tau IS the frozen
+            # tau and the modes only diverge as realized times arrive
+            self._ema = float(spec.deadline) / self._slack
+            self._tau_floor = float(np.max(self._t))
 
     def step(self, rng: np.random.Generator, round_no: int,
              idx=None, pi=None) -> np.ndarray:
@@ -345,16 +403,24 @@ class FaultDriver:
         attempted[idx] = True
         arrival = np.where(faults.crashed, np.inf,
                            faults.latency_mult * self._t)
-        deadline = self.spec.deadline
+        if self._adaptive:
+            deadline = max(self._slack * self._ema, self._tau_floor)
+            dp = np.maximum(
+                self.spec.model.deliver_prob(self._t, deadline), 1e-12)
+        else:
+            deadline = self.spec.deadline
+            dp = self._dp
         # blocking sync waits for the slowest attempted worker (inf if one
         # crashed); deadline aggregation cuts the round at tau
         t_blocking = float(np.max(np.where(attempted, arrival, -np.inf)))
         t_round = float(min(deadline, t_blocking))
+        if self._adaptive:
+            self._ema += self._alpha * (t_round - self._ema)
         on_time = (arrival <= deadline) & ~faults.crashed
         delivered = attempted & on_time & ~faults.corrupt
         u = cohort_weights(np.asarray(idx), np.asarray(pi), N,
                            self.agg_weights)
-        u = np.where(delivered, u / self._dp, 0.0)
+        u = np.where(delivered, u / dp, 0.0)
         straggled = attempted & (faults.latency_mult > 1.0) & ~faults.crashed
         self.records.append(RoundFaultRecord(
             round=int(round_no),
@@ -367,6 +433,11 @@ class FaultDriver:
                           np.flatnonzero(attempted & faults.corrupt)),
             deadline=float(deadline), t_round=t_round,
             t_blocking=t_blocking))
+        if _OBS_ON.on:
+            self._m_round_s.observe(t_round)
+            self._m_dropped.inc(self.records[-1].n_dropped)
+            if t_blocking > deadline:
+                self._m_cuts.inc()
         return u
 
     @property

@@ -140,9 +140,16 @@ def edge_faults(straggler_prob: float = 0.0, straggler_factor: float = 1.0,
                 corrupt_prob: float = 0.0,
                 deadline_slack: float = float("inf"),
                 freq_margin: float = 0.0,
-                rate_margin: float = 0.0) -> EdgeFaults:
+                rate_margin: float = 0.0,
+                deadline: str = "frozen",
+                ema_alpha: float = 0.25) -> EdgeFaults:
     """Factory for :class:`EdgeFaults` (keyword-friendly mirror of
-    :func:`repro.sampling.uniform` / ``importance``)."""
+    :func:`repro.sampling.uniform` / ``importance``).
+
+    ``deadline="adaptive"`` makes the runtime's :class:`FaultDriver`
+    re-estimate tau each round from an EMA (weight ``ema_alpha``) of the
+    realized round times; the default ``"frozen"`` keeps the plan's tau
+    for every round, bitwise the historical behavior."""
     return EdgeFaults(straggler_prob=float(straggler_prob),
                       straggler_factor=float(straggler_factor),
                       crash_prob=float(crash_prob),
@@ -150,4 +157,6 @@ def edge_faults(straggler_prob: float = 0.0, straggler_factor: float = 1.0,
                       corrupt_prob=float(corrupt_prob),
                       deadline_slack=float(deadline_slack),
                       freq_margin=float(freq_margin),
-                      rate_margin=float(rate_margin))
+                      rate_margin=float(rate_margin),
+                      deadline=str(deadline),
+                      ema_alpha=float(ema_alpha))

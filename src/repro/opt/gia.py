@@ -26,10 +26,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import REGISTRY as _METRICS
+from ..obs import trace as _trace
+from ..obs.metrics import GLOBAL_SWITCH as _OBS_ON
 from .gp import GPResult, solve_gp, solve_gp_batch
 from .problems import Objective, ParamOptProblem
 from .structure import GPStructure, structure_signature
@@ -118,6 +122,27 @@ def solve_param_opt(problem: ParamOptProblem,
     return result
 
 
+def _record_solve(backend: str, n_rows: int, results: List["GIAResult"],
+                  pad_to: int) -> None:
+    """Per-dispatch solver metrics (host-side only; inert when obs is off).
+
+    Each GIA iteration refreshes the surrogate coefficients once, so
+    ``GIAResult.iterations`` doubles as the per-row refresh count.
+    """
+    if not _OBS_ON.on:
+        return
+    _METRICS.counter("gia.rows_solved", backend=backend).inc(n_rows)
+    _METRICS.histogram("gia.batch_rows", backend=backend).observe(n_rows)
+    _METRICS.histogram("gia.batch_occupancy", backend=backend).observe(
+        n_rows / max(int(pad_to), n_rows))
+    it_h = _METRICS.histogram("gia.iterations_per_row", backend=backend)
+    refreshes = 0
+    for r in results:
+        it_h.observe(r.iterations)
+        refreshes += r.iterations
+    _METRICS.counter("gia.refreshes", backend=backend).inc(refreshes)
+
+
 def solve_param_opt_batched(problems: Sequence[ParamOptProblem],
                             z0s: Optional[Sequence[Optional[np.ndarray]]]
                             = None,
@@ -163,6 +188,7 @@ def solve_param_opt_batched(problems: Sequence[ParamOptProblem],
         zs = [p.z_init() if z is None
               else np.asarray(z, dtype=np.float64).copy()
               for p, z in zip(problems, z0s)]
+    _t0 = time.perf_counter() if _OBS_ON.on else 0.0
     if backend == "jnp-fused":
         from .gia_jax import solve_gia_fused
         results = [
@@ -170,6 +196,11 @@ def solve_param_opt_batched(problems: Sequence[ParamOptProblem],
             for p, (z, history, conv)
             in zip(problems, solve_gia_fused(problems, zs, tol, max_iter,
                                              pad_to=pad_to))]
+        if _OBS_ON.on:
+            _trace.add_span("gia.solve", _t0, time.perf_counter(),
+                            backend=backend, rows=B,
+                            m=str(problems[0].m.value))
+            _record_solve(backend, B, results, pad_to)
         if joint_restart and problems[0].m is Objective.JOINT:
             results = _joint_restart_batched(problems, results, tol,
                                              max_iter, backend,
@@ -212,6 +243,10 @@ def solve_param_opt_batched(problems: Sequence[ParamOptProblem],
     results = [_finalize(p, np.asarray(zs[i], dtype=np.float64), history[i],
                          converged[i])
                for i, p in enumerate(problems)]
+    if _OBS_ON.on:
+        _trace.add_span("gia.solve", _t0, time.perf_counter(),
+                        backend=backend, rows=B, m=str(problems[0].m.value))
+        _record_solve(backend, B, results, pad_to=0)
     if joint_restart and problems[0].m is Objective.JOINT:
         results = _joint_restart_batched(problems, results, tol, max_iter,
                                          backend)

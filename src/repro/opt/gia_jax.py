@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Sequence, Tuple
 
 import jax
@@ -39,6 +40,9 @@ import numpy as np
 from jax import lax
 from jax.experimental import enable_x64
 
+from ..obs import REGISTRY as _METRICS
+from ..obs import trace as _otrace
+from ..obs.metrics import GLOBAL_SWITCH as _OBS_ON
 from .gp_jax import (_LS_ALPHA, _LS_BETA, _LS_MAX, _MU, _NEWTON_MAX,
                      _NEWTON_TOL, _P1_MARGIN, _P1_STAGES, _T0, _TOL_GAP)
 from .problems import Objective
@@ -169,8 +173,12 @@ def _compiled(m_value: str, n: int, m_cons: int, seg_bytes: bytes,
         return phi, grad, H, g_main, t_main, t0
 
     def run(tol, z0, obj_logc, obj_A, skel_logc, skel_A, arrays):
+        # this body executes only while jax traces (cache hits never reach
+        # it), so both hooks count trace/compile events, not dispatches
         TRACE_COUNTS[(key, z0.shape[0])] = \
             TRACE_COUNTS.get((key, z0.shape[0]), 0) + 1
+        if _OBS_ON.on:
+            _METRICS.counter("gia.compile_events").inc()
         B = z0.shape[0]
         eye = jnp.eye(n + 1)
 
@@ -369,6 +377,7 @@ def solve_gia_fused(problems: Sequence, z0s: Sequence[np.ndarray],
             plan, obj_logc=_pad(plan.obj_logc), obj_A=_pad(plan.obj_A),
             skel_logc=_pad(plan.skel_logc), skel_A=_pad(plan.skel_A),
             arrays={k: _pad(v) for k, v in plan.arrays.items()})
+    _t0 = time.perf_counter() if _OBS_ON.on else 0.0
     with enable_x64():
         z, conv, hist, nh = fn(float(tol), z0,
                                plan.obj_logc, plan.obj_A, plan.skel_logc,
@@ -376,6 +385,12 @@ def solve_gia_fused(problems: Sequence, z0s: Sequence[np.ndarray],
         # the single host sync of the whole solve
         z, conv, hist, nh = (np.asarray(z), np.asarray(conv),
                              np.asarray(hist), np.asarray(nh))
+    if _OBS_ON.on:
+        # stamped strictly after the sync above — the span brackets the
+        # dispatch+sync the solve already paid, it never adds one
+        _otrace.add_span("gia.fused_dispatch", _t0, time.perf_counter(),
+                         rows=len(problems), padded=int(z0.shape[0]),
+                         sig=str(plan.signature_key)[:160])
     out = []
     for i in range(len(problems)):
         col = hist[i]

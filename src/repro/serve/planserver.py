@@ -52,6 +52,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import trace as _otrace
+from ..obs.metrics import GLOBAL_SWITCH as _OBS_ON
+from ..obs.metrics import MetricsRegistry
 from ..opt.gia import GIAResult, solve_param_opt_batched
 from ..opt.problems import Objective
 from ..opt.refresh import RefreshPlan
@@ -183,6 +186,7 @@ class PlanHandle:
         self.converged: Optional[bool] = None
         self.cancelled = False
         self.t_submit = time.perf_counter()
+        self.t_taken: Optional[float] = None   # popped into a micro-batch
         self.t_done: Optional[float] = None
         self.z0: Optional[np.ndarray] = None
         self._event = threading.Event()
@@ -265,12 +269,45 @@ class PlanServer:
         self._cond = threading.Condition()
         self._queues: Dict[tuple, "collections.deque[PlanHandle]"] = {}
         self._closing = False
-        self._counts = collections.Counter()
-        self._batch_sizes: List[int] = []
+        # the server's own always-on registry: stats() is a public API, so
+        # its instruments record regardless of the global repro.obs switch
+        self.metrics = MetricsRegistry()
+        self._queue_depth = 0            # queued handles (under _cond)
+        self._inflight = 0               # taken but unresolved (under _cond)
         self._trace_base: Dict[tuple, Tuple[tuple, int]] = {}
         self._thread: Optional[threading.Thread] = None
         if start:
             self.start()
+
+    # -- metric shorthands (get-or-create is cheap: one dict lookup) ----
+    def _count(self, name: str, n: float = 1, **labels):
+        self.metrics.counter("planserver." + name, **labels).inc(n)
+
+    def _observe(self, name: str, v: float, **labels):
+        self.metrics.histogram("planserver." + name, **labels).observe(v)
+
+    def _set_gauges(self):
+        self.metrics.gauge("planserver.queue_depth").set(self._queue_depth)
+        self.metrics.gauge("planserver.inflight").set(self._inflight)
+
+    def _request_done(self, h: PlanHandle, latency: bool = True):
+        """Per-request bookkeeping after a taken handle resolves (or is
+        dropped): inflight gauge, per-source latency histogram, and — when
+        global tracing is on — the request's queue→solve async spans."""
+        with self._cond:
+            self._inflight -= 1
+            self._set_gauges()
+        if latency and h.t_done is not None and h.source is not None:
+            self._observe("latency_s", h.latency_s, source=h.source)
+            self._observe("latency_s", h.latency_s, source="all")
+        if _OBS_ON.on and h.t_taken is not None and h.t_done is not None:
+            rid = id(h)
+            _otrace.async_span("planserver.queue", rid, h.t_submit,
+                               h.t_taken, cat="planserver",
+                               source=h.source or "?")
+            _otrace.async_span("planserver.solve", rid, h.t_taken, h.t_done,
+                               cat="planserver", source=h.source or "?",
+                               error=h.error)
 
     # -- lifecycle -----------------------------------------------------
     def start(self):
@@ -310,10 +347,13 @@ class PlanServer:
             h.source = "hit"
             h.converged = True          # only converged results are cached
             h.plan = scenario._plan_from_result(m, hit.result)
-            with self._cond:
-                self._counts["hit"] += 1
-                self._counts["submitted"] += 1
+            self._count("submitted")
+            self._count("requests", source="hit")
             h._resolve()
+            self._observe("latency_s", h.latency_s, source="hit")
+            self._observe("latency_s", h.latency_s, source="all")
+            if _OBS_ON.on:
+                _otrace.instant("planserver.hit")
             return h
         near, dist = self.cache.nearest(sig, vec)
         if near is not None and dist <= self.warm_radius:
@@ -323,10 +363,12 @@ class PlanServer:
         with self._cond:
             if self._closing:
                 raise RuntimeError("PlanServer is closed")
-            self._counts["submitted"] += 1
-            self._counts[h.source] += 1
             self._queues.setdefault(sig, collections.deque()).append(h)
+            self._queue_depth += 1
+            self._set_gauges()
             self._cond.notify_all()
+        self._count("submitted")
+        self._count("requests", source=h.source)
         return h
 
     def solve(self, scenario, m=None, timeout: Optional[float] = None):
@@ -357,10 +399,15 @@ class PlanServer:
         batch: List[PlanHandle] = []
         while q and len(batch) < self.max_batch:
             h = q.popleft()
+            self._queue_depth -= 1
             if h.cancelled:             # withdrawn while queued: free slot
-                self._counts["cancelled"] += 1
+                self._count("cancelled")
                 continue
+            h.t_taken = now
+            self._observe("queue_wait_s", now - h.t_submit)
             batch.append(h)
+        self._inflight += len(batch)
+        self._set_gauges()
         return batch or None
 
     def _next_deadline(self) -> Optional[float]:
@@ -388,8 +435,10 @@ class PlanServer:
             from ..opt import gia_jax
             key = RefreshPlan.build([batch[0].problem]).signature_key
             self._trace_base[sig] = (key, gia_jax.trace_count(key))
-        self._batch_sizes.append(len(batch))
-        self._solve_rows(batch)
+        self._observe("batch_rows", len(batch))
+        with _otrace.span("planserver.batch", rows=len(batch),
+                          sig="/".join(map(str, sig))[:120]):
+            self._solve_rows(batch)
 
     def _solve_rows(self, rows: List[PlanHandle]):
         """Solve ``rows`` as one fused dispatch, bisecting on failure.
@@ -415,8 +464,7 @@ class PlanServer:
             if len(rows) == 1:
                 self._solve_quarantined(rows[0])
                 return
-            with self._cond:
-                self._counts["bisections"] += 1
+            self._count("bisections")
             mid = len(rows) // 2
             self._solve_rows(rows[:mid])
             self._solve_rows(rows[mid:])
@@ -429,8 +477,7 @@ class PlanServer:
         capped exponential backoff — transient failures (allocator
         pressure under concurrent compiles, cache races) usually clear,
         and the row keeps its own warm seed — then error the handle."""
-        with self._cond:
-            self._counts["quarantined"] += 1
+        self._count("quarantined")
         joint = h.problem.m is Objective.JOINT
         restart = not (joint and h.source == "warm"
                        and not self.restart_warm_joint)
@@ -450,16 +497,17 @@ class PlanServer:
                 continue
             self._finish(h, r, 1)
             return
-        with self._cond:
-            self._counts["poisoned"] += 1
+        self._count("poisoned")
         h.error = f"{type(err).__name__}: {err}"
         h._resolve()
+        self._request_done(h)
 
     def _finish(self, h: PlanHandle, r: GIAResult, batch_size: int):
         """Resolve one solved row: freeze its Plan, record convergence,
         cache the converged result.  A row cancelled mid-solve is already
         resolved with ``error="cancelled"`` — leave it alone."""
         if h.cancelled:
+            self._request_done(h, latency=False)
             return
         try:
             h.plan = h.scenario._plan_from_result(h.m, r)
@@ -467,19 +515,19 @@ class PlanServer:
             # a row whose *plan construction* blows up is as poisonous as
             # one that kills the solver — contain it, don't unwind the
             # dispatcher with sibling rows still unresolved
-            with self._cond:
-                self._counts["poisoned"] += 1
+            self._count("poisoned")
             h.error = f"{type(e).__name__}: {e}"
             h._resolve()
+            self._request_done(h)
             return
         h.batch_size = batch_size
         h.converged = bool(r.converged)
         if r.converged:
             self.cache.put(h.sig, h.fp, _CacheEntry(h.vec, r))
         else:
-            with self._cond:
-                self._counts["non_converged"] += 1
+            self._count("non_converged")
         h._resolve()
+        self._request_done(h)
 
     # -- introspection -------------------------------------------------
     def compile_counts(self) -> Dict[tuple, int]:
@@ -490,23 +538,49 @@ class PlanServer:
                 for sig, (key, base) in self._trace_base.items()}
 
     def stats(self) -> dict:
-        sizes = self._batch_sizes
+        """A view over the server's always-on metrics registry.
+
+        Counter/batch keys are unchanged from the Counter-based
+        implementation; ``queue_depth``/``inflight`` expose the live
+        dispatcher state, and ``queue_wait_s``/``latency_s`` serve the
+        percentile summaries ``benchmarks/serve_bench.py`` used to compute
+        by hand from resolved handles (``latency_s`` is keyed by request
+        source, plus an ``"all"`` aggregate)."""
+        def count(name, **labels):
+            return int(self.metrics.counter("planserver." + name,
+                                            **labels).value)
+
+        submitted = count("submitted")
+        hits = count("requests", source="hit")
+        batch_h = self.metrics.histogram("planserver.batch_rows")
+        lat = {}
+        for src in ("hit", "warm", "cold", "all"):
+            s = self.metrics.histogram("planserver.latency_s",
+                                       source=src).summary()
+            if s["count"]:
+                lat[src] = s
         return {
-            "submitted": self._counts["submitted"],
-            "hits": self._counts["hit"],
-            "warm": self._counts["warm"],
-            "cold": self._counts["cold"],
-            "hit_rate": (self._counts["hit"] / self._counts["submitted"]
-                         if self._counts["submitted"] else 0.0),
-            "batches": len(sizes),
-            "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
-            "cancelled": self._counts["cancelled"],
-            "bisections": self._counts["bisections"],
-            "quarantined": self._counts["quarantined"],
-            "poisoned": self._counts["poisoned"],
-            "non_converged": self._counts["non_converged"],
+            "submitted": submitted,
+            "hits": hits,
+            "warm": count("requests", source="warm"),
+            "cold": count("requests", source="cold"),
+            "hit_rate": hits / submitted if submitted else 0.0,
+            "batches": batch_h.count,
+            "mean_batch": batch_h.mean if batch_h.count else 0.0,
+            "cancelled": count("cancelled"),
+            "bisections": count("bisections"),
+            "quarantined": count("quarantined"),
+            "poisoned": count("poisoned"),
+            "non_converged": count("non_converged"),
             "signatures": len(self._trace_base),
             "cache_entries": len(self.cache),
             "compiles": {"/".join(map(str, sig)): c
                          for sig, c in self.compile_counts().items()},
+            "queue_depth": int(self.metrics.gauge(
+                "planserver.queue_depth").value),
+            "inflight": int(self.metrics.gauge(
+                "planserver.inflight").value),
+            "queue_wait_s": self.metrics.histogram(
+                "planserver.queue_wait_s").summary(),
+            "latency_s": lat,
         }

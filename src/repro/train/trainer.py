@@ -19,6 +19,8 @@ from ..configs.base import ArchConfig
 from ..core.step_rules import StepRule
 from ..fed import sharding as SH
 from ..fed.runtime import FedConfig, make_round_fn
+from ..obs import REGISTRY as _METRICS
+from ..obs.metrics import GLOBAL_SWITCH as _OBS_ON
 from . import checkpoint as CKPT
 
 
@@ -81,6 +83,15 @@ class GenQSGDTrainer:
             from ..faults import FaultDriver, fault_rng  # cycle
             fdrv = FaultDriver(fed.faults, fed.n_workers, fed.agg_weights)
             frng = fault_rng(fed.seed)
+        # round metrics (repro.obs): reads only host-side values the loop
+        # already computes; disabled runs pay one boolean check per round
+        obs_on = _OBS_ON.on
+        if obs_on:
+            _round_h = _METRICS.histogram("run.round_s", backend="spmd")
+            _htvar_h = _METRICS.histogram("run.ht_weight_var", backend="spmd")
+            _bits_c = _METRICS.counter("run.wire_bits", backend="spmd",
+                                       codec=fed.wire)
+            _rounds_c = _METRICS.counter("run.rounds", backend="spmd")
         for r in range(state.round, state.round + n_rounds):
             key, rkey = jax.random.split(key)
             batch = next(batches)
@@ -108,6 +119,19 @@ class GenQSGDTrainer:
             else:
                 state.params, metrics = self._round(
                     state.params, batch, rkey, jnp.float32(gammas[r]))
+            if obs_on:
+                # async dispatch: host loop time per round, never an added
+                # block_until_ready (observing must not serialize the mesh)
+                _round_h.observe(time.time() - t0)
+                _rounds_c.inc()
+                _bits_c.inc(comm_mbits * 1e6)
+                if u is not None:
+                    # plain-python variance (see genqsgd.run): keeps the
+                    # per-round observability cost off the ufunc path
+                    _ul = u.tolist()
+                    _mu = sum(_ul) / len(_ul)
+                    _htvar_h.observe(
+                        sum((v - _mu) ** 2 for v in _ul) / len(_ul))
             if r % log_every == 0 or r == state.round + n_rounds - 1:
                 rec = {"round": r, "gamma": float(gammas[r]),
                        "loss": float(metrics["loss"]),

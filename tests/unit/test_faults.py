@@ -407,3 +407,95 @@ def test_fed_config_faults_wire_compat():
     with pytest.raises(ValueError, match="fault"):
         FedConfig(n_workers=N, Kn=(1,) * N, s0=3, sn=3, wire="int8",
                   faults=spec)            # non-bucketed: inside shard_map
+
+
+# ---------------------------------------------------------------------------
+# adaptive deadline: EMA-tracked tau (frozen stays the default)
+# ---------------------------------------------------------------------------
+ADAPTIVE = edge_faults(straggler_prob=0.3, straggler_factor=4.0,
+                       crash_prob=0.1, crash_rounds=2, corrupt_prob=0.05,
+                       deadline_slack=1.5, deadline="adaptive",
+                       ema_alpha=0.3)
+
+
+def test_adaptive_default_frozen_and_signature_invariant():
+    assert edge_faults(deadline_slack=1.5).deadline == "frozen"
+    # deadline mode is a runtime aggregation policy, not GP structure:
+    # adaptive and frozen models share the structure signature (and hence
+    # PlanServer batching pools and fused-engine executables)
+    assert ADAPTIVE.signature(N) == FAULTY.signature(N)
+
+
+def test_adaptive_round0_is_frozen_tau_bitwise():
+    # the EMA is seeded at the plan's predicted round time, so the first
+    # adaptive tau IS the frozen tau and round 0 is bitwise identical
+    d_frozen = FaultDriver(_spec(FAULTY), N)
+    d_adapt = FaultDriver(_spec(ADAPTIVE), N)
+    u_f = d_frozen.step(fault_rng(0), 0)
+    u_a = d_adapt.step(fault_rng(0), 0)
+    assert d_adapt.records[0].deadline == d_frozen.records[0].deadline
+    assert d_adapt.records[0] == d_frozen.records[0]
+    assert np.array_equal(u_a, u_f)
+
+
+def test_adaptive_tau_replays_censored_ema():
+    # heterogeneous fleet; spec deadline = slack x predicted round time
+    wt = np.array([0.5, 0.8, 1.0, 2.0])
+    slack = ADAPTIVE.deadline_slack
+    deadline = slack * float(wt.max())
+    spec = FaultSpec(model=ADAPTIVE, worker_times=tuple(wt),
+                     deadline=float(deadline),
+                     deliver_p=tuple(ADAPTIVE.deliver_prob(wt, deadline)))
+    drv = FaultDriver(spec, N)
+    rng = fault_rng(123)
+    for k in range(60):
+        drv.step(rng, k)
+    # replay the EMA by hand: tau_k = max(slack * ema_{k-1}, max_n t_n),
+    # ema updated with the *censored* realized time (t_round <= tau_k)
+    tau_floor = float(wt.max())
+    ema = deadline / slack
+    taus = set()
+    for rec in drv.records:
+        assert rec.deadline == max(slack * ema, tau_floor)   # exact floats
+        assert rec.deadline >= tau_floor
+        assert rec.t_round <= rec.deadline
+        ema += ADAPTIVE.ema_alpha * (rec.t_round - ema)
+        taus.add(rec.deadline)
+    assert len(taus) > 5                  # tau genuinely tracks the regime
+
+
+def test_adaptive_trace_deterministic_and_seed_sensitive():
+    spec = _spec(ADAPTIVE)
+
+    def trace(seed):
+        drv = FaultDriver(spec, N)
+        rng = fault_rng(seed)
+        for k in range(40):
+            drv.step(rng, k)
+        return drv.trace()
+
+    assert trace(5) == trace(5)
+    assert trace(5) != trace(6)
+
+
+def test_adaptive_scenario_run_varies_tau_frozen_does_not():
+    task = QuadraticTask(dim=16)
+    scn_a = _scenario("C", faults=ADAPTIVE)
+    rep_a = scn_a.run(scn_a.optimize(), task=task, seed=7, max_rounds=25)
+    assert len({r.deadline for r in rep_a.fault_trace.records}) > 1
+    scn_f = _scenario("C", faults=FAULTY)
+    rep_f = scn_f.run(scn_f.optimize(), task=task, seed=7, max_rounds=25)
+    assert len({r.deadline for r in rep_f.fault_trace.records}) == 1
+
+
+def test_adaptive_validation_errors():
+    with pytest.raises(ValueError, match="'frozen' or 'adaptive'"):
+        edge_faults(deadline="bogus").validate(N)
+    with pytest.raises(ValueError, match="finite deadline_slack"):
+        edge_faults(deadline="adaptive").validate(N)
+    with pytest.raises(ValueError, match="ema_alpha"):
+        edge_faults(deadline="adaptive", deadline_slack=1.5,
+                    ema_alpha=0.0).validate(N)
+    with pytest.raises(ValueError, match="ema_alpha"):
+        edge_faults(deadline="adaptive", deadline_slack=1.5,
+                    ema_alpha=1.5).validate(N)
